@@ -1,0 +1,96 @@
+"""Figures 6-11: application benchmarks across the four scenarios, with
+per-component energy breakdowns (Figs 8, 10) and the image-combiner
+escalation experiment (§7.3)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import workloads as W
+from benchmarks.harness import SCENARIOS, controller_for, measure
+from repro.core import ExecutionController, Policy
+
+
+def _apps():
+    det = W.face_detection_method()
+    scan = W.virus_scan_method()
+    nq = W.nqueens_method(8)
+    rng = np.random.default_rng(0)
+    imgs = jnp.asarray(rng.normal(size=(32, 64, 64)), jnp.float32)
+    files = jnp.asarray(rng.integers(0, 256, (64, 1024)), jnp.int32)
+    puz = jnp.asarray([
+        [5, 3, 0, 0, 7, 0, 0, 0, 0], [6, 0, 0, 1, 9, 5, 0, 0, 0],
+        [0, 9, 8, 0, 0, 0, 0, 6, 0], [8, 0, 0, 0, 6, 0, 0, 0, 3],
+        [4, 0, 0, 8, 0, 3, 0, 0, 1], [7, 0, 0, 0, 2, 0, 0, 0, 6],
+        [0, 6, 0, 0, 0, 0, 2, 8, 0], [0, 0, 0, 4, 1, 9, 0, 0, 5],
+        [0, 0, 0, 0, 8, 0, 0, 7, 9]])
+    from repro.core import RemoteableMethod
+    sud = RemoteableMethod("sudoku", W.sudoku, size_fn=lambda p: p.size)
+    return [
+        ("sudoku", sud, (puz,)),                       # Fig 6
+        ("nqueens_8", nq, (0, 8 ** 8)),                # Fig 7
+        ("face_detection_32", det, (imgs,)),           # Fig 9
+        ("virus_scan", scan, (files,)),                # Fig 11
+    ]
+
+
+def run_apps() -> Tuple[List[str], List[Tuple[str, float, str]]]:
+    lines = [f"{'app':18s} {'scenario':14s} {'time_s':>10s} "
+             f"{'energy_J':>10s} {'overhead_s':>10s}"]
+    csv = []
+    breakdowns = []
+    for name, rm, args in _apps():
+        t0 = time.perf_counter()
+        results = {}
+        for scen in SCENARIOS:
+            ec = controller_for(scen)
+            m = measure(ec, rm, *args, scenario=scen)
+            results[scen] = m
+            lines.append(f"{name:18s} {scen:14s} {m['time_s']:>10.3f} "
+                         f"{m['energy_j']:>10.3f} {m['overhead_s']:>10.3f}")
+            if name in ("nqueens_8", "face_detection_32"):
+                comp = " ".join(f"{k}={v:.3f}"
+                                for k, v in m["energy_components"].items()
+                                if v > 1e-6)
+                breakdowns.append(f"  [{name} @ {scen}] {comp}")
+        us = (time.perf_counter() - t0) * 1e6
+        speedup = results["phone"]["time_s"] / results["wifi-local"]["time_s"]
+        esave = results["phone"]["energy_j"] / max(
+            results["wifi-local"]["energy_j"], 1e-9)
+        csv.append((f"apps/{name}", us,
+                    f"speedup_wifi={speedup:.1f}x;energy_save={esave:.1f}x"))
+    lines.append("")
+    lines.append("Energy breakdown by component (Figures 8, 10):")
+    lines.extend(breakdowns)
+    return lines, csv
+
+
+def run_escalation() -> Tuple[List[str], List[Tuple[str, float, str]]]:
+    """Image combiner (§7.3): OutOfMemory-driven clone escalation."""
+    rm = W.image_combiner_method()
+    lines = ["image-combiner escalation (paper §7.3):"]
+    csv = []
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(1)
+    for side in (256, 1024, 2048, 4096):
+        a = jnp.asarray(rng.normal(size=(side, side)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(side, side)), jnp.float32)
+        ec = ExecutionController(policy=Policy.EXEC_TIME)
+        res = ec.execute(rm, a, b, force="remote")
+        lines.append(f"  {side}x{side}+{side}x{side}: venue={res.venue} "
+                     f"escalations={res.escalations} time={res.time_s:.3f}s")
+        csv.append((f"escalation/{side}", (time.perf_counter() - t0) * 1e6,
+                    f"venue={res.venue};escalations={res.escalations}"))
+    # the phone cannot run the big combine at all (paper: OutOfMemoryError)
+    side = 4096
+    a = jnp.ones((side, side), jnp.float32)
+    need = rm.mem_fn(a, a)
+    from repro.core.venues import make_phone
+    lines.append(f"  phone heap {make_phone().mem_bytes >> 20}MB vs working "
+                 f"set {need >> 20}MB -> phone execution impossible, "
+                 f"cloud escalation required")
+    return lines, csv

@@ -1,0 +1,82 @@
+"""Benchmark runner: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (plus readable tables to
+benchmarks/results/).  Sections:
+  Table 3  -> biv_micro          Table 4  -> biv_realistic
+  Figs 6-11 -> apps (+ energy breakdowns Figs 8,10) + escalation
+  Figs 12-14 -> parallel         §5.3     -> vm_states
+  deliverable (g) -> roofline (from dry-run artifacts, if present)
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _section(title, lines, out_name):
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, out_name), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"# --- {title} (full table: benchmarks/results/{out_name}) ---",
+          flush=True)
+
+
+def main() -> None:
+    from benchmarks import applications, biv_tables, parallel_clones
+
+    all_csv = []
+
+    lines, csv = biv_tables.run_micro()
+    _section("Table 3: micro-benchmark BIVs", lines, "table3_biv_micro.txt")
+    all_csv += csv
+
+    lines, csv = biv_tables.run_realistic()
+    _section("Table 4: realistic-benchmark BIVs", lines,
+             "table4_biv_realistic.txt")
+    all_csv += csv
+
+    lines, csv = applications.run_apps()
+    _section("Figures 6-11: applications", lines, "figs6_11_apps.txt")
+    all_csv += csv
+
+    lines, csv = applications.run_escalation()
+    _section("§7.3: image-combiner escalation", lines, "escalation.txt")
+    all_csv += csv
+
+    lines, csv = parallel_clones.run_parallel()
+    _section("Figures 12-14: multi-clone parallelization", lines,
+             "figs12_14_parallel.txt")
+    all_csv += csv
+
+    lines, csv = parallel_clones.run_vm_states()
+    _section("§5.3: VM states", lines, "vm_states.txt")
+    all_csv += csv
+
+    # roofline (deliverable g) — reads dry-run artifacts if present
+    try:
+        from repro.launch import roofline
+        tbl = ""
+        for tag in ("opt", "base", ""):
+            tbl = roofline.table(tag=tag)
+            if tbl.count("\n") > 2:
+                break
+        if tbl.count("\n") > 2:
+            _section(f"Roofline (from dry-run, tag={tag or 'untagged'})",
+                     tbl.splitlines(), "roofline.txt")
+            rows = [r for r in tbl.splitlines()[2:] if r and "skip" not in r]
+            all_csv.append(("roofline/cells", 0.0, f"n={len(rows)}"))
+    except Exception as e:                                   # noqa: BLE001
+        print(f"# roofline skipped: {e}")
+
+    print("name,us_per_call,derived")
+    for name, us, derived in all_csv:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,333 @@
+"""JAX implementations of the paper's benchmark programs (§7).
+
+Micro-benchmarks (Great Computer Language Shootout, Table 3), realistic
+benchmarks (Computer Language Benchmark Game, Table 4), and the five
+application benchmarks (§7.3).  Each is registered as a RemoteableMethod
+with the same asymptotic complexity as the original; Java-object-oriented
+micro-benchmarks (methcall/objinst/binarytrees) map to JAX analogues of the
+same complexity (noted inline).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import RemoteableMethod, split_batch
+
+
+# --------------------------------------------------------------------------- #
+# helpers
+# --------------------------------------------------------------------------- #
+def _work_loop(iters, size=64):
+    """Compute-bound inner loop: iters fused matvec steps."""
+    x = jnp.full((size,), 0.5)
+    m = jnp.eye(size) * 0.99 + 0.01
+
+    def body(i, acc):
+        return jnp.tanh(m @ acc + 1e-6 * i)
+
+    return jax.lax.fori_loop(0, iters, body, x).sum()
+
+
+# --------------------------------------------------------------------------- #
+# Table 3 micro-benchmarks (complexity-faithful)
+# --------------------------------------------------------------------------- #
+def fibonacci(n):
+    """O(2^n): cost of the naive recursion, evaluated iteratively."""
+    iters = jnp.asarray(1.618 ** jnp.clip(n, 0, 30), jnp.int32)
+    return _work_loop(iters)
+
+
+def hash_bench(n):
+    """O(n^2 log n): repeated sorting of n keys, n times."""
+    keys = (jnp.arange(n) * 1103515245 % 2 ** 16).astype(jnp.int32)
+
+    def body(i, acc):
+        return jnp.sort(acc + i)
+
+    return jax.lax.fori_loop(0, n, body, keys).sum()
+
+
+def hash2(n):
+    """O(n log n): one sort of n keys."""
+    keys = (jnp.arange(n * 100) * 1103515245 % 2 ** 16).astype(jnp.int32)
+    return jnp.sort(keys)[-1]
+
+
+def matrix(n):
+    """O(n): chain of fixed-size matmuls, n links."""
+    return _work_loop(n, size=30)
+
+
+def methcall(n):
+    """O(n): n dependent scalar ops (dynamic-dispatch analogue)."""
+    return _work_loop(n, size=8)
+
+
+def nestedloop(n):
+    """O(n^6): six nested loops of range n."""
+    iters = jnp.asarray(jnp.clip(n, 0, 12) ** 6, jnp.int32)
+    return _work_loop(iters, size=8)
+
+
+def objinst(n):
+    """O(n): n small allocations+init (object instantiation analogue)."""
+    return _work_loop(n, size=8)
+
+
+def sieve(n):
+    """O(n): sieve of Eratosthenes over n*1000 integers (vectorized)."""
+    m = n * 1000
+    nums = jnp.arange(2, m + 2)
+    is_prime = jnp.ones_like(nums, dtype=bool)
+    for p in (2, 3, 5, 7, 11, 13):
+        is_prime &= (nums <= p) | (nums % p != 0)
+    return is_prime.sum()
+
+
+# --------------------------------------------------------------------------- #
+# Table 4 realistic benchmarks
+# --------------------------------------------------------------------------- #
+def binarytrees(n):
+    """O(2^n) allocations: tree build/teardown analogue."""
+    iters = jnp.asarray(2 ** jnp.clip(n, 0, 22), jnp.int32)
+    return _work_loop(iters, size=8)
+
+
+def knucleotide(n):
+    """k-mer counting over a 4-letter sequence of length n*10000."""
+    m = n * 10_000
+    seq = (jnp.arange(m) * 1103515245 % 4).astype(jnp.int32)
+    k4 = seq[:-3] * 64 + seq[1:-2] * 16 + seq[2:-1] * 4 + seq[3:]
+    counts = jnp.zeros((256,), jnp.int32).at[k4].add(1)
+    return counts.max()
+
+
+def mandelbrot(n):
+    """Mandelbrot escape iteration on an (n x n) grid."""
+    xs = jnp.linspace(-2.0, 0.5, n)
+    ys = jnp.linspace(-1.25, 1.25, n)
+    c = xs[None, :] + 1j * ys[:, None]
+
+    def body(i, zk):
+        z, k = zk
+        z = z * z + c
+        k = k + (jnp.abs(z) < 2.0)
+        return z, k
+
+    _, k = jax.lax.fori_loop(0, 50, body,
+                             (jnp.zeros_like(c), jnp.zeros(c.shape,
+                                                           jnp.int32)))
+    return k.sum()
+
+
+def nbody(n):
+    """n simulation steps of a 16-body system."""
+    pos = jnp.stack([jnp.sin(jnp.arange(16.0)), jnp.cos(jnp.arange(16.0)),
+                     jnp.sin(jnp.arange(16.0) * 2)], 1)
+    vel = jnp.zeros_like(pos)
+
+    def step(i, pv):
+        p, v = pv
+        d = p[:, None] - p[None, :]
+        r2 = (d ** 2).sum(-1) + 1e-3
+        f = (d / (r2 ** 1.5)[..., None]).sum(1)
+        v = v - 0.001 * f
+        return p + 0.001 * v, v
+
+    p, v = jax.lax.fori_loop(0, n, step, (pos, vel))
+    return (p ** 2).sum()
+
+
+def spectralnorm(n):
+    """Power iteration on the (n x n) infinite-matrix A of the benchmark."""
+    i = jnp.arange(n, dtype=jnp.float32)
+    a = 1.0 / ((i[:, None] + i[None, :]) * (i[:, None] + i[None, :] + 1) / 2
+               + i[:, None] + 1)
+    u = jnp.ones((n,))
+    for _ in range(10):
+        v = a.T @ (a @ u)
+        u = v / jnp.linalg.norm(v)
+    return jnp.sqrt(u @ (a.T @ (a @ u)) / (u @ u))
+
+
+# --------------------------------------------------------------------------- #
+# Application benchmarks (§7.3)
+# --------------------------------------------------------------------------- #
+def nqueens(n, lo, hi):
+    """Count N-queens solutions over candidate range [lo, hi).
+
+    The paper's reduced brute force (one queen per column, n^n candidates);
+    the range split across clones mirrors 'allocating different regions of
+    the board to different clones'.
+    """
+    chunk = 1 << 14
+    count = jnp.zeros((), jnp.int32)
+    lo_i, hi_i = int(lo), int(hi)
+    n_chunks = max(1, -(-(hi_i - lo_i) // chunk))
+
+    def body(ci, acc):
+        idx = lo_i + ci * chunk + jnp.arange(chunk)
+        valid = idx < hi_i
+        d = (idx[:, None] // (n ** jnp.arange(n))) % n     # (C, n) rows
+        ok = jnp.ones(idx.shape[0], bool)
+        for i in range(n):
+            for j in range(i + 1, n):
+                ok &= (d[:, i] != d[:, j]) & \
+                    (jnp.abs(d[:, i] - d[:, j]) != (j - i))
+        return acc + jnp.sum(ok & valid)
+
+    return jax.lax.fori_loop(0, n_chunks, body, count)
+
+
+def sudoku(puzzle):
+    """Constraint-propagation solver (singles elimination to fixpoint)."""
+    grid = puzzle.astype(jnp.int32)                 # (9,9), 0 = empty
+    rows, cols = jnp.arange(9), jnp.arange(9)
+    boxes = (rows[:, None] // 3) * 3 + cols[None, :] // 3
+
+    def allowed_mask(g):
+        onehot = jax.nn.one_hot(g, 10, dtype=jnp.int32)[..., 1:]  # (9,9,9)
+        row_used = onehot.sum(1)                    # (9, 9digits)
+        col_used = onehot.sum(0)
+        box_used = jnp.zeros((9, 9), jnp.int32).at[boxes.reshape(-1)].add(
+            onehot.reshape(81, 9))
+        cand = (row_used[:, None, :] == 0) & (col_used[None, :, :] == 0) \
+            & (box_used[boxes] == 0)
+        return cand & (g[..., None] == 0)
+
+    def step(i, g):
+        cand = allowed_mask(g)
+        n_cand = cand.sum(-1)
+        single = (n_cand == 1) & (g == 0)
+        digit = cand.argmax(-1) + 1
+        return jnp.where(single, digit, g)
+
+    solved = jax.lax.fori_loop(0, 64, step, grid)
+    return solved, (solved > 0).all()
+
+
+def make_face_detector(key=None):
+    """Tiny convnet 'face detector': returns (params, fn(images)->counts)."""
+    key = key or jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    w1 = jax.random.normal(k1, (3, 3, 1, 8)) * 0.3
+    w2 = jax.random.normal(k2, (3, 3, 8, 1)) * 0.3
+
+    def detect(images):                              # (N, 64, 64)
+        x = images[..., None]
+        x = jax.lax.conv_general_dilated(x, w1, (1, 1), "SAME",
+                                         dimension_numbers=("NHWC", "HWIO",
+                                                            "NHWC"))
+        x = jax.nn.relu(x)
+        x = jax.lax.conv_general_dilated(x, w2, (2, 2), "SAME",
+                                         dimension_numbers=("NHWC", "HWIO",
+                                                            "NHWC"))
+        heat = jax.nn.sigmoid(x[..., 0])
+        return (heat > 0.7).sum(axis=(1, 2))         # per-image "faces"
+
+    return detect
+
+
+def make_virus_scanner(n_sigs=64, sig_len=8):
+    """Multi-pattern scanner: count signature hits across files."""
+    rng = np.random.default_rng(0)
+    sigs = jnp.asarray(rng.integers(0, 256, (n_sigs, sig_len)), jnp.int32)
+
+    def scan(files):                                 # (n_files, file_len)
+        def scan_one(fbytes):
+            win = jnp.stack([fbytes[i:i + fbytes.shape[0] - sig_len + 1]
+                             for i in range(sig_len)], -1)   # (P, L)
+            eq = (win[:, None, :] == sigs[None, :, :]).all(-1)
+            return eq.sum()
+
+        return jax.lax.map(scan_one, files).sum()
+
+    return scan
+
+
+def image_combiner(img1, img2):
+    """Paper §7.3: naive side-by-side combine (big allocation)."""
+    h = max(img1.shape[0], img2.shape[0])
+    w = img1.shape[1] + img2.shape[1]
+    canvas = jnp.zeros((h, w), img1.dtype)
+    canvas = canvas.at[:img1.shape[0], :img1.shape[1]].set(img1)
+    canvas = canvas.at[:img2.shape[0], img1.shape[1]:].set(img2)
+    return canvas
+
+
+# --------------------------------------------------------------------------- #
+# RemoteableMethod registry for the benchmarks
+# --------------------------------------------------------------------------- #
+def micro_methods():
+    mk = lambda name, fn: RemoteableMethod(name, fn, size_fn=lambda n: n,
+                                           static_args=(0,))
+    return {
+        "fibonacci": mk("fibonacci", fibonacci),
+        "hash": mk("hash", hash_bench),
+        "hash2": mk("hash2", hash2),
+        "matrix": mk("matrix", matrix),
+        "methcall": mk("methcall", methcall),
+        "nestedloop": mk("nestedloop", nestedloop),
+        "objinst": mk("objinst", objinst),
+        "sieve": mk("sieve", sieve),
+    }
+
+
+MICRO_COMPLEXITY = {
+    "fibonacci": "O(2^n)", "hash": "O(n^2 log n)", "hash2": "O(n log n)",
+    "matrix": "O(n)", "methcall": "O(n)", "nestedloop": "O(n^6)",
+    "objinst": "O(n)", "sieve": "O(n)",
+}
+
+
+def realistic_methods():
+    mk = lambda name, fn: RemoteableMethod(name, fn, size_fn=lambda n: n,
+                                           static_args=(0,))
+    return {
+        "binarytrees": mk("binarytrees", binarytrees),
+        "knucleotide": mk("knucleotide", knucleotide),
+        "mandelbrot": mk("mandelbrot", mandelbrot),
+        "nbody": mk("nbody", nbody),
+        "spectralnorm": mk("spectralnorm", spectralnorm),
+    }
+
+
+def nqueens_method(n=8):
+    def fn(lo, hi):
+        return nqueens(n, lo, hi)
+
+    def split(args, k):
+        from repro.core import split_range
+        lo, hi = args
+        return split_range(int(lo), int(hi), k)
+
+    return RemoteableMethod("nqueens", fn, size_fn=lambda lo, hi: hi - lo,
+                            split_fn=split, static_args=(0, 1),
+                            merge_fn=lambda vs: sum(int(v) for v in vs))
+
+
+def face_detection_method():
+    detect = make_face_detector()
+    return RemoteableMethod(
+        "face_detection", detect, size_fn=lambda imgs: imgs.shape[0],
+        split_fn=lambda args, k: split_batch(args, k),
+        merge_fn=lambda vs: np.concatenate([np.asarray(v) for v in vs]))
+
+
+def virus_scan_method():
+    scan = make_virus_scanner()
+    return RemoteableMethod(
+        "virus_scan", scan, size_fn=lambda files: files.size,
+        split_fn=lambda args, k: split_batch(args, k),
+        merge_fn=lambda vs: sum(int(v) for v in vs))
+
+
+def image_combiner_method():
+    return RemoteableMethod(
+        "image_combiner", image_combiner,
+        size_fn=lambda a, b: a.size + b.size,
+        mem_fn=lambda a, b: 4 * max(a.shape[0], b.shape[0])
+        * (a.shape[1] + b.shape[1]) * 16)   # 16x overhead: naive bitmap ops

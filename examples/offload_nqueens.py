@@ -1,0 +1,41 @@
+"""N-queens with multi-clone parallelization (paper §7.4, Figure 12).
+
+    PYTHONPATH=src python examples/offload_nqueens.py [--n 8]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.workloads import nqueens_method          # noqa: E402
+from repro.core import ExecutionController, Policy       # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=8)
+    args = ap.parse_args()
+
+    rm = nqueens_method(args.n)
+    space = args.n ** args.n
+    ec = ExecutionController(policy=Policy.EXEC_TIME, link="wifi-local")
+    ec.pool.provision("main", 10)      # paused secondaries, as in the paper
+
+    local = ec.execute(rm, 0, space, force="local")
+    print(f"phone:        {local.time_s:9.2f}s  {local.energy_j:8.2f}J  "
+          f"solutions={int(local.value)}")
+    for k in (1, 2, 4, 8):
+        r = ec.execute(rm, 0, space, force="remote", n_clones=k)
+        sols = int(r.value) if k == 1 else int(r.value)
+        print(f"cloud k={k}:   {r.time_s:9.2f}s  {r.energy_j:8.2f}J  "
+              f"solutions={sols}  overhead={r.overhead_s:.2f}s")
+    print()
+    print(f"speedup vs phone with 8 clones: "
+          f"{local.time_s / r.time_s:,.0f}x")
+    print("clone pool stats:", ec.pool.stats)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Quickstart: mark a method @remote, let ThinkAir place it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                                                   # noqa: E402
+import jax.numpy as jnp                                      # noqa: E402
+
+from repro.core import (ExecutionController, Policy, remote,  # noqa: E402
+                        set_default_controller)
+
+# 1. Create a controller (the phone-side Execution Controller) and make it
+#    ambient, like the paper's per-thread controller.
+ec = ExecutionController(policy=Policy.EXEC_TIME_AND_ENERGY,
+                         link="wifi-local")
+set_default_controller(ec)
+
+
+# 2. Annotate offloadable methods (the paper's @Remote + Remoteable class).
+@remote(size=lambda n: n)
+def heavy_compute(n):
+    """Compute-bound: candidate for offloading."""
+    x = jnp.eye(128) * 0.99
+
+    def body(i, acc):
+        return jnp.tanh(acc @ x)
+
+    return jax.lax.fori_loop(0, n * 100, body, jnp.ones((128, 128))).sum()
+
+
+@remote(size=lambda x: x.size)
+def light_compute(x):
+    """Trivial: offloading would only pay the network tax."""
+    return (x + 1).sum()
+
+
+def main() -> None:
+    print("policy:", ec.policy.value, "| link:", ec.network.active)
+    print()
+    # first encounters: environment-only decision; later: history-driven
+    for i in range(3):
+        r = ec.execute(heavy_compute.remoteable, 50)
+        print(f"heavy_compute run {i}: offloaded={r.offloaded:d} "
+              f"venue={r.venue:8s} time={r.time_s:7.3f}s "
+              f"energy={r.energy_j:6.2f}J")
+    for i in range(3):
+        r = ec.execute(light_compute.remoteable, jnp.ones((8, 8)))
+        print(f"light_compute run {i}: offloaded={r.offloaded:d} "
+              f"venue={r.venue:8s} time={r.time_s:7.3f}s "
+              f"energy={r.energy_j:6.2f}J")
+    print()
+    print("decisions:", ec.decisions)
+    print("clone pool:", ec.pool.stats)
+    # switching to a bad link flips the decision (paper §4.3)
+    ec.set_link("3g")
+    r = ec.execute(light_compute.remoteable, jnp.ones((8, 8)))
+    print(f"after 3G switch: light_compute offloaded={r.offloaded}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""ThinkAir core: profile-driven computation offloading for JAX workloads."""
+from repro.core.clones import (CLONE_TYPES, Clone, ClonePool, CloneState,
+                               resume_time)
+from repro.core.controller import ExecutionController, ExecutionResult
+from repro.core.energy import (PhoneState, PowerTutorModel, TpuCoeffs,
+                               TpuEnergyModel)
+from repro.core.faults import FaultPlan, ReconnectManager, VenueFailure
+from repro.core.parallel import (ParallelResult, Parallelizer, split_batch,
+                                 split_range)
+from repro.core.policy import Policy, Prediction, should_offload
+from repro.core.profilers import (DeviceProfiler, NetworkProfiler,
+                                  ProgramProfiler, size_bucket)
+from repro.core.remoteable import (REGISTRY, RemoteableMethod, remote,
+                                   set_default_controller)
+from repro.core.venues import (LINKS, Venue, VenueSpec, pytree_bytes,
+                               transfer_time)
+
+__all__ = [
+    "CLONE_TYPES", "Clone", "ClonePool", "CloneState", "resume_time",
+    "ExecutionController", "ExecutionResult", "PhoneState",
+    "PowerTutorModel", "TpuCoeffs", "TpuEnergyModel", "FaultPlan",
+    "ReconnectManager", "VenueFailure", "ParallelResult", "Parallelizer",
+    "split_batch", "split_range", "Policy", "Prediction", "should_offload",
+    "DeviceProfiler", "NetworkProfiler", "ProgramProfiler", "size_bucket",
+    "REGISTRY", "RemoteableMethod", "remote", "set_default_controller",
+    "LINKS", "Venue", "VenueSpec", "pytree_bytes", "transfer_time",
+]

@@ -1,0 +1,218 @@
+"""Clone pool: the paper's VM manager (§5.3), adapted to TPU meshes.
+
+Paper Table 1 (6 VM types) -> ``CLONE_TYPES``.  Paper VM states
+powered-off / paused / running -> our cold / paused / running, with the TPU
+cost structure (DESIGN.md §2): "boot" is XLA compilation (paper: ~32 s; XLA:
+the same order), "resume" is reloading a cached executable + weights
+(paper: ~300 ms), "running" is a warm executable.  The paper's observed
+resume contention (7 simultaneous resumes -> 6-7 s) is modeled with a linear
+contention factor, calibrated against their numbers.
+
+The pool supports an injected clock so that scheduling behavior is
+deterministic under test; with the default clock it tracks real time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.core.venues import LINKS, VenueSpec, make_cloud_vm, make_tpu_venue
+
+
+class CloneState(enum.Enum):
+    POWERED_OFF = "powered_off"
+    PAUSED = "paused"
+    RUNNING = "running"
+
+
+@dataclasses.dataclass(frozen=True)
+class CloneType:
+    name: str
+    cpus: int
+    mem_mb: int
+    heap_mb: int
+
+    def rank(self) -> int:
+        return self.cpus * self.mem_mb
+
+
+# Paper Table 1, verbatim.
+CLONE_TYPES: Dict[str, CloneType] = {
+    "basic": CloneType("basic", 1, 200, 32),
+    "main": CloneType("main", 1, 512, 100),
+    "large": CloneType("large", 1, 1024, 100),
+    "x2large": CloneType("x2large", 2, 1024, 100),
+    "x4large": CloneType("x4large", 4, 1024, 100),
+    "x8large": CloneType("x8large", 8, 1024, 100),
+}
+
+# Fleet adaptation: TPU sub-mesh clone types (chips per clone).
+TPU_CLONE_TYPES: Dict[str, int] = {
+    "tpu-1": 1, "tpu-4": 4, "tpu-16": 16, "tpu-64": 64,
+    "tpu-pod": 256, "tpu-2pod": 512,
+}
+
+# Transition-cost model, calibrated to the paper's §5.3 measurements.
+RESUME_SECONDS = 0.300            # paused -> running
+BOOT_SECONDS = 32.0               # powered_off -> running (VM boot / XLA jit)
+CONTENTION_FACTOR = 3.3           # k simultaneous resumes: t = R*(1+f*(k-1))
+PAUSE_IDLE_TTL = 30.0             # auto-pause after idle (s)
+OFF_IDLE_TTL = 600.0              # auto-power-off after paused (s)
+
+
+def resume_time(k_simultaneous: int) -> float:
+    """Paper: 1 resume ~300 ms, 7 simultaneous -> 6-7 s (super-linear)."""
+    k = max(1, k_simultaneous)
+    return RESUME_SECONDS * (1.0 + CONTENTION_FACTOR * (k - 1))
+
+
+@dataclasses.dataclass
+class Clone:
+    cid: int
+    ctype: CloneType
+    spec: VenueSpec
+    state: CloneState = CloneState.POWERED_OFF
+    is_primary: bool = False
+    last_used: float = 0.0
+    busy: bool = False
+    executable_cache: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def warm(self) -> bool:
+        return bool(self.executable_cache)
+
+
+class ClonePool:
+    """On-demand allocation of clones (paper §5.3), primary + secondaries."""
+
+    def __init__(self, link_name: str = "wifi-local",
+                 clock: Optional[Callable[[], float]] = None,
+                 max_clones: int = 64, tpu: bool = False):
+        self.clock = clock or time.monotonic
+        self.link = LINKS[link_name]
+        self.max_clones = max_clones
+        self.tpu = tpu
+        self._ids = itertools.count()
+        self.clones: List[Clone] = []
+        self.stats = {"resumes": 0, "boots": 0, "pauses": 0, "offs": 0,
+                      "resume_seconds": 0.0, "boot_seconds": 0.0}
+        # the primary server is always online (paper: "main server")
+        self.primary = self._new_clone("main", primary=True)
+        self.primary.state = CloneState.RUNNING
+
+    # ---------------------------------------------------------------- utils
+    def _make_spec(self, ctype: CloneType) -> VenueSpec:
+        if self.tpu:
+            chips = TPU_CLONE_TYPES.get(f"tpu-{ctype.cpus}", ctype.cpus)
+            return make_tpu_venue(f"tpu-{chips}", chips, self.link)
+        return make_cloud_vm(ctype.name, ctype.cpus, ctype.mem_mb,
+                             ctype.heap_mb, self.link)
+
+    def _new_clone(self, type_name: str, primary: bool = False) -> Clone:
+        ctype = CLONE_TYPES[type_name]
+        clone = Clone(next(self._ids), ctype, self._make_spec(ctype),
+                      is_primary=primary, last_used=self.clock())
+        self.clones.append(clone)
+        return clone
+
+    def running(self) -> List[Clone]:
+        return [c for c in self.clones if c.state is CloneState.RUNNING]
+
+    def provision(self, type_name: str, n: int,
+                  state: CloneState = CloneState.PAUSED) -> List[Clone]:
+        """Pre-create secondaries (paper: 'secondary clones are kept in
+        pause state to minimize the resources allocated')."""
+        out = []
+        for _ in range(n):
+            c = self._new_clone(type_name)
+            c.state = state
+            out.append(c)
+        return out
+
+    # ------------------------------------------------------------- lifecycle
+    def acquire(self, type_name: str = "main", n: int = 1,
+                exclude_primary: bool = False) -> tuple:
+        """Resume/boot n clones of the given type.
+
+        Returns (clones, provisioning_seconds) — the latency cost charged to
+        the request (paper: resume time is part of the execution overhead).
+        """
+        want = CLONE_TYPES[type_name]
+        ready, to_resume, to_boot = [], [], []
+        for c in self.clones:
+            if len(ready) + len(to_resume) + len(to_boot) >= n:
+                break
+            if c.busy or (exclude_primary and c.is_primary):
+                continue
+            if c.ctype.name != type_name:
+                continue
+            if c.state is CloneState.RUNNING:
+                ready.append(c)
+            elif c.state is CloneState.PAUSED:
+                to_resume.append(c)
+            else:
+                to_boot.append(c)
+        while len(ready) + len(to_resume) + len(to_boot) < n:
+            if len(self.clones) >= self.max_clones:
+                raise RuntimeError("clone pool exhausted")
+            to_boot.append(self._new_clone(type_name))
+
+        cost = 0.0
+        if to_resume:
+            dt = resume_time(len(to_resume))
+            cost = max(cost, dt)
+            self.stats["resumes"] += len(to_resume)
+            self.stats["resume_seconds"] += dt
+        if to_boot:
+            cost = max(cost, BOOT_SECONDS)
+            self.stats["boots"] += len(to_boot)
+            self.stats["boot_seconds"] += BOOT_SECONDS
+        now = self.clock()
+        out = ready + to_resume + to_boot
+        for c in out:
+            c.state = CloneState.RUNNING
+            c.busy = True
+            c.last_used = now
+        return out, cost
+
+    def release(self, clones) -> None:
+        now = self.clock()
+        for c in clones:
+            c.busy = False
+            c.last_used = now
+
+    def pause(self, clone: Clone) -> None:
+        if clone.is_primary or clone.state is not CloneState.RUNNING:
+            return
+        clone.state = CloneState.PAUSED
+        self.stats["pauses"] += 1
+
+    def power_off(self, clone: Clone) -> None:
+        if clone.is_primary:
+            return
+        clone.state = CloneState.POWERED_OFF
+        clone.executable_cache.clear()
+        self.stats["offs"] += 1
+
+    def reap_idle(self) -> None:
+        """Paper: the Client Handler pauses/offs idle secondaries."""
+        now = self.clock()
+        for c in self.clones:
+            if c.is_primary or c.busy:
+                continue
+            idle = now - c.last_used
+            if c.state is CloneState.RUNNING and idle > PAUSE_IDLE_TTL:
+                self.pause(c)
+            elif c.state is CloneState.PAUSED and idle > OFF_IDLE_TTL:
+                self.power_off(c)
+
+    # ------------------------------------------------------------ escalation
+    def escalate_type(self, type_name: str) -> Optional[str]:
+        """Next more powerful clone type (paper: OutOfMemoryError handling)."""
+        order = sorted(CLONE_TYPES.values(), key=CloneType.rank)
+        names = [t.name for t in order]
+        i = names.index(type_name)
+        return names[i + 1] if i + 1 < len(names) else None

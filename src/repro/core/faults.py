@@ -1,0 +1,70 @@
+"""Fault injection + fallback semantics (paper §4.4).
+
+"If the connection fails for any reason during remote execution, the
+framework falls back to local execution, discarding any data collected by
+the profiler [for that run]. At the same time, the Execution Controller
+initiates asynchronous reconnection to the server."
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Optional
+
+
+class VenueFailure(RuntimeError):
+    """Raised when a remote venue dies mid-execution."""
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Deterministic fault schedule for tests/benchmarks."""
+    fail_next: int = 0                 # fail the next N remote executions
+    fail_every: Optional[int] = None   # or every k-th execution
+    _count: int = 0
+
+    def check(self) -> bool:
+        """True -> this remote execution should fail."""
+        self._count += 1
+        if self.fail_next > 0:
+            self.fail_next -= 1
+            return True
+        if self.fail_every and self._count % self.fail_every == 0:
+            return True
+        return False
+
+
+class ReconnectManager:
+    """Asynchronous reconnect with capped exponential backoff."""
+
+    def __init__(self, reconnect_fn: Optional[Callable[[], bool]] = None,
+                 base_delay: float = 0.05, max_delay: float = 2.0,
+                 max_attempts: int = 8, synchronous: bool = True):
+        self.reconnect_fn = reconnect_fn or (lambda: True)
+        self.base_delay = base_delay
+        self.max_delay = max_delay
+        self.max_attempts = max_attempts
+        self.synchronous = synchronous
+        self.connected = True
+        self.attempts = 0
+        self._thread: Optional[threading.Thread] = None
+
+    def notify_failure(self) -> None:
+        self.connected = False
+        if self.synchronous:
+            self._run()                      # deterministic under test
+        elif self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(target=self._run, daemon=True)
+            self._thread.start()
+
+    def _run(self) -> None:
+        import time
+        delay = self.base_delay
+        for i in range(self.max_attempts):
+            self.attempts += 1
+            if self.reconnect_fn():
+                self.connected = True
+                return
+            if not self.synchronous:
+                time.sleep(delay)
+            delay = min(delay * 2, self.max_delay)

@@ -1,0 +1,114 @@
+"""Parallelization across clones (paper §7.4) + straggler mitigation.
+
+The primary clone acts as a transparent proxy for k secondaries: shards are
+dispatched, per-shard venue times collected, and the parallel makespan is
+    resume(k) + max_i(shard_i) + sync(k) + merge
+exactly mirroring the paper's accounting ("the resume time is included in
+the overhead time, which in turn is included in the execution time").
+
+Straggler mitigation (fleet requirement, DESIGN.md §8): shards whose venue
+time exceeds ``straggler_factor x median`` are re-dispatched to a spare
+clone; the effective shard time is the better of (original, detect + rerun).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.clones import ClonePool, resume_time
+
+# Per-secondary synchronization cost charged by the primary proxy (paper:
+# "incurring extra synchronization overheads"; calibrated so that 8-queens
+# gains flatten past ~4 clones as in Fig. 12).
+SYNC_SECONDS_PER_CLONE = 0.050
+
+
+@dataclasses.dataclass
+class ParallelResult:
+    value: object
+    makespan_s: float              # resume + max shard + sync + merge
+    shard_times: List[float]
+    resume_s: float
+    sync_s: float
+    redispatches: int
+    n_clones: int
+
+
+def split_batch(args: tuple, k: int, axis: int = 0) -> List[tuple]:
+    """Default splitter: split every array leaf's leading axis into k parts."""
+    import jax
+
+    def split_leaf(leaf):
+        return np.array_split(np.asarray(leaf), k, axis=axis)
+
+    leaves, treedef = jax.tree.flatten(args)
+    parts = [split_leaf(leaf) for leaf in leaves]
+    return [jax.tree.unflatten(treedef, [p[i] for p in parts])
+            for i in range(k)]
+
+
+def split_range(lo: int, hi: int, k: int) -> List[tuple]:
+    """Range splitter (paper: N-queens board regions)."""
+    edges = np.linspace(lo, hi, k + 1).astype(int)
+    return [(int(edges[i]), int(edges[i + 1])) for i in range(k)]
+
+
+class Parallelizer:
+    def __init__(self, pool: ClonePool, straggler_factor: float = 2.0,
+                 sync_seconds: float = SYNC_SECONDS_PER_CLONE):
+        self.pool = pool
+        self.straggler_factor = straggler_factor
+        self.sync_seconds = sync_seconds
+
+    def run(self, fn: Callable, shards: Sequence[tuple], *,
+            clone_type: str = "main",
+            merge: Callable = None,
+            shard_delays: Optional[Sequence[float]] = None,
+            venue_executor: Callable = None) -> ParallelResult:
+        """Execute ``fn(*shard)`` across len(shards) clones.
+
+        ``venue_executor(clone, fn, shard) -> (value, venue_seconds)``
+        defaults to running on the clone's venue spec.  ``shard_delays``
+        injects extra venue-seconds per shard (tests / straggler demos).
+        """
+        k = len(shards)
+        clones, provision_s = self.pool.acquire(clone_type, n=k)
+        if venue_executor is None:
+            from repro.core.venues import Venue
+
+            def venue_executor(clone, f, shard):
+                return Venue(clone.spec).execute(f, *shard)
+
+        values, times = [], []
+        for i, (clone, shard) in enumerate(zip(clones, shards)):
+            val, dt = venue_executor(clone, fn, shard)
+            if shard_delays is not None:
+                dt += shard_delays[i]
+            values.append(val)
+            times.append(dt)
+
+        # ---- straggler detection + re-dispatch ----
+        redispatches = 0
+        med = float(np.median(times))
+        deadline = self.straggler_factor * max(med, 1e-9)
+        for i, t in enumerate(times):
+            if t > deadline and k > 1:
+                spare, spare_cost = self.pool.acquire(clone_type, n=1,
+                                                      exclude_primary=True)
+                val, fresh = venue_executor(spare[0], fn, shards[i])
+                rerun_total = deadline + spare_cost + fresh
+                if rerun_total < t:
+                    values[i] = val
+                    times[i] = rerun_total
+                    redispatches += 1
+                self.pool.release(spare)
+
+        sync_s = self.sync_seconds * max(0, k - 1)
+        makespan = provision_s + max(times) + sync_s
+        merged = merge(values) if merge is not None else values
+        self.pool.release(clones)
+        self.pool.reap_idle()
+        return ParallelResult(merged, makespan, times, provision_s, sync_s,
+                              redispatches, k)

@@ -1,0 +1,32 @@
+"""Offloading policies (paper §4.3): None / ExecutionTime / Energy / Both."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+
+class Policy(enum.Enum):
+    NONE = "none"
+    EXEC_TIME = "exec_time"
+    ENERGY = "energy"
+    EXEC_TIME_AND_ENERGY = "exec_time_and_energy"
+
+
+@dataclasses.dataclass(frozen=True)
+class Prediction:
+    """Predicted cost of one placement choice."""
+    time_s: float
+    energy_j: float
+
+
+def should_offload(policy: Policy, local: Prediction,
+                   remote: Prediction) -> bool:
+    """Paper semantics: offload only if the policy's objective(s) improve."""
+    if policy is Policy.NONE:
+        return False
+    if policy is Policy.EXEC_TIME:
+        return remote.time_s < local.time_s
+    if policy is Policy.ENERGY:
+        return remote.energy_j < local.energy_j
+    return (remote.time_s < local.time_s
+            and remote.energy_j < local.energy_j)

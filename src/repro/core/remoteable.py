@@ -1,0 +1,86 @@
+"""The programmer API (paper §4.1): ``@remote`` marks a method offloadable.
+
+The paper's toolchain (Remoteable base class + @Remote annotation + code
+generator emitting reflection wrappers) collapses, in JAX, to a decorator:
+the wrapped callable is pure, its arguments are pytrees (the serializable
+state), and the generated "localGenerate + controller.execute" indirection is
+the returned wrapper.  ``copyState`` is unnecessary — results are the only
+mutated state and flow back functionally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+
+@dataclasses.dataclass
+class RemoteableMethod:
+    """Registered offloadable method + its ThinkAir metadata."""
+
+    name: str
+    fn: Callable                                   # pure function of pytrees
+    size_fn: Callable[..., float] = None           # input-size proxy
+    split_fn: Optional[Callable] = None            # (args, k) -> [shard_args]
+    merge_fn: Optional[Callable] = None            # [shard_results] -> result
+    mem_fn: Optional[Callable[..., int]] = None    # working-set bytes
+    jit: bool = True
+    static_args: tuple = ()                        # shape-determining args
+    _jitted: Optional[Callable] = None
+
+    def callable(self) -> Callable:
+        if not self.jit:
+            return self.fn
+        if self._jitted is None:
+            self._jitted = jax.jit(self.fn, static_argnums=self.static_args)
+        return self._jitted
+
+    def size_key(self, *args, **kw) -> float:
+        if self.size_fn is not None:
+            return float(self.size_fn(*args, **kw))
+        from repro.core.venues import pytree_bytes
+        return float(pytree_bytes((args, kw)))
+
+    @property
+    def parallelizable(self) -> bool:
+        return self.split_fn is not None and self.merge_fn is not None
+
+
+REGISTRY: Dict[str, RemoteableMethod] = {}
+
+_DEFAULT_CONTROLLER = None
+
+
+def set_default_controller(controller) -> None:
+    global _DEFAULT_CONTROLLER
+    _DEFAULT_CONTROLLER = controller
+
+
+def get_default_controller():
+    return _DEFAULT_CONTROLLER
+
+
+def remote(fn: Callable = None, *, size: Callable = None,
+           split: Callable = None, merge: Callable = None,
+           mem: Callable = None, jit: bool = True, name: str = None):
+    """Decorator: register ``fn`` as remoteable and route calls through the
+    ambient ExecutionController (transparent offloading, paper §4.4)."""
+
+    def wrap(f: Callable):
+        rm = RemoteableMethod(name or f.__name__, f, size_fn=size,
+                              split_fn=split, merge_fn=merge, mem_fn=mem,
+                              jit=jit)
+        REGISTRY[rm.name] = rm
+
+        def wrapper(*args, **kw):
+            ec = get_default_controller()
+            if ec is None:                     # no framework: plain local call
+                return rm.callable()(*args, **kw)
+            return ec.execute(rm, *args, **kw).value
+
+        wrapper.remoteable = rm
+        wrapper.__name__ = rm.name
+        return wrapper
+
+    return wrap(fn) if fn is not None else wrap

@@ -1,0 +1,162 @@
+"""Execution venues: the "phone" (local) and cloud TPU meshes (remote).
+
+A venue is somewhere a remoteable method can run.  On this CPU-only container
+every venue *executes* on the host; venue-relative wall-clock is obtained by
+scaling one real host measurement by the venue's effective-throughput ratio
+(DESIGN.md §2 "Simulation honesty": measured = host wall clock; modeled =
+scaled).  On a real deployment ``host_speedup`` is 1.0 for the venue you are
+on and execution is genuinely remote.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+# ---- hardware constants (TPU v5e, per chip) -------------------------------
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+HBM_BYTES = 16 * 1024 ** 3        # 16 GiB
+ICI_BW = 50e9                     # B/s per link
+DCN_BW = 25e9                     # B/s per host NIC (inter-pod)
+
+# ---- scenario link profiles (paper §7: Phone / WiFi-Local / WiFi-Internet /
+# 3G), with their 2026 fleet analogues --------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LinkProfile:
+    name: str
+    bandwidth: float              # bytes/s
+    rtt: float                    # seconds
+
+LINKS = {
+    # paper-era client links (used by the reproduction benchmarks)
+    "wifi-local": LinkProfile("wifi-local", 6.75e6, 0.005),     # 54 Mbit
+    "wifi-internet": LinkProfile("wifi-internet", 2.5e6, 0.050),
+    "wifi-hotspot": LinkProfile("wifi-hotspot", 2.5e6, 0.200),
+    "3g": LinkProfile("3g", 0.25e6, 0.100),
+    # fleet links (used by the serving/training layer)
+    "ici": LinkProfile("ici", ICI_BW, 1e-6),
+    "dcn": LinkProfile("dcn", DCN_BW, 50e-6),
+}
+
+
+@dataclasses.dataclass
+class VenueSpec:
+    """Static description of a compute venue."""
+
+    name: str
+    chips: int = 1
+    eff_flops: float = 1e9        # sustained useful FLOP/s for our workloads
+    hbm_bytes: int = HBM_BYTES
+    mem_bytes: int = HBM_BYTES    # method working-set budget (OOM escalation)
+    power_idle: float = 60.0      # W
+    power_peak: float = 200.0     # W at full utilization
+    link: LinkProfile = LINKS["wifi-local"]
+
+
+_HOST_EFF_FLOPS: Optional[float] = None
+
+
+def host_eff_flops(refresh: bool = False) -> float:
+    """Calibrate this host's sustained f32 matmul throughput (measured once)."""
+    global _HOST_EFF_FLOPS
+    if _HOST_EFF_FLOPS is not None and not refresh:
+        return _HOST_EFF_FLOPS
+    n = 512
+    import jax.numpy as jnp
+    x = jnp.ones((n, n), jnp.float32)
+    f = jax.jit(lambda a: a @ a)
+    f(x).block_until_ready()
+    t0 = time.perf_counter()
+    reps = 8
+    for _ in range(reps):
+        x = f(x)
+    x.block_until_ready()
+    dt = max(time.perf_counter() - t0, 1e-9)
+    _HOST_EFF_FLOPS = 2 * n ** 3 * reps / dt
+    return _HOST_EFF_FLOPS
+
+
+# ---- venue catalogue --------------------------------------------------------
+# "phone": a 2011-era handset (paper's HTC Dream).  The cloud VM types mirror
+# the paper's Table 1; TPU venues are the fleet adaptation.
+def make_phone() -> VenueSpec:
+    return VenueSpec("phone", chips=1, eff_flops=0.05e9,
+                     mem_bytes=16 * 2 ** 20,       # 16 MB Dalvik heap cap
+                     power_idle=0.0, power_peak=0.0,  # phone energy uses
+                     link=LINKS["wifi-local"])        # the PowerTutor model
+
+
+def make_cloud_vm(name: str, cpus: int, mem_mb: int, heap_mb: int,
+                  link: LinkProfile) -> VenueSpec:
+    return VenueSpec(name, chips=cpus, eff_flops=1.5e9 * cpus,
+                     mem_bytes=heap_mb * 2 ** 20,
+                     hbm_bytes=mem_mb * 2 ** 20,
+                     power_idle=10.0 * cpus, power_peak=35.0 * cpus,
+                     link=link)
+
+
+def make_tpu_venue(name: str, chips: int, link: LinkProfile,
+                   mfu: float = 0.4) -> VenueSpec:
+    return VenueSpec(name, chips=chips,
+                     eff_flops=PEAK_FLOPS_BF16 * mfu * chips,
+                     hbm_bytes=HBM_BYTES * chips,
+                     mem_bytes=HBM_BYTES * chips,
+                     power_idle=70.0 * chips, power_peak=250.0 * chips,
+                     link=link)
+
+
+class Venue:
+    """A live venue: executes jitted callables and reports venue-time.
+
+    ``execute`` returns (result, venue_seconds).  venue_seconds = measured
+    host wall clock x (host_eff / venue_eff) — the simulation-honesty rule.
+    """
+
+    def __init__(self, spec: VenueSpec, clock: Callable[[], float] = None):
+        self.spec = spec
+        self.clock = clock or time.perf_counter
+        self.healthy = True
+
+    def speed_ratio(self) -> float:
+        return host_eff_flops() / self.spec.eff_flops
+
+    def execute(self, fn: Callable, *args, warm: bool = True, **kwargs):
+        """Run fn; returns (result, venue_seconds).
+
+        ``warm=True`` runs once first so XLA compilation (the clone *boot*
+        cost, accounted separately by the ClonePool) doesn't pollute the
+        steady-state execution measurement.
+        """
+        if warm:
+            jax.block_until_ready(fn(*args, **kwargs))
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        out = jax.block_until_ready(out)
+        host_dt = time.perf_counter() - t0
+        return out, host_dt * self.speed_ratio()
+
+    def estimate_time(self, flops: float) -> float:
+        return flops / self.spec.eff_flops
+
+    def fits(self, workset_bytes: int) -> bool:
+        return workset_bytes <= self.spec.mem_bytes
+
+
+def transfer_time(nbytes: int, link: LinkProfile) -> float:
+    return link.rtt + nbytes / link.bandwidth
+
+
+def pytree_bytes(tree) -> int:
+    """Serialized payload size of a pytree (leaf bytes + small per-leaf tax)."""
+    leaves = jax.tree.leaves(tree)
+    total = 0
+    for leaf in leaves:
+        if hasattr(leaf, "nbytes"):
+            total += int(leaf.nbytes)
+        else:
+            total += len(np.asarray(leaf).tobytes())
+    return total + 64 * max(len(leaves), 1)   # framing/metadata overhead

@@ -1,0 +1,58 @@
+"""Gradient compression with error feedback (fleet distributed-opt trick).
+
+int8 quantization with per-tensor scale + error-feedback residuals: the
+cross-replica gradient reduction moves 1 byte/param instead of 4 (or 2),
+cutting the pod-axis collective roofline term ~4x, while error feedback
+keeps convergence (residual carried into the next step).
+
+Used by the manual-collective (shard_map) DP trainer in
+``repro.launch.train``; the GSPMD path keeps XLA's native all-reduce.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum(g: jax.Array, residual: jax.Array, axis_name: str
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback int8 all-reduce over ``axis_name`` (inside shard_map).
+
+    Wire bytes: 1 per element (int8 all-gather) + 4 per shard (scales),
+    vs 4 per element for the fp32 psum it replaces.
+    """
+    v = g.astype(jnp.float32) + residual
+    q, scale = quantize_int8(v)
+    new_residual = v - dequantize_int8(q, scale)
+    # semantics of an int8 ring all-reduce: gather peers' int8 shards +
+    # their scales, sum dequantized
+    qs = jax.lax.all_gather(q, axis_name)            # (k, ...)
+    scales = jax.lax.all_gather(scale, axis_name)    # (k,)
+    summed = jnp.tensordot(scales,
+                           qs.astype(jnp.float32), axes=((0,), (0,)))
+    k = qs.shape[0]
+    return summed / k, new_residual
+
+
+def tree_compressed_pmean(grads, residuals, axis_name: str):
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    out = [compressed_psum(g, r, axis_name) for g, r in zip(flat_g, flat_r)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the workload hot spots (DESIGN.md §6).
+
+Each kernel ships as <name>.py (pl.pallas_call + BlockSpec), with jit'd
+wrappers in ops.py and pure-jnp oracles in ref.py.  On CPU they run in
+interpret mode; on TPU they compile to Mosaic.
+"""

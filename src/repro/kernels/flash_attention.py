@@ -1,0 +1,115 @@
+"""Flash attention Pallas TPU kernel (causal / sliding-window / GQA / softcap).
+
+TPU adaptation (DESIGN.md §6): the GPU flash-attention algorithm is re-tiled
+for the TPU memory hierarchy — (bq x d) query tiles and (bk x d) KV tiles are
+staged HBM->VMEM by BlockSpecs; the (bq x bk) score tile hits the MXU; the
+online-softmax running state (m, l, acc) lives in VMEM scratch that persists
+across the sequential kv grid dimension.  GQA is expressed in the KV index
+map (q-head h reads kv-head h // group), so no KV duplication ever reaches
+VMEM.  Fully-masked kv tiles are skipped with ``pl.when``.
+
+Layout: q (B, Hq, S, D);  k, v (B, Hkv, T, D);  out (B, Hq, S, D).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            softcap: Optional[float], nk: int, bq: int, bk: int,
+            q_len: int, k_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    q_pos = qi * bq + jax.lax.iota(jnp.int32, bq)
+    k_pos = ki * bk + jax.lax.iota(jnp.int32, bk)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # static skip is impossible on a sequential TPU grid; predicate instead
+    block_live = ki >= 0
+    if causal:
+        block_live &= (ki * bk) <= (qi * bq + bq - 1)
+    if window is not None:
+        block_live &= (ki * bk + bk) > (qi * bq - window)
+
+    @pl.when(block_live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)              # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        ok = (k_pos[None, :] < k_len) & (q_pos[:, None] < q_len)
+        if causal:
+            ok &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            ok &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(ok, s, _NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True, window: Optional[int] = None,
+                         softcap: Optional[float] = None, bq: int = 128,
+                         bk: int = 128, q_len: Optional[int] = None,
+                         k_len: Optional[int] = None,
+                         interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, S, D); k, v: (B, Hkv, T, D). S, T must divide bq, bk."""
+    b, hq, s, d = q.shape
+    _, hkv, t, _ = k.shape
+    g = hq // hkv
+    nq, nk = s // bq, t // bk
+    q_len = s if q_len is None else q_len
+    k_len = t if k_len is None else k_len
+    kern = functools.partial(
+        _kernel, scale=d ** -0.5, causal=causal, window=window,
+        softcap=softcap, nk=nk, bq=bq, bk=bk, q_len=q_len, k_len=k_len)
+    return pl.pallas_call(
+        kern,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, qi, ki: (b_, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, qi, ki: (b_, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,106 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Handles layout (models use (B,S,H,D); kernels want (B,H,S,D)), padding to
+block multiples, and the interpret-mode switch: on CPU (this container) the
+kernels execute via ``interpret=True``; on TPU backends they compile to
+Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rglru_scan as _rg
+from repro.kernels import rwkv6_scan as _rw
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None, bq: int = 128,
+                    bk: int = 128, interpret: Optional[bool] = None):
+    """Model-layout wrapper. q: (B,S,Hq,D); k,v: (B,T,Hkv,D) -> (B,S,Hq,D)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    bq = min(bq, max(8, qt.shape[2]))
+    bk = min(bk, max(8, kt.shape[2]))
+    qt, s0 = _pad_to(qt, 2, bq)
+    kt, t0 = _pad_to(kt, 2, bk)
+    vt, _ = _pad_to(vt, 2, bk)
+    out = _fa.flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                                   softcap=softcap, bq=bq, bk=bk, q_len=s0,
+                                   k_len=t0, interpret=interpret)
+    return jnp.swapaxes(out[:, :, :s0], 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "br", "interpret"))
+def rglru_scan(a, b, h0=None, *, bs: int = 256, br: int = 128,
+               interpret: Optional[bool] = None):
+    """a, b: (B,S,R) recurrence coefficients; h0: (B,R) or None.
+
+    Returns (h_seq (B,S,R), h_last (B,R) fp32).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    bsz, s, r = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((bsz, r), jnp.float32)
+    bs = min(bs, s)
+    br = br if r % br == 0 else r
+    a_p, s0 = _pad_to(a, 1, bs)
+    b_p, _ = _pad_to(b, 1, bs)
+    pad = a_p.shape[1] - s0
+    if pad:
+        # padded steps: a=1, b=0 -> state carries through unchanged
+        a_p = a_p.at[:, s0:].set(1.0)
+    y, hn = _rg.rglru_scan_bsr(a_p.astype(jnp.float32),
+                               b_p.astype(jnp.float32),
+                               h0.astype(jnp.float32), bs=bs, br=br,
+                               out_dtype=a.dtype, interpret=interpret)
+    return y[:, :s0], hn
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, w, u, s0=None, *, chunk: int = 128,
+               interpret: Optional[bool] = None):
+    """Model-layout wrapper. r,k,v,w: (B,S,H,N); u: (H,N); s0: (B,H,N,N).
+
+    Returns (y (B,S,H,N), s_final (B,H,N,N) fp32).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    b, s, h, n = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, n, n), jnp.float32)
+    chunk = min(chunk, s)
+    rt, kt, vt, wt = (jnp.swapaxes(x, 1, 2) for x in (r, k, v, w))
+    rt, len0 = _pad_to(rt, 2, chunk)
+    kt, _ = _pad_to(kt, 2, chunk)
+    vt, _ = _pad_to(vt, 2, chunk)
+    # padded steps: w=1 (state unchanged), k=0 (no injection)
+    pad = rt.shape[2] - len0
+    if pad:
+        wt = jnp.concatenate(
+            [wt, jnp.ones((b, h, pad, n), wt.dtype)], axis=2)
+    y, sn = _rw.rwkv6_scan_bhsn(rt, kt, vt, wt, u, s0, chunk=chunk,
+                                interpret=interpret)
+    return jnp.swapaxes(y[:, :, :len0], 1, 2), sn

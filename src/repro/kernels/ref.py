@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets in tests).
+
+These are *independent* straight-line implementations — deliberately naive —
+so that kernel bugs can't hide behind shared code with the model reference
+paths (which are themselves validated against these in tests).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window: Optional[int] = None,
+                        softcap: Optional[float] = None):
+    """q: (B,Hq,S,D); k,v: (B,Hkv,T,D) -> (B,Hq,S,D). Materializes scores."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * (d ** -0.5)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(k.shape[2])[None, :]
+    ok = jnp.ones((s, k.shape[2]), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    scores = jnp.where(ok, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rglru_scan_ref(a, b, h0):
+    """Sequential linear recurrence. a, b: (B,S,R); h0: (B,R) fp32."""
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t.astype(jnp.float32) * h + b_t.astype(jnp.float32)
+        return h, h
+
+    a_t = jnp.moveaxis(a, 1, 0)
+    b_t = jnp.moveaxis(b, 1, 0)
+    h_last, hs = jax.lax.scan(step, h0.astype(jnp.float32), (a_t, b_t))
+    return jnp.moveaxis(hs, 0, 1).astype(a.dtype), h_last
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0):
+    """Sequential WKV. r,k,v,w: (B,H,S,N); u: (H,N); s0: (B,H,N,N) fp32."""
+    f32 = jnp.float32
+
+    def step(s, xs):
+        r_t, k_t, v_t, w_t = (x.astype(f32) for x in xs)   # (B,H,N)
+        bonus = jnp.einsum("bhk,hk,bhk->bh", r_t, u.astype(f32), k_t)
+        y = jnp.einsum("bhk,bhkn->bhn", r_t, s) + bonus[..., None] * v_t
+        s = w_t[..., None] * s + k_t[..., None] * v_t[..., None, :]
+        return s, y
+
+    xs = tuple(jnp.moveaxis(x, 2, 0) for x in (r, k, v, w))
+    s_last, ys = jax.lax.scan(step, s0.astype(f32), xs)
+    return jnp.moveaxis(ys, 0, 2).astype(r.dtype), s_last

@@ -1,0 +1,80 @@
+"""RG-LRU linear-recurrence Pallas TPU kernel.
+
+h_t = a_t * h_{t-1} + b_t   (elementwise over the lru_width channels)
+
+TPU adaptation (DESIGN.md §6): GPU implementations use warp-level scans; on
+TPU we tile channels across the 128-wide lanes (grid dim 1) and stream the
+sequence through VMEM in (bs x br) tiles (grid dim 2, sequential), carrying
+the (br,) state in VMEM scratch across tiles.  Inside a tile the recurrence
+runs as a register-resident ``lax.scan`` over bs steps — each step is one
+fused multiply-add over the lane dimension, which is exactly what the VPU
+wants; HBM traffic is the roofline minimum (each a/b element read once,
+each h written once).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h0_ref, y_ref, hn_ref, h_ref, *, ns: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)        # (bs, br)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    h_last, ys = jax.lax.scan(step, h_ref[...], (a, b))
+    y_ref[0] = ys.astype(y_ref.dtype)
+    h_ref[...] = h_last
+
+    @pl.when(si == ns - 1)
+    def _fin():
+        hn_ref[0] = h_last
+
+
+def rglru_scan_bsr(a: jax.Array, b: jax.Array, h0: jax.Array, *,
+                   bs: int = 256, br: int = 128, out_dtype=None,
+                   interpret: bool = False):
+    """a, b: (B, S, R) fp32 coefficients; h0: (B, R) fp32.
+
+    Returns (h_seq (B,S,R) out_dtype, h_last (B,R) fp32).
+    S % bs == 0 and R % br == 0 are required (ops.py pads).
+    """
+    bsz, s, r = a.shape
+    ns, nr = s // bs, r // br
+    out_dtype = out_dtype or a.dtype
+    kern = functools.partial(_kernel, ns=ns)
+    grid = (bsz, nr, ns)                     # sequence dim last => sequential
+    y, hn = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, br), lambda b_, ri, si: (b_, si, ri)),
+            pl.BlockSpec((1, bs, br), lambda b_, ri, si: (b_, si, ri)),
+            pl.BlockSpec((1, br), lambda b_, ri, si: (b_, ri)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, br), lambda b_, ri, si: (b_, si, ri)),
+            pl.BlockSpec((1, br), lambda b_, ri, si: (b_, ri)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, r), out_dtype),
+            jax.ShapeDtypeStruct((bsz, r), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((br,), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return y, hn

@@ -1,0 +1,85 @@
+"""RWKV-6 WKV recurrence Pallas TPU kernel.
+
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (per head, S in R^{N x N})
+
+TPU adaptation (DESIGN.md §6): the (N x N) per-head state is pinned in VMEM
+scratch for the whole sequence; r/k/v/w stream through VMEM in (C x N) chunk
+tiles over a sequential grid dimension.  Each step inside a chunk is a rank-1
+update + matvec against the resident state — N = 64 maps onto half an MXU
+tile, and the state never round-trips to HBM (the GPU formulation re-loads it
+per thread-block).  A fully-parallel intra-chunk matmul form exists but is
+numerically unstable for unclamped RWKV decays (exp(-cum log w) overflows
+fp32); the state-resident chunked scan below is exact.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sn_ref, s_ref,
+            *, ns: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)      # (C, N)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)         # (N,)
+
+    def step(s, xs):
+        r_t, k_t, v_t, w_t = xs              # (N,)
+        bonus = jnp.sum(r_t * u * k_t)
+        y_t = r_t @ s + bonus * v_t
+        s = w_t[:, None] * s + k_t[:, None] * v_t[None, :]
+        return s, y_t
+
+    s_last, ys = jax.lax.scan(step, s_ref[...], (r, k, v, w))
+    y_ref[0, 0] = ys.astype(y_ref.dtype)
+    s_ref[...] = s_last
+
+    @pl.when(si == ns - 1)
+    def _fin():
+        sn_ref[0, 0] = s_last
+
+
+def rwkv6_scan_bhsn(r, k, v, w, u, s0, *, chunk: int = 128,
+                    interpret: bool = False):
+    """r,k,v,w: (B, H, S, N); u: (H, N); s0: (B, H, N, N) fp32.
+
+    Returns (y (B,H,S,N) r.dtype, s_final (B,H,N,N) fp32). S % chunk == 0.
+    """
+    b, h, s, n = r.shape
+    ns = s // chunk
+    kern = functools.partial(_kernel, ns=ns)
+    grid = (b, h, ns)
+    spec_seq = pl.BlockSpec((1, 1, chunk, n), lambda b_, h_, si: (b_, h_, si, 0))
+    y, sn = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            spec_seq, spec_seq, spec_seq, spec_seq,
+            pl.BlockSpec((1, n), lambda b_, h_, si: (h_, 0)),
+            pl.BlockSpec((1, 1, n, n), lambda b_, h_, si: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            spec_seq,
+            pl.BlockSpec((1, 1, n, n), lambda b_, h_, si: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, n), r.dtype),
+            jax.ShapeDtypeStruct((b, h, n, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, sn

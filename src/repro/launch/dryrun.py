@@ -1,0 +1,248 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --------------------------------------------------------------------------- #
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+# ShapeDtypeStruct inputs (zero allocation), print memory_analysis() and
+# cost_analysis(), parse collective bytes, and write a JSON record per cell.
+#
+# The 512 placeholder host devices exist ONLY here (the two lines above run
+# before any other import, since jax locks the device count on first init).
+# --------------------------------------------------------------------------- #
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (SHAPES, applicability, get_config,  # noqa: E402
+                           get_shape, list_archs)
+from repro.distributed import sharding as shd                  # noqa: E402
+from repro.launch import hlo_analysis, steps                   # noqa: E402
+from repro.launch.inputs import cache_capacity, input_specs    # noqa: E402
+from repro.launch.mesh import make_production_mesh             # noqa: E402
+from repro.models import model                                 # noqa: E402
+from repro.models.context import RunContext                    # noqa: E402
+from repro.optim.adamw import OptConfig                        # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+
+def _ctx_kwargs(args) -> dict:
+    kw = {}
+    if args and getattr(args, "remat", None):
+        kw["remat"] = args.remat
+    if args and getattr(args, "loss_chunk", 0):
+        kw["loss_chunk"] = args.loss_chunk
+    if args and getattr(args, "microbatches", 0):
+        kw["microbatches"] = args.microbatches
+    if args and getattr(args, "profile", None):
+        kw["sharding_profile"] = args.profile
+    return kw
+
+
+def lower_cell(cfg, shape, mesh, ctx):
+    """Build the step fn for this cell and lower it on the mesh."""
+    specs = input_specs(cfg, shape)
+    if shape.kind == "train":
+        step = steps.build_train_step(cfg, OptConfig(), ctx)
+        state_abs = steps.abstract_state(cfg)
+        state_sh = steps.state_shardings(cfg, mesh, ctx.sharding_profile)
+        batch_sh = shd.input_shardings(specs["batch"], mesh,
+                                       shape.global_batch)
+        jf = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, NamedSharding(mesh, P())),
+                     donate_argnums=(0,))
+        return jf.lower(state_abs, specs["batch"])
+    if shape.kind == "prefill":
+        step = steps.build_prefill_step(cfg, ctx)
+        params_abs = model.init_abstract(cfg)
+        params_sh = steps.param_shardings(cfg, mesh, ctx.sharding_profile)
+        batch_sh = shd.input_shardings(specs["batch"], mesh,
+                                       shape.global_batch)
+        cache_sh = steps.cache_shardings(cfg, mesh, shape.global_batch,
+                                         cache_capacity(cfg, shape.seq_len),
+                                         ctx.sharding_profile)
+        logits_sh = NamedSharding(
+            mesh, P(shd.batch_spec(2, mesh)[0]
+                    if shape.global_batch % _dp_size(mesh) == 0 else None,
+                    None))
+        jf = jax.jit(step, in_shardings=(params_sh, batch_sh),
+                     out_shardings=(logits_sh, cache_sh))
+        return jf.lower(params_abs, specs["batch"])
+    # decode
+    step = steps.build_decode_step(cfg, ctx)
+    params_abs = model.init_abstract(cfg)
+    params_sh = steps.param_shardings(cfg, mesh, ctx.sharding_profile)
+    cache_sh = steps.cache_shardings(cfg, mesh, shape.global_batch,
+                                     cache_capacity(cfg, shape.seq_len),
+                                     ctx.sharding_profile)
+    dp_ok = shape.global_batch % _dp_size(mesh) == 0
+    tok_sh = NamedSharding(
+        mesh, P(shd.batch_spec(2, mesh)[0] if dp_ok else None, None))
+    logits_sh = NamedSharding(
+        mesh, P(shd.batch_spec(2, mesh)[0] if dp_ok else None, None))
+    jf = jax.jit(step,
+                 in_shardings=(params_sh, cache_sh, tok_sh,
+                               NamedSharding(mesh, P())),
+                 out_shardings=(logits_sh, cache_sh),
+                 donate_argnums=(1,))
+    return jf.lower(params_abs, specs["cache"], specs["tokens"], specs["pos"])
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a in shd.batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _analysis_cfg(cfg, k: int):
+    """Reduced-depth same-width config: k full pattern groups + same rest."""
+    pat_len = len(cfg.block_pattern)
+    rest = cfg.n_layers % pat_len
+    return dataclasses.replace(cfg, n_layers=k * pat_len + rest)
+
+
+def analyze_cell(arch: str, shape_name: str, multi_pod: bool,
+                 args=None) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "kind": shape.kind}
+    ok, reason = applicability(cfg, shape)
+    if not ok:
+        record.update(status="skip", reason=reason)
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = steps.make_context(mesh, **_ctx_kwargs(args))
+    n_dev = mesh.size
+    pat_len = len(cfg.block_pattern)
+    n_groups = cfg.n_layers // pat_len
+
+    t0 = time.time()
+    lowered = lower_cell(cfg, shape, mesh, ctx)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = hlo_analysis.memory_metrics(compiled)
+    cost = hlo_analysis.cost_metrics(compiled)
+    coll = hlo_analysis.collective_bytes(compiled.as_text())
+
+    # ---- per-group cost via unrolled reduced-depth lowerings --------------
+    # cost_analysis counts while-loop bodies once; lower k=1 and k=2 groups
+    # fully unrolled, then total = outside + n_groups * per_group.
+    corrected = {}
+    if args is not None and getattr(args, "no_analysis", False):
+        record.update(status="ok", n_devices=n_dev,
+                      n_params=model.n_params(cfg),
+                      n_active_params=model.n_active_params(cfg),
+                      lower_seconds=round(t_lower, 2),
+                      compile_seconds=round(t_compile, 2), memory=mem,
+                      fits_hbm=mem["peak_bytes"] <= 16 * 1024 ** 3,
+                      cost_reported=cost, collectives_reported=coll,
+                      corrected={"skipped": True})
+        return record
+    try:
+        ctx_u = dataclasses.replace(ctx, scan_unroll=True)
+        c = {}
+        for k in (1, 2):
+            cfg_k = _analysis_cfg(cfg, k)
+            comp_k = lower_cell(cfg_k, shape, mesh, ctx_u).compile()
+            c[k] = {**hlo_analysis.cost_metrics(comp_k),
+                    "coll": hlo_analysis.collective_bytes(
+                        comp_k.as_text())["total"]}
+        for key in ("flops", "bytes_accessed"):
+            body = c[2][key] - c[1][key]
+            corrected[key] = c[1][key] + (n_groups - 1) * body
+        body_coll = c[2]["coll"] - c[1]["coll"]
+        corrected["collective_bytes"] = c[1]["coll"] + \
+            (n_groups - 1) * body_coll
+        corrected["per_group_flops"] = c[2]["flops"] - c[1]["flops"]
+    except Exception as e:                                   # noqa: BLE001
+        corrected = {"error": f"{type(e).__name__}: {e}"}
+
+    record.update(
+        status="ok",
+        n_devices=n_dev,
+        n_params=model.n_params(cfg),
+        n_active_params=model.n_active_params(cfg),
+        lower_seconds=round(t_lower, 2),
+        compile_seconds=round(t_compile, 2),
+        memory=mem,
+        fits_hbm=mem["peak_bytes"] <= 16 * 1024 ** 3,
+        cost_reported=cost,
+        collectives_reported=coll,
+        corrected=corrected,
+    )
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="full",
+                    choices=["none", "dots", "full"])
+    ap.add_argument("--loss-chunk", type=int, default=0)
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--no-analysis", action="store_true",
+                    help="skip the k=1/k=2 unrolled cost-correction pass")
+    ap.add_argument("--profile", default=None, choices=["tp", "zero-sp", "serve", "legacy"])
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = sorted(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multi_pod]
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                cell = f"{arch}__{shape_name}__{'2x16x16' if mp else '16x16'}"
+                if args.tag:
+                    cell += f"__{args.tag}"
+                try:
+                    rec = analyze_cell(arch, shape_name, mp, args)
+                except Exception:                            # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error",
+                           "error": traceback.format_exc(limit=3)}
+                    failures += 1
+                with open(os.path.join(args.out, cell + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    gib = rec["memory"]["peak_bytes"] / 2 ** 30
+                    extra = (f" peak={gib:.2f}GiB/dev"
+                             f" compile={rec['compile_seconds']}s"
+                             f" flops/dev={rec['corrected'].get('flops', 0):.3e}")
+                    print(f"[{status}] {cell}{extra}")
+                    print("  memory_analysis:", rec["memory"])
+                    print("  cost_analysis:", rec["cost_reported"])
+                elif status == "skip":
+                    print(f"[skip] {cell}: {rec['reason']}")
+                else:
+                    print(f"[ERROR] {cell}\n{rec['error']}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""HLO-level analysis: collective-byte accounting + cost extraction.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+compiled per-device HLO and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device *operand* bytes per collective kind.
+
+    XLA's printer omits operand shapes, so we derive operand size from the
+    RESULT shape + the op semantics (per-shard group size parsed from
+    replica_groups=[n_groups, group_size]):
+      all-gather:      operand = result / group_size
+      reduce-scatter:  operand = result * group_size
+      all-reduce / all-to-all / collective-permute: operand = result
+    Loop bodies are counted once — callers correct trip counts via the
+    unrolled-analysis pass.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        lhs, rhs = line.split("=", 1)
+        m = re.search(r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                      r"collective-permute)(-start)?\(", rhs)
+        if not m:
+            continue
+        kind = m.group(1)
+        # result shape(s): dtype[dims] tokens before the op name
+        head = rhs[:m.start()]
+        result_bytes = sum(_shape_bytes(d, s)
+                           for d, s in _SHAPE_RE.findall(head))
+        gm = _GROUPS_RE.search(rhs)
+        gsize = int(gm.group(2)) if gm else 1
+        if kind == "all-gather":
+            nbytes = result_bytes // max(gsize, 1)
+        elif kind == "reduce-scatter":
+            nbytes = result_bytes * gsize
+        else:
+            nbytes = result_bytes
+        out[kind] += nbytes
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def cost_metrics(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+
+
+def memory_metrics(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    return {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_bytes": int(ma.argument_size_in_bytes
+                          + ma.output_size_in_bytes
+                          + ma.temp_size_in_bytes
+                          - ma.alias_size_in_bytes),
+    }

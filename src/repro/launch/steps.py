@@ -1,0 +1,128 @@
+"""Step functions: train / prefill / decode, plus their sharding trees.
+
+These are the units the multi-pod dry-run lowers and the ThinkAir serving /
+training layers execute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.models import model
+from repro.models.context import RunContext
+from repro.optim import adamw
+
+
+def make_context(mesh: Optional[Mesh], **kw) -> RunContext:
+    if mesh is None:
+        return RunContext(mesh=None, **kw)
+    return RunContext(mesh=mesh, dp_axes=shd.batch_axes(mesh), **kw)
+
+
+# --------------------------------------------------------------------------- #
+# Builders
+# --------------------------------------------------------------------------- #
+def build_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig,
+                     ctx: RunContext):
+    k = max(1, ctx.microbatches)
+
+    def loss_fn(params, batch):
+        return model.forward(cfg, params, batch, ctx, "train")
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
+        if k == 1:
+            (total, metrics), grads = grad_fn(state["params"], batch)
+        else:
+            # gradient accumulation: activation memory / k at equal FLOPs;
+            # the per-microbatch grad reduce-scatter can overlap the next
+            # microbatch's compute (latency-hiding scheduler)
+            mb = jax.tree.map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]),
+                batch)
+            gacc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+
+            def body(carry, mb_i):
+                gacc, tot, met = carry
+                (total_i, metrics_i), g = grad_fn(state["params"], mb_i)
+                gacc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                    gacc, g)
+                met = jax.tree.map(lambda a, b: a + b / k, met, metrics_i)
+                return (gacc, tot + total_i / k, met), None
+
+            met0 = {"loss": jnp.zeros((), jnp.float32),
+                    "aux": jnp.zeros((), jnp.float32)}
+            (grads, total, metrics), _ = jax.lax.scan(
+                body, (gacc0, jnp.zeros((), jnp.float32), met0), mb,
+                unroll=k if ctx.scan_unroll else 1)
+            grads = jax.tree.map(lambda g: g / k, grads)
+        new_params, new_opt, om = adamw.update(opt_cfg, grads, state["opt"],
+                                               state["params"])
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["total"] = total
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, ctx: RunContext,
+                       cache_capacity: int = 0):
+    def prefill_step(params: Dict, batch: Dict):
+        return model.forward(cfg, params, batch, ctx, "prefill",
+                             cache_capacity=cache_capacity)
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig, ctx: RunContext):
+    def decode_step(params: Dict, cache: Dict, tokens: jax.Array,
+                    pos: jax.Array):
+        return model.decode_step(cfg, params, cache, tokens, pos, ctx)
+
+    return decode_step
+
+
+# --------------------------------------------------------------------------- #
+# Abstract state + shardings
+# --------------------------------------------------------------------------- #
+def abstract_state(cfg: ModelConfig):
+    params = model.init_abstract(cfg)
+    opt = jax.eval_shape(adamw.init, params)
+    return {"params": params, "opt": opt}
+
+
+def state_logical_axes(cfg: ModelConfig):
+    axes = model.param_logical_axes(cfg)
+    return {"params": axes,
+            "opt": {"mu": axes, "nu": axes, "step": ()}}
+
+
+def state_shardings(cfg: ModelConfig, mesh: Mesh, profile: str = "tp"):
+    return shd.tree_shardings(abstract_state(cfg), state_logical_axes(cfg),
+                              mesh, shd.rules_for(profile))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, profile: str = "tp"):
+    return shd.tree_shardings(model.init_abstract(cfg),
+                              model.param_logical_axes(cfg), mesh,
+                              shd.rules_for(profile))
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, capacity: int,
+                    profile: str = "tp"):
+    ab = model.abstract_cache(cfg, batch, capacity)
+    axes = model.cache_logical_axes(cfg)
+    return shd.tree_shardings(ab, axes, mesh, shd.rules_for(profile))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

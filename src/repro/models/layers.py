@@ -1,0 +1,235 @@
+"""Shared neural layers: norms, RoPE, MLP, and reference (pure-XLA) attention.
+
+The attention here is the *reference path* used for dry-run/roofline lowering
+and CPU execution; the Pallas flash-attention kernel (``repro.kernels``) is the
+TPU hot path and is validated against :func:`attention_xla` in tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Query-chunk size above which the reference attention switches to a scanned,
+# memory-bounded formulation (keeps 32k-prefill activation memory O(S*chunk)).
+_Q_CHUNK = 1024
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def apply_norm(x: jax.Array, params: dict, norm_type: str) -> jax.Array:
+    if norm_type == "rmsnorm":
+        return rms_norm(x, params["scale"])
+    return layer_norm(x, params["scale"], params["bias"])
+
+
+# --------------------------------------------------------------------------- #
+# Rotary position embedding (llama-style rotate-half)
+# --------------------------------------------------------------------------- #
+def rope_tables(positions: jax.Array, head_dim: int, theta: float):
+    """positions: (..., S) int32 -> cos/sin tables (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B?, S, D//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos[..., None, :].astype(jnp.float32)
+    sin = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# MLP
+# --------------------------------------------------------------------------- #
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": functools.partial(jax.nn.gelu, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def mlp(params: dict, x: jax.Array, act: str, gated: bool) -> jax.Array:
+    fn = _ACTS[act]
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"],
+                   preferred_element_type=jnp.float32)
+    if gated:
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"],
+                       preferred_element_type=jnp.float32)
+        h = fn(g) * h
+    else:
+        h = fn(h)
+    h = h.astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Attention masks
+# --------------------------------------------------------------------------- #
+def attn_mask(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool,
+              window: Optional[int], prefix_len: int = 0) -> jax.Array:
+    """Boolean allow-mask (…, Sq, Sk) from absolute positions."""
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    if causal:
+        ok = k <= q
+        if prefix_len:
+            ok = ok | ((q < prefix_len) & (k < prefix_len))
+    else:
+        ok = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+    if window is not None:
+        ok = ok & (k > q - window)
+    # unwritten ring-buffer slots carry negative positions -> invalid
+    ok = ok & (k >= 0)
+    return ok
+
+
+# --------------------------------------------------------------------------- #
+# Reference attention (GQA, causal / sliding-window / prefix-LM, softcap)
+# --------------------------------------------------------------------------- #
+def _attn_core(q, k, v, q_pos, k_pos, *, causal, window, prefix_len, softcap):
+    """q: (B,Sq,Hkv,G,D); k,v: (B,Sk,Hkv,D) -> (B,Sq,Hkv,G,D)."""
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    mask = attn_mask(q_pos, k_pos, causal=causal, window=window,
+                     prefix_len=prefix_len)
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(v.dtype)
+
+
+def _attn_core_m(q, k, v, q_pos, k_pos, *, causal, window, prefix_len,
+                 softcap):
+    """Shard-aware core: q (B,M,Sq,Hkv,G,D) with M a *sharded* q-row block
+    dim; k,v (B,Sk,Hkv,D) broadcast across M (no copy)."""
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bmqhgd,bkhd->bmhgqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    mask = attn_mask(q_pos, k_pos[:, None], causal=causal, window=window,
+                     prefix_len=prefix_len)             # (B, M, Sq, Sk)
+    scores = jnp.where(mask[:, :, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bmhgqk,bkhd->bmqhgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(v.dtype)
+
+
+def attention_xla(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  prefix_len: int = 0, softcap: Optional[float] = None,
+                  q_offset=0, k_pos: Optional[jax.Array] = None,
+                  q_chunk: int = _Q_CHUNK, seq_shards: int = 1,
+                  constrain_cb=None, unroll_chunks: bool = False) -> jax.Array:
+    """Grouped-query attention, memory-bounded via query chunking.
+
+    q: (B, Sq, Hq, D);  k, v: (B, Sk, Hkv, D);  returns (B, Sq, Hq, D).
+    ``q_offset`` is the absolute position of q[0] (decode: the cache cursor).
+    ``k_pos`` overrides key absolute positions (ring buffers).
+    """
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    if k_pos is None:
+        k_pos = jnp.broadcast_to(jnp.arange(sk), (b, sk))
+    q_pos_all = q_offset + jnp.arange(sq)
+    q_pos_all = jnp.broadcast_to(q_pos_all, (b, sq)) if jnp.ndim(q_offset) == 0 \
+        else q_offset[:, None] + jnp.arange(sq)[None]
+
+    core = functools.partial(_attn_core, causal=causal, window=window,
+                             prefix_len=prefix_len, softcap=softcap)
+
+    def map_chunks(f, xs, n):
+        # lax.map lowers to a while loop whose body XLA cost analysis counts
+        # once; analysis lowerings unroll so every chunk's FLOPs are visible
+        if unroll_chunks:
+            ys = [f(jax.tree.map(lambda a: a[i], xs)) for i in range(n)]
+            return jnp.stack(ys)
+        return jax.lax.map(f, xs)
+
+    if seq_shards > 1 and sq % seq_shards == 0:
+        # sequence-parallel path: q rows regrouped (B, M, rows) with M the
+        # sharded block dim — the inner chunk loop (lax.map is sequential,
+        # its loop dim can never shard) keeps M intact so GSPMD tiles the
+        # score tensor instead of replicating it over the model axis
+        m = seq_shards
+        rows = sq // m
+        qm = qg.reshape(b, m, rows, hkv, g, d)
+        qpm = q_pos_all.reshape(b, m, rows)
+        if constrain_cb is not None:
+            qm = constrain_cb(qm)
+        core_m = functools.partial(_attn_core_m, causal=causal,
+                                   window=window, prefix_len=prefix_len,
+                                   softcap=softcap)
+        # per-device score tile parity with the heads-TP path: all heads
+        # live on every shard here, so the row chunk shrinks by seq_shards
+        ic = min(max(128, q_chunk // seq_shards), rows)
+        if rows > ic and rows % ic == 0:
+            n = rows // ic
+            qc = jnp.moveaxis(qm.reshape(b, m, n, ic, hkv, g, d), 2, 0)
+            qpc = jnp.moveaxis(qpm.reshape(b, m, n, ic), 2, 0)
+
+            def chunk_fn_m(args):
+                qi, qpi = args
+                if constrain_cb is not None:
+                    qi = constrain_cb(qi)
+                return core_m(qi, k, v, qpi, k_pos)
+
+            out = map_chunks(jax.checkpoint(chunk_fn_m), (qc, qpc), n)
+            out = jnp.moveaxis(out, 0, 2)              # (B, M, n, ic, ...)
+            out = out.reshape(b, sq, hkv, g, d)
+        else:
+            out = core_m(qm, k, v, qpm, k_pos).reshape(b, sq, hkv, g, d)
+        return out.reshape(b, sq, hq, d)
+
+    if sq > q_chunk and sq % q_chunk == 0:
+        n = sq // q_chunk
+        qg_c = qg.reshape(b, n, q_chunk, hkv, g, d).swapaxes(0, 1)
+        qp_c = q_pos_all.reshape(b, n, q_chunk).swapaxes(0, 1)
+        # checkpoint: scores/probs are recomputed in backward instead of
+        # being stacked across chunks as scan residuals (flash-attention
+        # memory semantics for the XLA reference path)
+        chunk_fn = jax.checkpoint(
+            lambda args: core(args[0], k, v, args[1], k_pos))
+        out = map_chunks(chunk_fn, (qg_c, qp_c), n)
+        out = out.swapaxes(0, 1).reshape(b, sq, hkv, g, d)
+    else:
+        out = core(qg, k, v, q_pos_all, k_pos)
+    return out.reshape(b, sq, hq, d)

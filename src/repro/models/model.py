@@ -1,0 +1,385 @@
+"""Unified model: specs, init, forward (train/prefill), decode step, loss.
+
+Layer stacks are ``lax.scan``-over-groups with stacked params: HLO size and
+compile time are independent of depth (essential for 512-device dry-runs).
+A "group" is one repetition of ``cfg.block_pattern``; layers left over after
+the last full group ("rest") are applied unscanned.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks
+from repro.models.context import RunContext
+from repro.models.layers import apply_norm, rope_tables
+from repro.models.spec import (ParamSpec, abstract_params, init_params,
+                               logical_axes, param_count, stack_specs)
+
+_AUX_COEF = 0.01
+
+
+def constrain(x: jax.Array, ctx: RunContext, *trailing) -> jax.Array:
+    """with_sharding_constraint helper: batch dim over dp axes + trailing
+    logical entries given as mesh-axis names (or None).  GSPMD's propagation
+    through scan loops is weak; these pins keep activations batch-sharded.
+    """
+    if ctx.mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = ctx.dp_spec()
+    dp_entry = dp if x.shape[0] % ctx.dp_size == 0 else None
+    entries = [dp_entry]
+    for size, name in zip(x.shape[1:], trailing):
+        if name is not None and size % ctx.mesh.shape[name] == 0:
+            entries.append(name)
+        else:
+            entries.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*entries)))
+
+
+# --------------------------------------------------------------------------- #
+# Grouping
+# --------------------------------------------------------------------------- #
+def grouping(cfg: ModelConfig):
+    """(pattern, n_groups, rest_kinds)."""
+    pat = cfg.block_pattern
+    n_groups = cfg.n_layers // len(pat)
+    rest = cfg.layer_kinds()[n_groups * len(pat):]
+    return pat, n_groups, rest
+
+
+# --------------------------------------------------------------------------- #
+# Specs / init
+# --------------------------------------------------------------------------- #
+def param_specs(cfg: ModelConfig) -> Dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    pat, n_groups, rest = grouping(cfg)
+    sp: Dict = {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), fan_in=d),
+        "final_norm": blocks.norm_specs(cfg),
+        "layers": {
+            "stack": {f"b{i}": stack_specs(blocks.block_specs(cfg, kind),
+                                           n_groups)
+                      for i, kind in enumerate(pat)},
+            "rest": {f"r{i}": blocks.block_specs(cfg, kind)
+                     for i, kind in enumerate(rest)},
+        },
+    }
+    if not cfg.tie_embeddings:
+        sp["head"] = ParamSpec((d, v), ("embed", "vocab"))
+    if cfg.frontend is not None:
+        sp["frontend"] = {"proj": ParamSpec((d, d), ("embed", "embed_out"))}
+    # honor cfg.dtype: bf16-default specs follow the config (explicit fp32
+    # specs — norms stats, decay params — stay fp32)
+    if cfg.dtype != "bfloat16":
+        target = jnp.dtype(cfg.dtype)
+        sp = jax.tree.map(
+            lambda s: dataclasses.replace(s, dtype=target)
+            if s.dtype == jnp.bfloat16 else s,
+            sp, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sp
+
+
+def init(cfg: ModelConfig, key: jax.Array):
+    return init_params(param_specs(cfg), key)
+
+
+def init_abstract(cfg: ModelConfig):
+    return abstract_params(param_specs(cfg))
+
+
+def param_logical_axes(cfg: ModelConfig):
+    return logical_axes(param_specs(cfg))
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return param_count(param_specs(cfg))
+
+
+def n_active_params(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: top_k of n_experts expert params)."""
+    if not cfg.is_moe:
+        return n_params(cfg)
+    total = n_params(cfg)
+    specs = param_specs(cfg)
+    expert_leaves = [
+        s for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+        if len(s.shape) >= 3 and cfg.n_experts in s.shape[:2] and s.shape[-1] != cfg.n_experts
+    ]
+    expert_total = sum(int(np.prod(s.shape)) for s in expert_leaves)
+    return total - expert_total + expert_total * cfg.top_k // cfg.n_experts
+
+
+# --------------------------------------------------------------------------- #
+# Cache
+# --------------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch: int, capacity: int,
+               dtype=None) -> Dict:
+    """Zero decode cache, stacked to match the scan grouping."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    pat, n_groups, rest = grouping(cfg)
+
+    def stacked(kind):
+        one = blocks.init_block_cache(cfg, kind, batch, capacity, dtype)
+        return jax.tree.map(
+            lambda a: jnp.zeros((n_groups,) + a.shape, a.dtype), one)
+
+    return {
+        "stack": {f"b{i}": stacked(kind) for i, kind in enumerate(pat)},
+        "rest": {f"r{i}": blocks.init_block_cache(cfg, kind, batch, capacity,
+                                                  dtype)
+                 for i, kind in enumerate(rest)},
+    }
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, capacity: int):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, capacity))
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    """Logical axes tree matching ``init_cache`` (leading layer-stack dim)."""
+    pat, _, rest = grouping(cfg)
+
+    def stacked(kind):
+        one = blocks.block_cache_axes(cfg, kind)
+        return jax.tree.map(lambda a: ("layers",) + a, one,
+                            is_leaf=lambda x: isinstance(x, tuple)
+                            and all(isinstance(e, (str, type(None)))
+                                    for e in x))
+
+    return {
+        "stack": {f"b{i}": stacked(kind) for i, kind in enumerate(pat)},
+        "rest": {f"r{i}": blocks.block_cache_axes(cfg, kind)
+                 for i, kind in enumerate(rest)},
+    }
+
+
+# --------------------------------------------------------------------------- #
+# Input embedding (text / audio-stub / vision-stub frontends)
+# --------------------------------------------------------------------------- #
+def embed_inputs(cfg: ModelConfig, params: Dict, batch: Dict):
+    """Returns (x, positions, prefix_len)."""
+    dtype = jnp.dtype(cfg.dtype)
+    emb = params["embed"]
+
+    def tok_embed(tokens):
+        x = jnp.take(emb, tokens, axis=0).astype(dtype)
+        if cfg.scale_embeddings:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
+        return x
+
+    if cfg.frontend == "audio":
+        x = jnp.einsum("bsd,de->bse", batch["frames"].astype(dtype),
+                       params["frontend"]["proj"]).astype(dtype)
+        prefix_len = 0
+    elif cfg.frontend == "vision":
+        patches = jnp.einsum("bpd,de->bpe", batch["patches"].astype(dtype),
+                             params["frontend"]["proj"]).astype(dtype)
+        x = jnp.concatenate([patches, tok_embed(batch["tokens"])], axis=1)
+        prefix_len = patches.shape[1]
+    else:
+        x = tok_embed(batch["tokens"])
+        prefix_len = 0
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return x, positions, prefix_len
+
+
+def unembed(cfg: ModelConfig, params: Dict, x: jax.Array,
+            ctx: RunContext) -> jax.Array:
+    x = apply_norm(x, params["final_norm"], cfg.norm_type)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"],
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"],
+                            preferred_element_type=jnp.float32)
+    logits = constrain(logits, ctx, None, ctx.model_axis)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+# --------------------------------------------------------------------------- #
+# Stack application
+# --------------------------------------------------------------------------- #
+def _remat_wrap(fn, ctx: RunContext, mode: str):
+    if mode != "train" or ctx.remat == "none":
+        return fn
+    if ctx.remat == "dots":
+        policy = jax.checkpoint_policies.dots_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def apply_stack(cfg: ModelConfig, params: Dict, x: jax.Array,
+                ctx: RunContext, rope, cache: Optional[Dict], mode: str,
+                prefix_len: int, pos, cache_capacity: int = 0):
+    """Runs all layers. Returns (x, new_cache, aux)."""
+    pat, n_groups, rest = grouping(cfg)
+    want_cache = cache is not None or mode == "prefill"
+
+    seq_ax = ctx.model_axis if (ctx.mesh is not None and ctx.zero_sp) else None
+
+    def group_body(carry, xs):
+        xc, aux = carry
+        xc = constrain(xc, ctx, seq_ax, None)
+        layer_params, layer_cache = xs
+        new_caches = {}
+        for i, kind in enumerate(pat):
+            c_i = None if layer_cache is None else layer_cache[f"b{i}"]
+            xc, nc, a = blocks.block_apply(kind, layer_params[f"b{i}"], xc,
+                                           cfg, ctx, rope, c_i, mode,
+                                           prefix_len, pos, cache_capacity)
+            if want_cache:
+                new_caches[f"b{i}"] = nc
+        return (xc, aux + a), (new_caches if want_cache else None)
+
+    body = _remat_wrap(group_body, ctx, mode)
+    aux0 = jnp.zeros((), jnp.float32)
+    cache_stack = None if cache is None else cache["stack"]
+    if n_groups > 0:
+        (x, aux), new_stack = jax.lax.scan(
+            body, (x, aux0), (params["layers"]["stack"], cache_stack),
+            unroll=n_groups if ctx.scan_unroll else 1)
+    else:
+        aux, new_stack = aux0, None
+
+    new_rest = {}
+    for i, kind in enumerate(rest):
+        c_i = None if cache is None else cache["rest"][f"r{i}"]
+        x, nc, a = blocks.block_apply(kind, params["layers"]["rest"][f"r{i}"],
+                                      x, cfg, ctx, rope, c_i, mode,
+                                      prefix_len, pos, cache_capacity)
+        aux = aux + a
+        if want_cache:
+            new_rest[f"r{i}"] = nc
+    new_cache = {"stack": new_stack, "rest": new_rest} if want_cache else None
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------- #
+# Losses
+# --------------------------------------------------------------------------- #
+def _ce_vocab_sharded(logits: jax.Array, targets: jax.Array,
+                      ctx: RunContext) -> jax.Array:
+    """Per-token CE with the vocab dim sharded over the model axis.
+
+    A plain take_along_axis over a sharded vocab makes GSPMD all-gather the
+    full logits (e.g. 13 GiB/dev for smollm train_4k); inside shard_map each
+    shard reduces its local vocab slice and three scalar-ish psums combine.
+    """
+    from jax.sharding import PartitionSpec as P
+    m = ctx.model_axis
+    b = logits.shape[0]
+    dp = ctx.dp_spec() if b % ctx.dp_size == 0 else None
+
+    def body(lg, tg):
+        lg = lg.astype(jnp.float32)
+        v_loc = lg.shape[-1]
+        off = jax.lax.axis_index(m) * v_loc
+        # stop_gradient: lse is shift-invariant, so treating the max as a
+        # constant yields exact gradients (and pmax has no JVP rule —
+        # the stop must sit *inside* so pmax never sees a tangent)
+        lmax = jax.lax.pmax(
+            jax.lax.stop_gradient(jnp.max(lg, axis=-1)), m)
+        z = jnp.exp(lg - lmax[..., None])
+        denom = jax.lax.psum(jnp.sum(z, axis=-1), m)
+        idx = tg - off
+        ok = (idx >= 0) & (idx < v_loc)
+        safe = jnp.clip(idx, 0, v_loc - 1)
+        ll_loc = jnp.take_along_axis(lg, safe[..., None], axis=-1)[..., 0]
+        ll = jax.lax.psum(jnp.where(ok, ll_loc, 0.0), m)
+        return jnp.log(denom) + lmax - ll
+
+    return jax.shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P(dp, None, m), P(dp, None)),
+        out_specs=P(dp, None), check_vma=False)(logits, targets)
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  mask: Optional[jax.Array], chunk: int = 0,
+                  ctx: Optional[RunContext] = None):
+    """Stable CE over (possibly vocab-sharded) logits. logits: (B,S,V) f32."""
+    if (ctx is not None and ctx.mesh is not None
+            and logits.shape[-1] % ctx.model_size == 0):
+        losses = _ce_vocab_sharded(logits, targets, ctx)
+        if mask is None:
+            return jnp.mean(losses)
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    def ce(lg, tg):
+        lg = lg.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(lg, tg[..., None], axis=-1)[..., 0]
+        return lse - ll
+
+    if chunk and logits.shape[1] % chunk == 0 and logits.shape[1] > chunk:
+        b, s, v = logits.shape
+        n = s // chunk
+        lg = logits.reshape(b, n, chunk, v).swapaxes(0, 1)
+        tg = targets.reshape(b, n, chunk).swapaxes(0, 1)
+        losses = jax.lax.map(lambda args: ce(*args), (lg, tg))
+        losses = losses.swapaxes(0, 1).reshape(b, s)
+    else:
+        losses = ce(logits, targets)
+    if mask is None:
+        return jnp.mean(losses)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# --------------------------------------------------------------------------- #
+# Public entry points
+# --------------------------------------------------------------------------- #
+def forward(cfg: ModelConfig, params: Dict, batch: Dict, ctx: RunContext,
+            mode: str = "train", cache_capacity: int = 0):
+    """mode="train" -> (loss, metrics); mode="prefill" -> (last_logits, cache)."""
+    x, positions, prefix_len = embed_inputs(cfg, params, batch)
+    seq_ax = ctx.model_axis if (ctx.mesh is not None and ctx.zero_sp) else None
+    x = constrain(x, ctx, seq_ax, None)
+    rope = rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+    x, new_cache, aux = apply_stack(cfg, params, x, ctx, rope, None, mode,
+                                    prefix_len, pos=None,
+                                    cache_capacity=cache_capacity)
+    if mode == "prefill":
+        logits = unembed(cfg, params, x[:, -1:], ctx)
+        return logits[:, 0], new_cache
+    logits = unembed(cfg, params, x, ctx)
+    if cfg.frontend == "vision":
+        # loss over the text suffix only
+        logits = logits[:, prefix_len:]
+    targets = batch["targets"]
+    mask = batch.get("loss_mask")
+    loss = cross_entropy(logits, targets, mask, ctx.loss_chunk, ctx)
+    total = loss + _AUX_COEF * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,
+                tokens: jax.Array, pos: jax.Array, ctx: RunContext):
+    """One decode step. tokens: (B,1) int32; pos: scalar int32 cursor.
+
+    Returns (logits (B,V), new_cache).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    rope = rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+    x, new_cache, _ = apply_stack(cfg, params, x, ctx, rope, cache, "decode",
+                                  prefix_len=0, pos=pos)
+    logits = unembed(cfg, params, x, ctx)
+    return logits[:, 0], new_cache

@@ -1,0 +1,74 @@
+"""Parameter specs: one tree describing shape, dtype, logical axes and init.
+
+``param_specs(cfg)`` is the single source of truth from which we derive
+ - real initialized parameters (``init_params``),
+ - zero-allocation ``ShapeDtypeStruct`` stand-ins (``abstract_params``),
+ - logical sharding axes (``logical_axes``) consumed by
+   ``repro.distributed.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]    # logical axis name per dim (or None)
+    dtype: Any = jnp.bfloat16
+    init: str = "fan_in"               # fan_in | zeros | ones
+    fan_in: Optional[int] = None       # override for fan_in init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, key: jax.Array):
+    """Materialize real parameters (used by smoke tests / real training)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, s.dtype))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, s.dtype))
+        else:
+            fan = s.fan_in if s.fan_in is not None else (s.shape[0] if s.shape else 1)
+            std = 1.0 / np.sqrt(max(fan, 1))
+            out.append((jax.random.normal(k, s.shape, jnp.float32) * std)
+                       .astype(s.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(specs):
+    """ShapeDtypeStruct tree — no device allocation (dry-run path)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=_is_spec)
+
+
+def logical_axes(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def param_count(specs) -> int:
+    return sum(int(np.prod(s.shape)) for s in
+               jax.tree.leaves(specs, is_leaf=_is_spec))
+
+
+def stack_specs(spec_tree, n: int, axis_name: str = "layers"):
+    """Add a leading stacked-layer dim to every spec in the tree."""
+    def f(s: ParamSpec) -> ParamSpec:
+        fan = s.fan_in if s.fan_in is not None else (s.shape[0] if s.shape else 1)
+        return ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.dtype,
+                         s.init, fan)
+    return jax.tree.map(f, spec_tree, is_leaf=_is_spec)

@@ -1,0 +1,15 @@
+import os
+import sys
+
+# src-layout import path (so `pytest tests/` works without install)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,231 @@
+"""ThinkAir core behaviour: policies, clone pool, controller, parallelizer,
+faults, energy — the paper's §4-§6 semantics."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CLONE_TYPES, ClonePool, CloneState,
+                        ExecutionController, FaultPlan, Parallelizer,
+                        PhoneState, Policy, PowerTutorModel, Prediction,
+                        RemoteableMethod, TpuEnergyModel, VenueFailure,
+                        resume_time, should_offload, split_batch,
+                        split_range)
+from repro.core.clones import BOOT_SECONDS, RESUME_SECONDS
+
+
+# --------------------------------------------------------------------------- #
+# policies
+# --------------------------------------------------------------------------- #
+def test_policy_semantics():
+    fast_cheap = Prediction(1.0, 1.0)
+    slow_dear = Prediction(2.0, 2.0)
+    fast_dear = Prediction(1.0, 3.0)
+    assert not should_offload(Policy.NONE, slow_dear, fast_cheap)
+    assert should_offload(Policy.EXEC_TIME, slow_dear, fast_cheap)
+    assert should_offload(Policy.EXEC_TIME, slow_dear, fast_dear)
+    assert not should_offload(Policy.ENERGY, slow_dear, fast_dear)
+    assert should_offload(Policy.EXEC_TIME_AND_ENERGY, slow_dear, fast_cheap)
+    assert not should_offload(Policy.EXEC_TIME_AND_ENERGY, slow_dear,
+                              fast_dear)
+
+
+# --------------------------------------------------------------------------- #
+# energy models
+# --------------------------------------------------------------------------- #
+def test_powertutor_paper_coefficients():
+    m = PowerTutorModel()
+    # full-load phone: CPU at 100% high freq + screen (paper Table 2)
+    comps = m.power_mw(PhoneState(cpu_util=100.0, brightness=150))
+    assert comps["cpu"] == pytest.approx(4.32 * 100 + 121.46)
+    assert comps["screen"] == pytest.approx(2.40 * 150)
+    # 3G DCH state = 570 mW, FACH = 401 mW, idle = 10 mW
+    assert m.power_mw(PhoneState(cell="dch"))["3g"] == 570.0
+    assert m.power_mw(PhoneState(cell="fach"))["3g"] == 401.0
+    assert m.power_mw(PhoneState(cell="idle"))["3g"] == 10.0
+    # WiFi high/low
+    assert m.power_mw(PhoneState(wifi="high"))["wifi"] == 710.0
+    assert m.power_mw(PhoneState(wifi="low"))["wifi"] == 20.0
+
+
+def test_energy_linear_in_time():
+    m = PowerTutorModel()
+    st = PhoneState(cpu_util=50.0)
+    e1 = sum(m.energy_j(st, 1.0).values())
+    e2 = sum(m.energy_j(st, 2.0).values())
+    assert e2 == pytest.approx(2 * e1)
+
+
+def test_tpu_energy_components():
+    m = TpuEnergyModel()
+    e = m.energy_j(chips=4, seconds=2.0, util=1.0, hbm_bytes=1e9,
+                   ici_bytes=1e9)
+    assert e["chips"] == pytest.approx(4 * 250.0 * 2.0)
+    assert e["hbm"] > 0 and e["ici"] > 0
+
+
+# --------------------------------------------------------------------------- #
+# clone pool (paper §5.3)
+# --------------------------------------------------------------------------- #
+def test_clone_pool_primary_always_running():
+    pool = ClonePool()
+    assert pool.primary.state is CloneState.RUNNING
+    pool.pause(pool.primary)           # primary may not pause
+    assert pool.primary.state is CloneState.RUNNING
+
+
+def test_resume_costs_match_paper_observations():
+    # 1 resume ~300 ms; 7 simultaneous -> 6-7 s (paper §5.3)
+    assert resume_time(1) == pytest.approx(0.300)
+    assert 6.0 <= resume_time(7) <= 7.0
+    assert BOOT_SECONDS == 32.0
+
+
+def test_acquire_prefers_paused_over_boot():
+    t = [0.0]
+    pool = ClonePool(clock=lambda: t[0])
+    pool.provision("main", 3)          # paused secondaries
+    clones, cost = pool.acquire("main", n=3, exclude_primary=True)
+    assert len(clones) == 3
+    assert cost == pytest.approx(resume_time(3))
+    assert pool.stats["boots"] == 0
+    pool.release(clones)
+    # cold acquire of a type with no paused clones -> boot cost
+    clones2, cost2 = pool.acquire("x4large", n=1)
+    assert cost2 == BOOT_SECONDS
+    assert pool.stats["boots"] == 1
+
+
+def test_idle_reaping_pause_then_off():
+    t = [0.0]
+    pool = ClonePool(clock=lambda: t[0])
+    clones, _ = pool.acquire("main", n=2, exclude_primary=True)
+    pool.release(clones)
+    t[0] = 31.0
+    pool.reap_idle()
+    assert all(c.state is CloneState.PAUSED for c in clones)
+    t[0] = 31.0 + 601.0
+    pool.reap_idle()
+    assert all(c.state is CloneState.POWERED_OFF for c in clones)
+
+
+def test_escalation_chain_reaches_most_powerful():
+    pool = ClonePool()
+    chain = ["basic"]
+    while True:
+        nxt = pool.escalate_type(chain[-1])
+        if nxt is None:
+            break
+        chain.append(nxt)
+    assert chain[-1] == "x8large"
+    assert len(chain) == len(CLONE_TYPES)
+
+
+# --------------------------------------------------------------------------- #
+# controller (paper §4.3-4.4)
+# --------------------------------------------------------------------------- #
+def _method(heavy=False):
+    n = 2_000_000 if heavy else 100
+
+    def fn(x):
+        y = x
+        for _ in range(3):
+            y = jnp.tanh(y @ y.T) @ y if heavy else y + 1
+        return y.sum()
+
+    return RemoteableMethod(f"m{heavy}", fn, size_fn=lambda x: x.size)
+
+
+def test_first_encounter_env_only():
+    ec = ExecutionController(policy=Policy.EXEC_TIME, link="wifi-local")
+    rm = _method()
+    x = jnp.ones((8, 8))
+    res = ec.execute(rm, x)
+    assert res.offloaded          # good connectivity => offload unknown method
+    ec2 = ExecutionController(policy=Policy.EXEC_TIME, link="wifi-local")
+    ec2.device.observe(connectivity="none")
+    res2 = ec2.execute(rm, x)
+    assert not res2.offloaded     # no connectivity => local
+
+
+def test_policy_none_never_offloads():
+    ec = ExecutionController(policy=Policy.NONE)
+    rm = _method()
+    for _ in range(3):
+        assert not ec.execute(rm, jnp.ones((4, 4))).offloaded
+
+
+def test_fault_falls_back_to_local_and_reconnects():
+    ec = ExecutionController(policy=Policy.EXEC_TIME,
+                             fault_plan=FaultPlan(fail_next=1))
+    rm = _method()
+    res = ec.execute(rm, jnp.ones((4, 4)), force="remote")
+    assert res.fell_back and res.venue == "phone"
+    assert ec.reconnect.connected          # async reconnection completed
+    assert ec.decisions["fallback"] == 1
+
+
+def test_oom_escalation_to_bigger_clone():
+    """Image-combiner scenario: working set exceeds the default clone."""
+    ec = ExecutionController(policy=Policy.EXEC_TIME)
+    big = 800 * 2 ** 20                    # needs > main's 512 MB
+    rm = RemoteableMethod("combiner", lambda x: x * 2,
+                          size_fn=lambda x: x.size,
+                          mem_fn=lambda x: big)
+    res = ec.execute(rm, jnp.ones((16, 16)), force="remote")
+    assert res.escalations >= 1
+    assert res.venue in ("large", "x2large", "x4large", "x8large")
+
+
+def test_history_driven_decision_prefers_faster_venue():
+    ec = ExecutionController(policy=Policy.EXEC_TIME, link="3g")
+    rm = _method()                         # trivial method, slow 3G link
+    x = jnp.ones((4, 4))
+    ec.execute(rm, x, force="local")
+    ec.execute(rm, x, force="remote")
+    res = ec.execute(rm, x)                # trivial compute + 3G => local
+    assert not res.offloaded
+
+
+def test_transfer_bytes_accounted():
+    ec = ExecutionController()
+    rm = _method()
+    x = jnp.ones((64, 64), jnp.float32)
+    res = ec.execute(rm, x, force="remote")
+    assert res.tx_bytes >= x.size * 4
+    assert res.rx_bytes > 0
+    assert res.overhead_s > 0
+
+
+# --------------------------------------------------------------------------- #
+# parallelizer (paper §7.4) + stragglers
+# --------------------------------------------------------------------------- #
+def test_split_batch_and_range():
+    shards = split_batch((np.arange(10),), 3)
+    assert [s[0].shape[0] for s in shards] == [4, 3, 3]
+    assert split_range(0, 8, 4) == [(0, 2), (2, 4), (4, 6), (6, 8)]
+
+
+def test_parallel_makespan_includes_resume_and_sync():
+    pool = ClonePool()
+    pool.provision("main", 4)
+    par = Parallelizer(pool)
+    fn = lambda x: x.sum()
+    shards = split_batch((jnp.arange(32.0),), 4)
+    res = par.run(fn, shards, merge=lambda vs: sum(float(v) for v in vs))
+    assert res.n_clones == 4
+    assert res.resume_s > 0                      # resumed paused clones
+    assert res.sync_s == pytest.approx(0.05 * 3)
+    assert res.makespan_s >= max(res.shard_times)
+    assert res.value == pytest.approx(float(jnp.arange(32.0).sum()))
+
+
+def test_straggler_redispatch():
+    pool = ClonePool()
+    pool.provision("main", 6)
+    par = Parallelizer(pool, straggler_factor=2.0)
+    fn = lambda x: x.sum()
+    shards = split_batch((jnp.arange(16.0),), 4)
+    res = par.run(fn, shards, merge=lambda vs: vs,
+                  shard_delays=[0.0, 0.0, 0.0, 100.0])
+    assert res.redispatches == 1
+    assert max(res.shard_times) < 100.0          # rescue beat the straggler

@@ -1,0 +1,129 @@
+"""Per-kernel allclose vs pure-jnp oracles: shape/dtype sweeps (interpret)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# flash attention
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,hq,hkv,d,causal,window,softcap",
+    [
+        (1, 64, 2, 2, 32, True, None, None),
+        (2, 128, 4, 1, 64, True, None, None),       # GQA 4:1
+        (2, 128, 6, 2, 32, True, 32, None),         # sliding window
+        (1, 96, 3, 3, 80, True, None, 30.0),        # softcap, unaligned d
+        (1, 128, 2, 2, 16, False, None, None),      # encoder (non-causal)
+        (2, 72, 5, 5, 24, True, None, None),        # unaligned seq (padding)
+    ])
+def test_flash_attention_matches_ref(b, s, hq, hkv, d, causal, window,
+                                     softcap, dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (b, s, hq, d), dtype)
+    k = _rand(k2, (b, s, hkv, d), dtype)
+    v = _rand(k3, (b, s, hkv, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, bq=32, bk=32, interpret=True)
+    want = ref.flash_attention_ref(
+        q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+        causal=causal, window=window, softcap=softcap).swapaxes(1, 2)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_flash_attention_block_size_invariance():
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (1, 128, 2, 32), jnp.float32)
+    k = _rand(k2, (1, 128, 2, 32), jnp.float32)
+    v = _rand(k3, (1, 128, 2, 32), jnp.float32)
+    outs = [np.asarray(ops.flash_attention(q, k, v, bq=bq, bk=bk,
+                                           interpret=True))
+            for bq, bk in [(32, 32), (64, 32), (128, 64), (128, 128)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-5, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# rglru scan
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("b,s,r,bs", [
+    (1, 64, 32, 16), (2, 100, 96, 32), (3, 256, 128, 256), (1, 8, 16, 8),
+])
+def test_rglru_scan_matches_ref(b, s, r, bs):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    a = jax.nn.sigmoid(jax.random.normal(k1, (b, s, r)))
+    bb = jax.random.normal(k2, (b, s, r))
+    h0 = jax.random.normal(k3, (b, r))
+    y, hn = ops.rglru_scan(a, bb, h0, bs=bs, interpret=True)
+    yr, hnr = ref.rglru_scan_ref(a, bb, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-5,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hn), np.asarray(hnr), atol=1e-5,
+                               rtol=1e-4)
+
+
+def test_rglru_scan_zero_init():
+    k1, k2 = jax.random.split(KEY)
+    a = jax.nn.sigmoid(jax.random.normal(k1, (2, 32, 16)))
+    bb = jax.random.normal(k2, (2, 32, 16))
+    y, hn = ops.rglru_scan(a, bb, None, bs=8, interpret=True)
+    yr, hnr = ref.rglru_scan_ref(a, bb, jnp.zeros((2, 16)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-5,
+                               rtol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# rwkv6 scan
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("b,s,h,n,chunk", [
+    (1, 64, 2, 16, 16), (2, 96, 3, 32, 32), (1, 40, 1, 8, 16),
+])
+def test_rwkv6_scan_matches_ref(b, s, h, n, chunk):
+    ks = jax.random.split(KEY, 6)
+    r = jax.random.normal(ks[0], (b, s, h, n))
+    k = jax.random.normal(ks[1], (b, s, h, n))
+    v = jax.random.normal(ks[2], (b, s, h, n))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, n))) * 0.7 + 0.29
+    u = jax.random.normal(ks[4], (h, n))
+    s0 = jax.random.normal(ks[5], (b, h, n, n))
+    y, sn = ops.rwkv6_scan(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+    yr, snr = ref.rwkv6_scan_ref(r.swapaxes(1, 2), k.swapaxes(1, 2),
+                                 v.swapaxes(1, 2), w.swapaxes(1, 2), u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr.swapaxes(1, 2)),
+                               atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(sn), np.asarray(snr), atol=2e-4,
+                               rtol=1e-3)
+
+
+def test_rwkv6_model_chunked_matches_sequential_oracle():
+    """The model's chunked-parallel WKV == the kernel's sequential oracle."""
+    from repro.models.rwkv6 import wkv6_chunked_ref
+    ks = jax.random.split(KEY, 6)
+    b, s, h, n = 2, 64, 2, 16
+    r = jax.random.normal(ks[0], (b, s, h, n))
+    k = jax.random.normal(ks[1], (b, s, h, n))
+    v = jax.random.normal(ks[2], (b, s, h, n))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, n))) * 0.7 + 0.29
+    u = jax.random.normal(ks[4], (h, n))
+    s0 = jax.random.normal(ks[5], (b, h, n, n))
+    y, sn = wkv6_chunked_ref(r, k, v, w, u, s0, chunk=16)
+    yr, snr = ref.rwkv6_scan_ref(r.swapaxes(1, 2), k.swapaxes(1, 2),
+                                 v.swapaxes(1, 2), w.swapaxes(1, 2), u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr.swapaxes(1, 2)),
+                               atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(sn), np.asarray(snr), atol=2e-4,
+                               rtol=1e-3)

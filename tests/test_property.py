@@ -1,0 +1,91 @@
+"""Hypothesis property tests on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clones import resume_time
+from repro.core.policy import Policy, Prediction, should_offload
+from repro.core.profilers import size_bucket
+from repro.core.parallel import split_batch, split_range
+from repro.distributed.compression import dequantize_int8, quantize_int8
+
+TIMES = st.floats(min_value=1e-6, max_value=1e6, allow_nan=False)
+
+
+@given(tl=TIMES, el=TIMES, tr=TIMES, er=TIMES)
+def test_policy_offload_implies_improvement(tl, el, tr, er):
+    """Under any single-objective policy, offloading implies that objective
+    strictly improves (the paper's definition)."""
+    local, remote = Prediction(tl, el), Prediction(tr, er)
+    if should_offload(Policy.EXEC_TIME, local, remote):
+        assert remote.time_s < local.time_s
+    if should_offload(Policy.ENERGY, local, remote):
+        assert remote.energy_j < local.energy_j
+    if should_offload(Policy.EXEC_TIME_AND_ENERGY, local, remote):
+        assert remote.time_s < local.time_s
+        assert remote.energy_j < local.energy_j
+    assert not should_offload(Policy.NONE, local, remote)
+
+
+@given(st.integers(min_value=1, max_value=64))
+def test_resume_time_monotone_in_contention(k):
+    assert resume_time(k + 1) > resume_time(k)
+    assert resume_time(1) == 0.300
+
+
+@given(st.floats(min_value=1.0, max_value=1e12))
+def test_size_bucket_monotone(n):
+    assert size_bucket(2 * n) >= size_bucket(n)
+
+
+@given(st.integers(min_value=1, max_value=257), st.integers(1, 8))
+def test_split_batch_roundtrip(n, k):
+    x = np.arange(n, dtype=np.int64)
+    shards = split_batch((x,), k)
+    merged = np.concatenate([s[0] for s in shards])
+    np.testing.assert_array_equal(merged, x)
+
+
+@given(st.integers(0, 100), st.integers(1, 1000), st.integers(1, 16))
+def test_split_range_covers_exactly(lo, width, k):
+    hi = lo + width
+    parts = split_range(lo, hi, k)
+    assert parts[0][0] == lo and parts[-1][1] == hi
+    for (a, b), (c, d) in zip(parts, parts[1:]):
+        assert b == c and a <= b and c <= d
+
+
+@settings(deadline=None)
+@given(st.lists(st.floats(min_value=-1e4, max_value=1e4,
+                          allow_nan=False, width=32),
+                min_size=1, max_size=64))
+def test_int8_quantization_error_bound(xs):
+    """|x - deq(quant(x))| <= scale/2 + eps elementwise."""
+    g = jnp.asarray(xs, jnp.float32)
+    q, scale = quantize_int8(g)
+    err = np.abs(np.asarray(g) - np.asarray(dequantize_int8(q, scale)))
+    assert err.max() <= float(scale) / 2 + 1e-5 + float(scale) * 1e-3
+
+
+@given(st.integers(2, 64), st.integers(1, 63))
+def test_spec_divisibility_fallback(dim_mult, off):
+    """spec_for never assigns a mesh axis that does not divide the dim."""
+    import jax
+    from repro.distributed.sharding import spec_for
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # model axis size 1 divides everything -> sharding allowed
+    spec = spec_for((dim_mult,), ("mlp",), mesh)
+    assert spec == jax.sharding.PartitionSpec("model") or \
+        spec == jax.sharding.PartitionSpec()
+
+
+@settings(deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 3))
+def test_energy_additivity(util10, bright16, secs):
+    """PowerTutor components are independent: total = sum of parts."""
+    from repro.core.energy import PhoneState, PowerTutorModel
+    m = PowerTutorModel()
+    st_ = PhoneState(cpu_util=util10 * 10.0, brightness=bright16 * 16)
+    total = sum(m.energy_j(st_, float(secs)).values())
+    parts = m.power_mw(st_)
+    assert total == sum(v * 1e-3 * secs for v in parts.values())

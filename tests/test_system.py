@@ -1,0 +1,156 @@
+"""End-to-end behaviour: the paper's headline claims, at test scale, plus
+fleet fault-tolerance paths."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core import (ExecutionController, FaultPlan, Policy,
+                        RemoteableMethod)
+from repro.data.pipeline import DataConfig
+from repro.launch.train import FleetTrainer
+from repro.launch.serve import Request, ServingEngine
+
+
+def _heavy_method():
+    def fn(n):
+        # compute-bound synthetic workload (N-queens-like): O(n * 4096^... )
+        x = jnp.ones((64, 64)) * (1.0 / n)
+
+        def body(i, acc):
+            return jnp.tanh(acc @ x + i)
+
+        return jax.lax.fori_loop(0, n * 50, body, x).sum()
+
+    return RemoteableMethod("heavy", fn, size_fn=lambda n: n)
+
+
+def test_offload_speedup_for_compute_bound_work():
+    """Paper §7.3: compute-bound work offloaded to the cloud is faster and
+    cheaper (orders of magnitude at app scale)."""
+    ec = ExecutionController(policy=Policy.EXEC_TIME, link="wifi-local")
+    rm = _heavy_method()
+    local = ec.execute(rm, 40, force="local")
+    remote = ec.execute(rm, 40, force="remote")
+    assert remote.time_s < local.time_s
+    assert remote.energy_j < local.energy_j
+    speedup = local.time_s / remote.time_s
+    assert speedup > 2.0                      # venue ratio >> transfer cost
+
+
+def test_biv_exists_and_grows_with_rtt():
+    """Paper Tables 3-4: a boundary input value exists; 3G BIV >= WiFi BIV."""
+    rm = _heavy_method()
+
+    def biv(link):
+        ec = ExecutionController(policy=Policy.EXEC_TIME, link=link)
+        for n in (1, 2, 4, 8, 16, 32, 64):
+            l = ec.execute(rm, n, force="local")
+            r = ec.execute(rm, n, force="remote")
+            if r.time_s < l.time_s:
+                return n
+        return 10 ** 9
+
+    b_wifi = biv("wifi-local")
+    b_3g = biv("3g")
+    assert b_wifi < 10 ** 9
+    assert b_3g >= b_wifi
+
+
+def test_parallelization_reduces_time(tmp_path):
+    """Paper §7.4: k clones reduce execution time for parallelizable work."""
+    from repro.core import split_batch
+    from repro.core.clones import CloneState
+    ec = ExecutionController(policy=Policy.EXEC_TIME, link="wifi-local")
+    # provision RUNNING clones: isolates the split/makespan logic from
+    # resume overhead (which legitimately dominates small tasks — §7.4)
+    ec.pool.provision("main", 8, state=CloneState.RUNNING)
+
+    def fn(xs):
+        # work proportional to the shard size (splittable workload)
+        def body(i, acc):
+            return jnp.tanh(acc + xs[i % xs.shape[0]])
+
+        return jax.lax.fori_loop(0, xs.shape[0] * 250, body, jnp.zeros(
+            xs.shape[1:])).sum()
+
+    rm = RemoteableMethod(
+        "par", fn, size_fn=lambda xs: xs.size,
+        split_fn=lambda args, k: split_batch(args, k),
+        merge_fn=lambda vs: sum(float(v) for v in vs))
+    x = jnp.ones((8, 128, 128))
+    t1 = ec.execute(rm, x, force="remote", n_clones=1).time_s
+    t4 = ec.execute(rm, x, force="remote", n_clones=4).time_s
+    assert t4 < t1
+
+
+def test_fleet_trainer_restart_from_fault(tmp_path):
+    cfg = reduced_config(get_config("smollm-360m"))
+    trainer = FleetTrainer(
+        cfg, steps_total=8, data_cfg=DataConfig(2, 16),
+        ckpt_dir=str(tmp_path), ckpt_every=2,
+        fault_plan=FaultPlan(fail_every=5))
+    trainer.run()
+    assert trainer.report.steps_done == 8
+    assert trainer.report.restarts >= 1        # hit the fault + recovered
+
+
+def test_fleet_trainer_resumes_from_checkpoint(tmp_path):
+    cfg = reduced_config(get_config("smollm-360m"))
+    t1 = FleetTrainer(cfg, steps_total=4, data_cfg=DataConfig(2, 16),
+                      ckpt_dir=str(tmp_path), ckpt_every=2)
+    s1 = t1.run()
+    t2 = FleetTrainer(cfg, steps_total=8, data_cfg=DataConfig(2, 16),
+                      ckpt_dir=str(tmp_path), ckpt_every=2)
+    t2.run()
+    assert t2.report.restarts == 1             # restored, not from scratch
+    assert t2.report.steps_done == 4           # only the remaining steps
+
+
+def test_training_loss_decreases():
+    cfg = reduced_config(get_config("smollm-360m"))
+    # overfit tiny fixed batch: loss must drop clearly
+    from repro.launch import steps as S
+    from repro.models import model
+    from repro.models.context import RunContext
+    from repro.optim import adamw
+    from repro.optim.adamw import OptConfig
+
+    ctx = RunContext()
+    step = jax.jit(S.build_train_step(
+        cfg, OptConfig(peak_lr=3e-3, warmup_steps=5, decay_steps=100), ctx))
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    state = {"params": params, "opt": adamw.init(params)}
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (4, 16), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, axis=1)}
+    losses = []
+    for _ in range(30):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5
+
+
+def test_serving_engine_end_to_end():
+    cfg = reduced_config(get_config("smollm-360m"))
+    eng = ServingEngine(cfg, policy=Policy.EXEC_TIME, capacity=64)
+    reqs = [Request(i, np.arange(6, dtype=np.int32) + i, 4)
+            for i in range(3)]
+    comps = eng.serve_batch(reqs)
+    assert len(comps) == 3
+    assert all(len(c.tokens) == 4 for c in comps)
+    assert eng.stats["requests"] == 3
+
+
+def test_serving_deterministic_across_placements():
+    """Local and offloaded execution return identical tokens (correctness
+    of transparent offloading — the paper's §4.4 contract)."""
+    cfg = reduced_config(get_config("smollm-360m"))
+    eng = ServingEngine(cfg, capacity=64)
+    reqs = [Request(0, np.arange(8, dtype=np.int32), 4)]
+    a = eng.serve_batch(reqs, force="local")[0].tokens
+    b = eng.serve_batch(reqs, force="remote")[0].tokens
+    assert a == b
