@@ -1,0 +1,101 @@
+"""Serving under offered load: the Client Handler's elasticity, measured.
+
+Sweeps Poisson arrival rates against the event-driven continuous-batching
+``ClientHandler`` (paper §5.2-§5.3) on the virtual timeline and reports,
+per load level: p50/p99 request latency, p50 time-to-first-token,
+throughput (tokens/s), client-side shed rate, clone-pool activity
+(resumes/boots/pauses), busy energy, and the autoscaler's peak secondary
+count.  The final high-load level must show the autoscaler provisioning
+multiple secondaries; every level ends with an idle drain past the pause
+TTL so the elastic shrink is visible too.
+
+    PYTHONPATH=src python benchmarks/serving_load.py
+    PYTHONPATH=src python benchmarks/serving_load.py --rates 1 4 16
+
+All times are virtual-clock seconds (venue-model execution + modeled
+transfer + provisioning); nothing here sleeps for real.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config, reduced_config            # noqa: E402
+from repro.core.clones import PAUSE_IDLE_TTL                    # noqa: E402
+from repro.core.scheduler import poisson_arrivals               # noqa: E402
+from repro.launch.serve import ClientHandler, LMBackend         # noqa: E402
+
+
+def run_sweep(arch: str = "smollm-360m", rates=(0.5, 4.0, 32.0),
+              n_requests: int = 32, max_batch: int = 4,
+              max_secondaries: int = 6, new_tokens: int = 6,
+              prompt_len: int = 6):
+    cfg = reduced_config(get_config(arch))
+    backend = LMBackend(cfg, capacity=32)
+    header = (f"{'rate_rps':>8s} {'served':>6s} {'shed':>5s} "
+              f"{'p50_s':>8s} {'p99_s':>8s} {'ttft50_s':>8s} "
+              f"{'tok/s':>7s} {'peak_2nd':>8s} {'resumes':>7s} "
+              f"{'pauses':>6s} {'busy_J':>9s}")
+    lines = [header]
+    reports = []
+    for rate in rates:
+        handler = ClientHandler(backend, max_batch=max_batch,
+                                max_secondaries=max_secondaries,
+                                prompt_pad=prompt_len)
+        reqs = poisson_arrivals(rate, n_requests, seed=0,
+                                prompt_len=prompt_len,
+                                vocab=cfg.vocab_size,
+                                max_new_tokens=new_tokens)
+        report = handler.run(reqs, drain_idle_s=PAUSE_IDLE_TTL + 5.0)
+        still_running = len(handler.pool.running_secondaries())
+        lines.append(
+            f"{rate:>8.2f} {len(report.completions):>6d} "
+            f"{report.rejected:>5d} {report.p50_latency_s:>8.3f} "
+            f"{report.p99_latency_s:>8.3f} {report.p50_ttft_s:>8.3f} "
+            f"{report.tokens_per_s:>7.2f} {report.peak_secondaries:>8d} "
+            f"{report.pool_stats['resumes']:>7d} "
+            f"{report.pool_stats['pauses']:>6d} "
+            f"{report.busy_energy_j:>9.2f}")
+        reports.append((rate, report, still_running))
+    return lines, reports
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--rates", type=float, nargs="+",
+                    default=[0.5, 4.0, 32.0])
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--secondaries", type=int, default=6)
+    ap.add_argument("--new-tokens", type=int, default=6)
+    args = ap.parse_args()
+
+    lines, reports = run_sweep(args.arch, tuple(args.rates), args.requests,
+                               args.batch, args.secondaries, args.new_tokens)
+    print("\n".join(lines))
+
+    hi_rate, hi, still_running = reports[-1]
+    print(f"\nhigh load ({hi_rate} req/s): autoscaler peaked at "
+          f"{hi.peak_secondaries} secondaries "
+          f"({hi.pool_stats['resumes']} resumes, "
+          f"{hi.pool_stats['boots']} boots); after the idle drain "
+          f"{still_running} remain running "
+          f"({hi.pool_stats['pauses']} TTL pauses).")
+    # acceptance check — only meaningful when the offered load is actually
+    # high and the cap allows elasticity
+    if args.secondaries >= 2 and hi_rate >= 2.0 and args.requests >= 8:
+        assert hi.peak_secondaries >= 2, \
+            "autoscaler failed to provision secondaries under high load"
+    assert still_running == 0, "idle TTL failed to pause the secondaries"
+    lo = reports[0][1]
+    print(f"latency under load: p99 {lo.p99_latency_s:.3f}s @ "
+          f"{reports[0][0]} req/s -> {hi.p99_latency_s:.3f}s @ "
+          f"{hi_rate} req/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,8 +10,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np                                        # noqa: E402
 
 from repro.configs import get_config, reduced_config      # noqa: E402
-from repro.core import Policy                             # noqa: E402
-from repro.launch.serve import Request, ServingEngine     # noqa: E402
+from repro.core import Policy, poisson_arrivals           # noqa: E402
+from repro.launch.serve import (ClientHandler, LMBackend,  # noqa: E402
+                                Request, ServingEngine)
 
 
 def main() -> None:
@@ -39,6 +40,19 @@ def main() -> None:
 
     print("\nstats:", eng.stats)
     print("pool:", eng.ec.pool.stats)
+
+    print("\n== event-driven Client Handler: continuous batching under "
+          "Poisson load (paper §5.2-5.3) ==")
+    backend = LMBackend(cfg, capacity=64)
+    handler = ClientHandler(backend, max_batch=4, max_secondaries=4,
+                            prompt_pad=12)
+    reqs = poisson_arrivals(8.0, 16, prompt_len=12, vocab=cfg.vocab_size,
+                            max_new_tokens=6)
+    report = handler.run(reqs, drain_idle_s=35.0)
+    print(report.summary())
+    print("pool:", report.pool_stats)
+    print("secondaries now running:",
+          len(handler.pool.running_secondaries()), "(paused after idle TTL)")
 
 
 if __name__ == "__main__":

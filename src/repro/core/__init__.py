@@ -1,7 +1,10 @@
 """ThinkAir core: profile-driven computation offloading for JAX workloads."""
+from repro.core.clock import (BaseClock, Event, FunctionClock, SystemClock,
+                              VirtualClock, ensure_clock)
 from repro.core.clones import (CLONE_TYPES, Clone, ClonePool, CloneState,
                                resume_time)
 from repro.core.controller import ExecutionController, ExecutionResult
+from repro.core.dispatch import CloneTask, Dispatcher
 from repro.core.energy import (PhoneState, PowerTutorModel, TpuCoeffs,
                                TpuEnergyModel)
 from repro.core.faults import FaultPlan, ReconnectManager, VenueFailure
@@ -12,16 +15,23 @@ from repro.core.profilers import (DeviceProfiler, NetworkProfiler,
                                   ProgramProfiler, size_bucket)
 from repro.core.remoteable import (REGISTRY, RemoteableMethod, remote,
                                    set_default_controller)
+from repro.core.scheduler import (AdmissionQueue, QueueAutoscaler,
+                                  ServeCompletion, ServeRequest,
+                                  poisson_arrivals)
 from repro.core.venues import (LINKS, Venue, VenueSpec, pytree_bytes,
                                transfer_time)
 
 __all__ = [
+    "BaseClock", "Event", "FunctionClock", "SystemClock", "VirtualClock",
+    "ensure_clock",
     "CLONE_TYPES", "Clone", "ClonePool", "CloneState", "resume_time",
-    "ExecutionController", "ExecutionResult", "PhoneState",
-    "PowerTutorModel", "TpuCoeffs", "TpuEnergyModel", "FaultPlan",
-    "ReconnectManager", "VenueFailure", "ParallelResult", "Parallelizer",
-    "split_batch", "split_range", "Policy", "Prediction", "should_offload",
-    "DeviceProfiler", "NetworkProfiler", "ProgramProfiler", "size_bucket",
-    "REGISTRY", "RemoteableMethod", "remote", "set_default_controller",
+    "ExecutionController", "ExecutionResult", "CloneTask", "Dispatcher",
+    "PhoneState", "PowerTutorModel", "TpuCoeffs", "TpuEnergyModel",
+    "FaultPlan", "ReconnectManager", "VenueFailure", "ParallelResult",
+    "Parallelizer", "split_batch", "split_range", "Policy", "Prediction",
+    "should_offload", "DeviceProfiler", "NetworkProfiler", "ProgramProfiler",
+    "size_bucket", "REGISTRY", "RemoteableMethod", "remote",
+    "set_default_controller", "AdmissionQueue", "QueueAutoscaler",
+    "ServeCompletion", "ServeRequest", "poisson_arrivals",
     "LINKS", "Venue", "VenueSpec", "pytree_bytes", "transfer_time",
 ]

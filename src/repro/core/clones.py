@@ -16,9 +16,9 @@ from __future__ import annotations
 import dataclasses
 import enum
 import itertools
-import time
 from typing import Callable, Dict, List, Optional
 
+from repro.core.clock import ensure_clock
 from repro.core.venues import LINKS, VenueSpec, make_cloud_vm, make_tpu_venue
 
 
@@ -91,7 +91,9 @@ class ClonePool:
     def __init__(self, link_name: str = "wifi-local",
                  clock: Optional[Callable[[], float]] = None,
                  max_clones: int = 64, tpu: bool = False):
-        self.clock = clock or time.monotonic
+        # one injected timeline: a clock object, a bare callable (tests), or
+        # None for a fresh deterministic VirtualClock
+        self.clock = ensure_clock(clock)
         self.link = LINKS[link_name]
         self.max_clones = max_clones
         self.tpu = tpu
@@ -169,7 +171,7 @@ class ClonePool:
         if to_boot:
             cost = max(cost, BOOT_SECONDS)
             self.stats["boots"] += len(to_boot)
-            self.stats["boot_seconds"] += BOOT_SECONDS
+            self.stats["boot_seconds"] += BOOT_SECONDS * len(to_boot)
         now = self.clock()
         out = ready + to_resume + to_boot
         for c in out:
@@ -208,6 +210,66 @@ class ClonePool:
                 self.pause(c)
             elif c.state is CloneState.PAUSED and idle > OFF_IDLE_TTL:
                 self.power_off(c)
+
+    # ------------------------------------------------------------ elasticity
+    def running_secondaries(self, type_name: Optional[str] = None
+                            ) -> List[Clone]:
+        return [c for c in self.clones
+                if not c.is_primary and c.state is CloneState.RUNNING
+                and (type_name is None or c.ctype.name == type_name)]
+
+    def ensure_secondaries(self, type_name: str, n: int
+                           ) -> tuple:
+        """Scale up: resume/boot until >= n secondaries of this type RUN.
+
+        Unlike :meth:`acquire` the clones are left *idle* (not busy) — this
+        is the Client Handler's capacity knob, not a per-request grab.
+        Returns (newly_activated_clones, per_clone_ready_seconds): a resumed
+        clone is usable after the (contended) resume time, a booted one only
+        after the full boot — they must not share one aggregate delay.
+        """
+        have = len(self.running_secondaries(type_name))
+        if have >= n:
+            return [], []
+        need = n - have
+        to_resume = [c for c in self.clones
+                     if not c.is_primary and c.ctype.name == type_name
+                     and c.state is CloneState.PAUSED][:need]
+        n_boot = need - len(to_resume)
+        to_boot = [c for c in self.clones
+                   if not c.is_primary and c.ctype.name == type_name
+                   and c.state is CloneState.POWERED_OFF][:n_boot]
+        while len(to_resume) + len(to_boot) < need:
+            if len(self.clones) >= self.max_clones:
+                break
+            to_boot.append(self._new_clone(type_name))
+        costs = []
+        if to_resume:
+            dt = resume_time(len(to_resume))
+            costs += [dt] * len(to_resume)
+            self.stats["resumes"] += len(to_resume)
+            self.stats["resume_seconds"] += dt
+        if to_boot:
+            costs += [BOOT_SECONDS] * len(to_boot)
+            self.stats["boots"] += len(to_boot)
+            self.stats["boot_seconds"] += BOOT_SECONDS * len(to_boot)
+        now = self.clock()
+        out = to_resume + to_boot
+        for c in out:
+            c.state = CloneState.RUNNING
+            c.last_used = now
+        return out, costs
+
+    def pause_surplus(self, keep: int, type_name: Optional[str] = None
+                      ) -> int:
+        """Scale down: pause idle running secondaries beyond ``keep``."""
+        idle = [c for c in self.running_secondaries(type_name)
+                if not c.busy]
+        paused = 0
+        for c in idle[max(0, keep):]:
+            self.pause(c)
+            paused += 1
+        return paused
 
     # ------------------------------------------------------------ escalation
     def escalate_type(self, type_name: str) -> Optional[str]:

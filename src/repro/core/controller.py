@@ -16,7 +16,9 @@ import dataclasses
 from typing import Any, Dict, Optional
 
 from repro.core import venues as V
+from repro.core.clock import VirtualClock, ensure_clock
 from repro.core.clones import ClonePool, CloneState
+from repro.core.dispatch import Dispatcher
 from repro.core.energy import PowerTutorModel
 from repro.core.faults import FaultPlan, ReconnectManager, VenueFailure
 from repro.core.parallel import Parallelizer
@@ -52,9 +54,19 @@ class ExecutionController:
                  pool: Optional[ClonePool] = None,
                  clone_type: str = "main",
                  fault_plan: Optional[FaultPlan] = None,
-                 phone: Optional[V.VenueSpec] = None):
+                 phone: Optional[V.VenueSpec] = None,
+                 clock: Optional[VirtualClock] = None):
+        # decision layer (this class) + execution layer (Dispatcher) share
+        # one virtual timeline; a supplied pool donates its clock when it
+        # already has a virtual one
+        if clock is not None:
+            self.clock = ensure_clock(clock)
+        elif pool is not None and getattr(pool.clock, "virtual", False):
+            self.clock = pool.clock
+        else:
+            self.clock = VirtualClock()
         self.policy = policy
-        self.pool = pool or ClonePool(link_name=link)
+        self.pool = pool or ClonePool(link_name=link, clock=self.clock)
         self.clone_type = clone_type
         self.device = DeviceProfiler()
         self.device.observe(conn_subtype=link,
@@ -65,7 +77,8 @@ class ExecutionController:
         self.phone = V.Venue(phone or V.make_phone())
         self.faults = fault_plan or FaultPlan()
         self.reconnect = ReconnectManager()
-        self.parallelizer = Parallelizer(self.pool)
+        self.dispatcher = Dispatcher(self.pool, self.clock)
+        self.parallelizer = Parallelizer(self.pool, clock=self.clock)
         self.decisions = {"local": 0, "remote": 0, "fallback": 0,
                           "escalations": 0}
 
@@ -180,6 +193,7 @@ class ExecutionController:
                    **kw) -> ExecutionResult:
         self.decisions["local"] += 1
         value, t = self.phone.execute(rm.callable(), *args, **kw)
+        self.clock.sleep(t)                 # charge to the shared timeline
         energy = self.phone_energy.local_exec_energy(t)
         if record:
             self.program.record(rm.name, skey, "phone", exec_time=t,
@@ -196,6 +210,7 @@ class ExecutionController:
             return self._run_parallel(rm, skey, tx, clone_type, n_clones,
                                       *args, **kw)
 
+        t0 = self.clock.now()
         escalations = 0
         ctype = clone_type
         mem_need = rm.mem_fn(*args, **kw) if rm.mem_fn else 0
@@ -215,14 +230,23 @@ class ExecutionController:
             escalations += 1
         self.decisions["escalations"] += escalations
 
-        value, t_exec = V.Venue(clone.spec).execute(rm.callable(), *args, **kw)
-        rx = V.pytree_bytes(value)
+        # upload, then provision + execute as one dispatched task whose
+        # completion is an event on the timeline
         t_tx = self.network.transfer_time(tx)
+        self.clock.sleep(t_tx)
+        fn = rm.callable()
+        call = (lambda *a: fn(*a, **kw)) if kw else fn
+        task = self.dispatcher.submit(clone, call, args,
+                                      extra_delay=provision_s, label=rm.name)
+        self.dispatcher.wait([task])
+        value, t_exec = task.value, task.venue_seconds
+        rx = V.pytree_bytes(value)
         t_rx = self.network.transfer_time(rx)
+        self.clock.sleep(t_rx)
         self.network.observe_transfer(tx + rx, t_tx + t_rx)
         self.network.observe_rtt(self.network.rtt())
         overhead = t_tx + t_rx + provision_s
-        t_total = overhead + t_exec
+        t_total = self.clock.now() - t0     # == overhead + t_exec
         energy = self.phone_energy.offload_energy(
             t_total - (t_tx + t_rx), t_tx + t_rx, self.network.active)
         self.program.record(rm.name, skey, "cloud", exec_time=t_exec,
@@ -235,14 +259,21 @@ class ExecutionController:
 
     def _run_parallel(self, rm, skey, tx: int, clone_type: str, k: int,
                       *args, **kw) -> ExecutionResult:
+        t0 = self.clock.now()
         shards = rm.split_fn(args, k)
+        t_tx = self.network.transfer_time(tx)
+        self.clock.sleep(t_tx)
         pres = self.parallelizer.run(rm.callable(), shards,
                                      clone_type=clone_type, merge=rm.merge_fn)
         rx = V.pytree_bytes(pres.value)
-        t_tx = self.network.transfer_time(tx)
         t_rx = self.network.transfer_time(rx)
+        self.clock.sleep(t_rx)
+        # feed the network profiler exactly like the single-clone path, so
+        # multi-clone runs keep bandwidth/RTT history fresh
+        self.network.observe_transfer(tx + rx, t_tx + t_rx)
+        self.network.observe_rtt(self.network.rtt())
         overhead = t_tx + t_rx + pres.resume_s + pres.sync_s
-        t_total = t_tx + t_rx + pres.makespan_s
+        t_total = self.clock.now() - t0     # == t_tx + makespan + t_rx
         energy = self.phone_energy.offload_energy(
             t_total - (t_tx + t_rx), t_tx + t_rx, self.network.active)
         self.program.record(rm.name, skey, "cloud",

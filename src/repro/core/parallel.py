@@ -1,14 +1,19 @@
 """Parallelization across clones (paper §7.4) + straggler mitigation.
 
-The primary clone acts as a transparent proxy for k secondaries: shards are
-dispatched, per-shard venue times collected, and the parallel makespan is
-    resume(k) + max_i(shard_i) + sync(k) + merge
+The primary clone acts as a transparent proxy for k secondaries.  Since the
+event-driven refactor, shards are *submitted* onto clones through the
+:class:`~repro.core.dispatch.Dispatcher` and their completions are events
+on the shared :class:`~repro.core.clock.VirtualClock` — k shards genuinely
+overlap, so the parallel makespan observed on the timeline is
+    resume(k) + max_i(shard_i) + sync(k)
 exactly mirroring the paper's accounting ("the resume time is included in
 the overhead time, which in turn is included in the execution time").
 
-Straggler mitigation (fleet requirement, DESIGN.md §8): shards whose venue
-time exceeds ``straggler_factor x median`` are re-dispatched to a spare
-clone; the effective shard time is the better of (original, detect + rerun).
+Straggler mitigation (fleet requirement, DESIGN.md §8) is now detected *at
+event time*: once half the shards have completed, a deadline of
+``straggler_factor x median(completed)`` is placed on the timeline; any
+shard still pending when the deadline fires is re-dispatched to a spare
+clone, and its effective completion is the earlier of (original, rescue).
 """
 from __future__ import annotations
 
@@ -17,7 +22,9 @@ from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.clock import VirtualClock, ensure_clock
 from repro.core.clones import ClonePool, resume_time
+from repro.core.dispatch import Dispatcher
 
 # Per-secondary synchronization cost charged by the primary proxy (paper:
 # "incurring extra synchronization overheads"; calibrated so that 8-queens
@@ -57,58 +64,90 @@ def split_range(lo: int, hi: int, k: int) -> List[tuple]:
 
 class Parallelizer:
     def __init__(self, pool: ClonePool, straggler_factor: float = 2.0,
-                 sync_seconds: float = SYNC_SECONDS_PER_CLONE):
+                 sync_seconds: float = SYNC_SECONDS_PER_CLONE,
+                 clock: Optional[VirtualClock] = None):
         self.pool = pool
         self.straggler_factor = straggler_factor
         self.sync_seconds = sync_seconds
+        if clock is not None:
+            self.clock = ensure_clock(clock)
+        elif getattr(pool.clock, "virtual", False):
+            self.clock = pool.clock          # share the pool's timeline
+        else:
+            self.clock = VirtualClock()      # private deterministic timeline
+        self.dispatcher = Dispatcher(self.pool, self.clock)
 
     def run(self, fn: Callable, shards: Sequence[tuple], *,
             clone_type: str = "main",
             merge: Callable = None,
             shard_delays: Optional[Sequence[float]] = None,
             venue_executor: Callable = None) -> ParallelResult:
-        """Execute ``fn(*shard)`` across len(shards) clones.
+        """Execute ``fn(*shard)`` across len(shards) clones, overlapped.
 
         ``venue_executor(clone, fn, shard) -> (value, venue_seconds)``
         defaults to running on the clone's venue spec.  ``shard_delays``
         injects extra venue-seconds per shard (tests / straggler demos).
         """
         k = len(shards)
+        clock = self.clock
+        t0 = clock.now()
         clones, provision_s = self.pool.acquire(clone_type, n=k)
+        exec_start = t0 + provision_s
         if venue_executor is None:
             from repro.core.venues import Venue
 
             def venue_executor(clone, f, shard):
                 return Venue(clone.spec).execute(f, *shard)
 
-        values, times = [], []
-        for i, (clone, shard) in enumerate(zip(clones, shards)):
-            val, dt = venue_executor(clone, fn, shard)
-            if shard_delays is not None:
-                dt += shard_delays[i]
-            values.append(val)
-            times.append(dt)
+        def make_executor(i):
+            def ex(clone, f, args):
+                val, dt = venue_executor(clone, f, args)
+                if shard_delays is not None:
+                    dt += shard_delays[i]
+                return val, dt
+            return ex
 
-        # ---- straggler detection + re-dispatch ----
+        tasks = [self.dispatcher.submit(clone, fn, shard,
+                                        executor=make_executor(i),
+                                        extra_delay=provision_s,
+                                        label=f"shard{i}")
+                 for i, (clone, shard) in enumerate(zip(clones, shards))]
+        done_at = [t.done_at for t in tasks]       # effective completion
+        values = [t.value for t in tasks]
+
+        # ---- straggler detection + re-dispatch, at event time ----
         redispatches = 0
-        med = float(np.median(times))
-        deadline = self.straggler_factor * max(med, 1e-9)
-        for i, t in enumerate(times):
-            if t > deadline and k > 1:
-                spare, spare_cost = self.pool.acquire(clone_type, n=1,
-                                                      exclude_primary=True)
-                val, fresh = venue_executor(spare[0], fn, shards[i])
-                rerun_total = deadline + spare_cost + fresh
-                if rerun_total < t:
-                    values[i] = val
-                    times[i] = rerun_total
-                    redispatches += 1
-                self.pool.release(spare)
+        spares = []
+        if k > 1:
+            # advance until half the shards have completed, then set the
+            # deadline from the median of what the timeline has shown so far
+            order = sorted(range(k), key=lambda i: done_at[i])
+            half = order[:(k + 1) // 2]
+            clock.advance_to(max(done_at[i] for i in half))
+            med = float(np.median([done_at[i] - exec_start for i in half]))
+            deadline_t = exec_start + self.straggler_factor * max(med, 1e-9)
+            stragglers = [i for i in order[(k + 1) // 2:]
+                          if done_at[i] > max(deadline_t, clock.now())]
+            if stragglers:
+                clock.advance_to(max(deadline_t, clock.now()))
+                for i in stragglers:
+                    spare, spare_cost = self.pool.acquire(
+                        clone_type, n=1, exclude_primary=True)
+                    val, fresh = venue_executor(spare[0], fn, shards[i])
+                    rescue_done = clock.now() + spare_cost + fresh
+                    if rescue_done < done_at[i]:
+                        values[i] = val
+                        done_at[i] = rescue_done
+                        redispatches += 1
+                    spares.extend(spare)
 
+        clock.advance_to(max(max(done_at), clock.now()))
         sync_s = self.sync_seconds * max(0, k - 1)
-        makespan = provision_s + max(times) + sync_s
+        clock.sleep(sync_s)
+        shard_times = [t - exec_start for t in done_at]
+        makespan = clock.now() - t0                # provision+max(shard)+sync
         merged = merge(values) if merge is not None else values
-        self.pool.release(clones)
+        self.pool.release(clones + spares)
         self.pool.reap_idle()
-        return ParallelResult(merged, makespan, times, provision_s, sync_s,
-                              redispatches, k)
+        return ParallelResult(merged, makespan, shard_times, provision_s,
+                              sync_s, redispatches, k)

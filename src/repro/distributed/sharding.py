@@ -51,6 +51,21 @@ ZERO_SP_RULES: Dict[str, object] = dict(
 )
 
 
+def abstract_mesh(axis_sizes: Sequence[int], axis_names: Sequence[str]):
+    """Version-portable ``jax.sharding.AbstractMesh`` constructor.
+
+    JAX changed the signature across releases: older versions take
+    ``(axis_sizes, axis_names)``, 0.4.36+ takes a single tuple of
+    ``(name, size)`` pairs.  ``spec_for`` only needs ``mesh.shape``
+    (name -> size), which both spellings provide.
+    """
+    sizes, names = tuple(axis_sizes), tuple(axis_names)
+    try:
+        return jax.sharding.AbstractMesh(tuple(zip(names, sizes)))
+    except TypeError:
+        return jax.sharding.AbstractMesh(sizes, names)
+
+
 # serve profile (§Perf H2b): params resident (model-axis TP dims only, no
 # FSDP dim) — eliminates per-step weight gathers on the decode path
 SERVE_RULES: Dict[str, object] = dict(

@@ -1,19 +1,44 @@
-"""Serving driver: ThinkAir placement / escalation / parallelization for LM
-inference.
+"""Serving stack: ThinkAir's Client Handler for LM inference.
 
-Each request batch is a remoteable method invocation: the ExecutionController
-decides placement (local small venue vs cloud clones) per batch from profiled
-history; long-context requests whose KV-cache working set exceeds the default
-clone's memory are escalated to a bigger clone type (the paper's
+Two layers share one model binding (``LMBackend``):
+
+``ServingEngine`` — the batch-at-a-time path (seed behaviour).  Each request
+batch is a remoteable method invocation: the ExecutionController decides
+placement (local small venue vs cloud clones) per batch from profiled
+history; long-context requests whose KV-cache working set exceeds the
+default clone's memory are escalated to a bigger clone type (the paper's
 OutOfMemoryError path); prefill for large batches can be split across k
 clones (the paper's parallelization path).
+
+``ClientHandler`` — the event-driven continuous-batching server (paper
+§5.2-§5.3, the tentpole of the Client Handler refactor).  Requests arrive
+on a shared :class:`~repro.core.clock.VirtualClock`, pass admission control
+(:class:`~repro.core.scheduler.AdmissionQueue`), and are formed into
+*cohorts* of up to ``max_batch`` requests.  Each cohort's prefill and every
+decode step is a non-blocking :class:`~repro.core.dispatch.Dispatcher` task
+on one clone, so cohorts on different clones genuinely overlap on the
+timeline.  Requests **leave** their cohort at decode-step granularity the
+moment they hit their token budget (the cohort's KV cache shrinks in
+place), and new arrivals **enter** service at the next step boundary on any
+free clone — they never wait for a whole batch to drain.  A queue-depth
+driven :class:`~repro.core.scheduler.QueueAutoscaler` provisions and
+TTL-pauses secondaries through the ClonePool lifecycle, which makes the
+paper's elasticity claim measurable as p50/p99 latency and tokens/s under
+Poisson offered load (see ``benchmarks/serving_load.py``).
+
+Cohort fusion note: the decode cache keeps a single shared position cursor,
+so only requests admitted at the same step boundary are fused into one
+batched decode call; a late arrival starts its own cohort rather than
+joining mid-flight (per-slot cursors / paged caches are future work).
+Weights are resident on the clones (serving fleet), so per-request network
+cost is prompt/token traffic only — unlike the offload path, which ships
+the method's whole state.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,8 +46,13 @@ import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.core import (ClonePool, ExecutionController, Policy,
-                        RemoteableMethod, split_batch)
-from repro.core.venues import pytree_bytes
+                        RemoteableMethod)
+from repro.core.clock import VirtualClock
+from repro.core.dispatch import Dispatcher
+from repro.core.scheduler import (AdmissionQueue, QueueAutoscaler,
+                                  ServeCompletion, ServeRequest,
+                                  poisson_arrivals)
+from repro.core.venues import Venue, pytree_bytes, transfer_time
 from repro.launch import steps as S
 from repro.models import model
 
@@ -44,23 +74,18 @@ class Completion:
     escalations: int
 
 
-class ServingEngine:
-    """Batched prefill + decode with ThinkAir placement decisions."""
+class LMBackend:
+    """Model binding: params + jitted prefill/decode + cache batch surgery."""
 
-    def __init__(self, cfg, *, policy: Policy = Policy.EXEC_TIME,
-                 link: str = "wifi-local", max_batch: int = 8,
-                 capacity: int = 256):
+    def __init__(self, cfg, capacity: int = 256):
         self.cfg = cfg
-        self.max_batch = max_batch
         self.capacity = capacity
         self.ctx = S.make_context(None,
                                   moe_capacity_factor=(
                                       cfg.n_experts / cfg.top_k
                                       if cfg.is_moe else 1.25))
         self.params = model.init(cfg, jax.random.PRNGKey(0))
-        self.ec = ExecutionController(policy=policy, link=link)
-        self.ec.pool.provision("main", 8)       # paused secondaries (paper)
-        cap = self.capacity
+        cap = capacity
 
         def prefill_fn(params, tokens):
             logits, cache = model.forward(cfg, params, {"tokens": tokens},
@@ -73,17 +98,59 @@ class ServingEngine:
                                               pos, self.ctx)
             return jnp.argmax(logits, -1), cache
 
+        self.prefill = jax.jit(prefill_fn)
+        self.decode = jax.jit(decode_fn)
+        # locate each cache leaf's batch axis by diffing abstract shapes
+        a1 = model.abstract_cache(cfg, 1, cap)
+        a2 = model.abstract_cache(cfg, 2, cap)
+
+        def batch_axis(x, y):
+            diff = [i for i, (p, q) in enumerate(zip(x.shape, y.shape))
+                    if p != q]
+            return diff[0] if diff else None
+
+        self._batch_axis = jax.tree.map(batch_axis, a1, a2)
+
+    def cache_mem_bytes(self, batch: int) -> int:
+        return pytree_bytes(model.abstract_cache(self.cfg, batch,
+                                                 self.capacity))
+
+    def cache_take(self, cache, keep_idx) -> Dict:
+        """Shrink a cohort cache to the surviving batch rows."""
+        idx = jnp.asarray(np.asarray(keep_idx, np.int32))
+
+        def take(leaf, ax):
+            return leaf if ax is None else jnp.take(leaf, idx, axis=ax)
+
+        return jax.tree.map(take, cache, self._batch_axis)
+
+
+class ServingEngine:
+    """Batched prefill + decode with ThinkAir placement decisions."""
+
+    def __init__(self, cfg, *, policy: Policy = Policy.EXEC_TIME,
+                 link: str = "wifi-local", max_batch: int = 8,
+                 capacity: int = 256, backend: Optional[LMBackend] = None):
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.capacity = capacity
+        self.backend = backend or LMBackend(cfg, capacity)
+        self.params = self.backend.params
+        self.ec = ExecutionController(policy=policy, link=link)
+        self.ec.pool.provision("main", 8)       # paused secondaries (paper)
+        backend_ = self.backend
+
         # KV working set drives escalation: bytes ~ cache size
         def prefill_mem(params, tokens):
-            b = tokens.shape[0]
-            return pytree_bytes(model.abstract_cache(cfg, b, cap))
+            return backend_.cache_mem_bytes(tokens.shape[0])
 
         self.rm_prefill = RemoteableMethod(
-            "serve_prefill", prefill_fn, size_fn=lambda p, t: t.size,
+            "serve_prefill", self.backend.prefill, jit=False,
+            size_fn=lambda p, t: t.size,
             split_fn=self._split_prefill, merge_fn=self._merge_prefill,
             mem_fn=prefill_mem)
         self.rm_decode = RemoteableMethod(
-            "serve_decode", decode_fn,
+            "serve_decode", self.backend.decode, jit=False,
             size_fn=lambda p, c, t, pos: t.shape[0])
         self.stats = {"requests": 0, "batches": 0, "offloaded": 0,
                       "escalations": 0}
@@ -103,7 +170,6 @@ class ServingEngine:
 
     def serve_batch(self, reqs: List[Request], *, n_clones: int = 1,
                     force: Optional[str] = None) -> List[Completion]:
-        t0 = time.time()
         plen = max(len(r.prompt) for r in reqs)
         toks = np.zeros((len(reqs), plen), np.int32)
         for i, r in enumerate(reqs):
@@ -117,6 +183,9 @@ class ServingEngine:
         tok = next_tok[:, None]
         total_time = res_p.time_s
         decode_venue = "-"
+        # per-batch aggregation over prefill AND every decode step
+        offloaded = int(res_p.offloaded)
+        escalations = res_p.escalations
         for step_i in range(steps_needed):
             for i in range(len(reqs)):
                 out[i].append(int(tok[i, 0]))
@@ -127,14 +196,258 @@ class ServingEngine:
             tok = tok[:, None]
             total_time += res_d.time_s
             decode_venue = res_d.venue
+            offloaded += int(res_d.offloaded)
+            escalations += res_d.escalations
         self.stats["requests"] += len(reqs)
         self.stats["batches"] += 1
-        self.stats["offloaded"] += int(res_p.offloaded)
-        self.stats["escalations"] += res_p.escalations
-        wall = time.time() - t0
+        self.stats["offloaded"] += offloaded
+        self.stats["escalations"] += escalations
         return [Completion(r.rid, out[i], res_p.venue, decode_venue,
-                           total_time, res_p.escalations)
+                           total_time, escalations)
                 for i, r in enumerate(reqs)]
+
+
+# --------------------------------------------------------------------------- #
+# Event-driven Client Handler (continuous batching + elastic clones)
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class _Cohort:
+    """Requests admitted at one step boundary, decoding in lockstep."""
+
+    reqs: List[ServeRequest]
+    clone: object
+    plen: int
+    outs: List[List[int]] = dataclasses.field(default_factory=list)
+    first_token_t: List[float] = dataclasses.field(default_factory=list)
+    cache: object = None
+    tok: object = None
+    step: int = 0
+    phase: str = "prefill"
+
+
+@dataclasses.dataclass
+class ServeReport:
+    completions: List[ServeCompletion]
+    accepted: int
+    rejected: int
+    makespan_s: float
+    p50_latency_s: float
+    p99_latency_s: float
+    p50_ttft_s: float
+    tokens_per_s: float
+    peak_secondaries: int
+    scale_ups: int
+    busy_energy_j: float
+    pool_stats: Dict
+    clone_samples: List[tuple]
+
+    def summary(self) -> str:
+        return (f"served={len(self.completions)} shed={self.rejected} "
+                f"p50={self.p50_latency_s:.3f}s p99={self.p99_latency_s:.3f}s "
+                f"tok/s={self.tokens_per_s:.1f} "
+                f"peak_secondaries={self.peak_secondaries}")
+
+
+class ClientHandler:
+    """Event-driven continuous-batching server on an elastic clone pool."""
+
+    def __init__(self, backend, *, link: str = "wifi-local",
+                 clone_type: str = "main", max_batch: int = 4,
+                 queue_depth: int = 64, max_secondaries: int = 8,
+                 min_secondaries: int = 0, work_per_clone: int = 1,
+                 prompt_pad: int = 8, use_primary: bool = True,
+                 provision_paused: bool = True,
+                 executor: Optional[Callable] = None,
+                 pool: Optional[ClonePool] = None,
+                 clock: Optional[VirtualClock] = None):
+        self.backend = backend
+        # one timeline: adopt a supplied pool's clock (TTL accounting and
+        # dispatch must share it), otherwise build pool around ours
+        if pool is not None:
+            if not getattr(pool.clock, "virtual", False):
+                raise TypeError("ClientHandler needs a pool on a "
+                                "VirtualClock")
+            if clock is not None and clock is not pool.clock:
+                raise ValueError("pool and clock disagree — pass one "
+                                 "timeline")
+            self.clock = pool.clock
+            self.pool = pool
+        else:
+            self.clock = clock or VirtualClock()
+            self.pool = ClonePool(link_name=link, clock=self.clock,
+                                  max_clones=max_secondaries + 8)
+        self.dispatcher = Dispatcher(self.pool, self.clock)
+        self.queue = AdmissionQueue(queue_depth)
+        self.autoscaler = QueueAutoscaler(
+            self.pool, clone_type=clone_type, work_per_clone=work_per_clone,
+            min_secondaries=min_secondaries, max_secondaries=max_secondaries)
+        if provision_paused:     # paper §5.3: secondaries pre-created paused
+            self.pool.provision(clone_type, max_secondaries)
+        self.clone_type = clone_type
+        self.max_batch = max_batch
+        self.prompt_pad = prompt_pad
+        self.use_primary = use_primary
+        if not use_primary and max_secondaries < 1:
+            raise ValueError("no primary and no secondaries: nothing can run")
+        # executor(clone, fn, args) -> (value, venue_seconds); the default
+        # runs on the clone's venue spec (tests inject fixed venue times)
+        if executor is None:
+            def executor(clone, fn, args):
+                return Venue(clone.spec).execute(fn, *args)
+        self.executor = executor
+        self.busy_energy_j = 0.0
+        self.tokens_emitted = 0
+
+    # ---------------------------------------------------------------- clones
+    def _free_clone(self):
+        """Cheapest usable clone: warm first, then provisioning ones."""
+        now = self.clock.now()
+        cands = []
+        if self.use_primary and not self.pool.primary.busy:
+            cands.append((0.0, 0, self.pool.primary))
+        for c in self.pool.running_secondaries(self.clone_type):
+            if not c.busy:
+                cands.append((self.autoscaler.clone_ready_delay(c, now),
+                              c.cid, c))
+        return min(cands)[2] if cands else None
+
+    def _net_s(self, nbytes: int) -> float:
+        return transfer_time(nbytes, self.pool.link)
+
+    # ---------------------------------------------------------------- cohort
+    def _start_cohort(self, batch: List[ServeRequest], clone):
+        plen = self.prompt_pad
+        toks = np.zeros((len(batch), plen), np.int32)
+        for i, r in enumerate(batch):
+            toks[i, :min(len(r.prompt), plen)] = r.prompt[:plen]
+        cohort = _Cohort(reqs=batch, clone=clone, plen=plen,
+                         outs=[[] for _ in batch],
+                         first_token_t=[0.0] * len(batch))
+        clone.busy = True
+        delay = (self.autoscaler.clone_ready_delay(clone, self.clock.now())
+                 + self._net_s(toks.nbytes))
+        task = self.dispatcher.submit(
+            clone, self.backend.prefill, (self.backend.params,
+                                          jnp.asarray(toks)),
+            executor=self.executor, extra_delay=delay, label="prefill")
+        self.busy_energy_j += task.venue_seconds * clone.spec.power_peak
+        return task, cohort
+
+    def _submit_decode(self, cohort: _Cohort):
+        pos = jnp.int32(min(cohort.plen + cohort.step,
+                            self.backend.capacity - 1))
+        task = self.dispatcher.submit(
+            cohort.clone, self.backend.decode,
+            (self.backend.params, cohort.cache, cohort.tok, pos),
+            executor=self.executor,
+            extra_delay=self._net_s(len(cohort.reqs) * 8), label="decode")
+        self.busy_energy_j += task.venue_seconds * cohort.clone.spec.power_peak
+        return task
+
+    def _retire(self, cohort: _Cohort, completions: List[ServeCompletion]
+                ) -> bool:
+        """Emit current tokens; drop finished rows.  True while alive."""
+        now = self.clock.now()
+        tok = np.asarray(cohort.tok)[:, 0]
+        keep = []
+        for i, r in enumerate(cohort.reqs):
+            cohort.outs[i].append(int(tok[i]))
+            if len(cohort.outs[i]) == 1:
+                cohort.first_token_t[i] = now
+            if len(cohort.outs[i]) >= r.max_new_tokens:
+                self.tokens_emitted += len(cohort.outs[i])
+                completions.append(ServeCompletion(
+                    r.rid, cohort.outs[i], r.arrival_t,
+                    cohort.first_token_t[i], now, cohort.clone.spec.name))
+            else:
+                keep.append(i)
+        if not keep:
+            self.pool.release([cohort.clone])
+            return False
+        if len(keep) < len(cohort.reqs):      # leave at step granularity
+            cohort.reqs = [cohort.reqs[i] for i in keep]
+            cohort.outs = [cohort.outs[i] for i in keep]
+            cohort.first_token_t = [cohort.first_token_t[i] for i in keep]
+            cohort.tok = cohort.tok[np.asarray(keep, np.int32)]
+            cohort.cache = self.backend.cache_take(cohort.cache, keep)
+        return True
+
+    # ------------------------------------------------------------------ run
+    def run(self, requests: List[ServeRequest], *,
+            drain_idle_s: float = 0.0) -> ServeReport:
+        reqs = sorted(requests, key=lambda r: r.arrival_t)
+        t_start = self.clock.now()
+        i = 0
+        inflight: Dict[object, _Cohort] = {}
+        completions: List[ServeCompletion] = []
+
+        while True:
+            now = self.clock.now()
+            while i < len(reqs) and reqs[i].arrival_t <= now + 1e-12:
+                self.queue.offer(reqs[i], now)
+                i += 1
+            # demand in cohort units: queued requests coalesce into batches
+            queued_cohorts = -(-self.queue.depth // self.max_batch)
+            self.autoscaler.step(now, queued_cohorts, len(inflight))
+            # form cohorts while a clone is free (join at step boundaries)
+            while self.queue.depth > 0:
+                clone = self._free_clone()
+                if clone is None:
+                    break
+                task, cohort = self._start_cohort(
+                    self.queue.take(self.max_batch), clone)
+                inflight[task] = cohort
+
+            if inflight:
+                # bound the wait so due arrivals are admitted on time
+                next_arrival = reqs[i].arrival_t if i < len(reqs) else None
+                first_done = min(t.done_at for t in inflight)
+                if next_arrival is not None and next_arrival < first_done:
+                    self.clock.advance_to(next_arrival)
+                    continue
+                for task in self.dispatcher.wait_any(list(inflight)):
+                    cohort = inflight.pop(task)
+                    if cohort.phase == "prefill":
+                        tok, cohort.cache = task.value
+                        cohort.tok = tok[:, None]
+                        cohort.phase = "decode"
+                    else:
+                        tok, cohort.cache = task.value
+                        cohort.tok = tok[:, None]
+                        cohort.step += 1
+                    if self._retire(cohort, completions):
+                        inflight[self._submit_decode(cohort)] = cohort
+            elif i < len(reqs):
+                self.clock.advance_to(reqs[i].arrival_t)
+            elif self.queue.depth > 0:
+                raise RuntimeError("requests queued but no clone can run "
+                                   "(max_secondaries too small?)")
+            else:
+                break
+
+        if drain_idle_s > 0.0:       # let idle TTLs pause the secondaries
+            self.clock.advance(drain_idle_s)
+            self.autoscaler.step(self.clock.now(), 0, 0)
+
+        lat = np.array([c.latency_s for c in completions]) \
+            if completions else np.zeros(1)
+        ttft = np.array([c.ttft_s for c in completions]) \
+            if completions else np.zeros(1)
+        makespan = self.clock.now() - t_start - drain_idle_s
+        return ServeReport(
+            completions=completions,
+            accepted=self.queue.accepted,
+            rejected=self.queue.rejected,
+            makespan_s=makespan,
+            p50_latency_s=float(np.percentile(lat, 50)),
+            p99_latency_s=float(np.percentile(lat, 99)),
+            p50_ttft_s=float(np.percentile(ttft, 50)),
+            tokens_per_s=self.tokens_emitted / max(makespan, 1e-9),
+            peak_secondaries=self.autoscaler.peak_secondaries,
+            scale_ups=self.autoscaler.scale_ups,
+            busy_energy_j=self.busy_energy_j,
+            pool_stats=dict(self.pool.stats),
+            clone_samples=list(self.autoscaler.samples))
 
 
 def main() -> None:
@@ -144,9 +457,24 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--policy", default="exec_time")
+    ap.add_argument("--handler", action="store_true",
+                    help="serve through the event-driven ClientHandler")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="Poisson offered load (req/s) for --handler")
     args = ap.parse_args()
 
     cfg = reduced_config(get_config(args.arch))
+    if args.handler:
+        backend = LMBackend(cfg, capacity=64)
+        handler = ClientHandler(backend, max_batch=args.batch)
+        reqs = poisson_arrivals(args.rate, args.requests,
+                                prompt_len=8, vocab=cfg.vocab_size,
+                                max_new_tokens=args.new_tokens)
+        report = handler.run(reqs, drain_idle_s=60.0)
+        print(report.summary())
+        print("pool:", report.pool_stats)
+        return
+
     eng = ServingEngine(cfg, policy=Policy(args.policy))
     rng = np.random.default_rng(0)
     reqs = [Request(i, rng.integers(0, cfg.vocab_size, size=12,

@@ -1,0 +1,289 @@
+"""Event-driven Client Handler subsystem: virtual clock, dispatcher overlap,
+parallel makespan on the timeline, elastic autoscaling, and continuous
+batching equivalence.  Everything here is deterministic — no real sleeps."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (ClonePool, Dispatcher, ExecutionController,
+                        Parallelizer, Policy, RemoteableMethod, VirtualClock,
+                        split_batch)
+from repro.core.clones import BOOT_SECONDS, CloneState, resume_time
+from repro.core.parallel import SYNC_SECONDS_PER_CLONE
+from repro.core.scheduler import (AdmissionQueue, ServeRequest,
+                                  poisson_arrivals)
+
+
+# --------------------------------------------------------------------------- #
+# virtual clock
+# --------------------------------------------------------------------------- #
+def test_virtual_clock_fires_events_in_order():
+    clk = VirtualClock()
+    fired = []
+    clk.schedule(2.0, lambda: fired.append("b"))
+    clk.schedule(1.0, lambda: fired.append("a"))
+    clk.schedule(3.0, lambda: fired.append("c"))
+    clk.advance_to(2.5)
+    assert fired == ["a", "b"]
+    assert clk.now() == 2.5
+    clk.sleep(1.0)
+    assert fired == ["a", "b", "c"]
+
+
+def test_virtual_clock_rejects_time_travel():
+    clk = VirtualClock(start=5.0)
+    with pytest.raises(ValueError):
+        clk.advance_to(1.0)
+    with pytest.raises(ValueError):
+        clk.at(1.0)
+
+
+def test_virtual_clock_cancel_and_run_next():
+    clk = VirtualClock()
+    fired = []
+    ev = clk.schedule(1.0, lambda: fired.append("x"))
+    clk.schedule(2.0, lambda: fired.append("y"))
+    ev.cancel()
+    assert clk.run_next()
+    assert fired == ["y"] and clk.now() == 2.0
+    assert not clk.run_next()
+
+
+# --------------------------------------------------------------------------- #
+# dispatcher: k submissions overlap on the timeline
+# --------------------------------------------------------------------------- #
+def _fixed_executor(seconds_by_call):
+    calls = {"n": 0}
+
+    def ex(clone, fn, args):
+        dt = seconds_by_call[min(calls["n"], len(seconds_by_call) - 1)]
+        calls["n"] += 1
+        return fn(*args), dt
+
+    return ex
+
+
+def test_dispatcher_overlap_is_max_not_sum():
+    clk = VirtualClock()
+    pool = ClonePool(clock=clk)
+    clones = pool.provision("main", 3, state=CloneState.RUNNING)
+    disp = Dispatcher(pool, clk)
+    ex = _fixed_executor([1.0, 2.0, 3.0])
+    tasks = [disp.submit(c, lambda v=i: v, (), executor=ex)
+             for i, c in enumerate(clones)]
+    disp.wait(tasks)
+    assert clk.now() == pytest.approx(3.0)       # max, not 6.0
+    assert [t.value for t in tasks] == [0, 1, 2]
+    assert all(t.done for t in tasks)
+
+
+def test_dispatcher_requires_virtual_clock():
+    pool = ClonePool(clock=lambda: 0.0)
+    with pytest.raises(TypeError):
+        Dispatcher(pool, pool.clock)
+
+
+# --------------------------------------------------------------------------- #
+# parallelizer on the virtual timeline
+# --------------------------------------------------------------------------- #
+def test_parallel_makespan_is_provision_plus_max_plus_sync():
+    """Acceptance: k-clone makespan within 10% of provision + max + sync,
+    with zero real sleeping on the simulated path."""
+    pool = ClonePool()                          # VirtualClock by default
+    pool.provision("main", 4)                   # paused secondaries
+    par = Parallelizer(pool)
+    shard_times = {0: 1.0, 1: 2.0, 2: 4.0, 3: 3.0}
+
+    def venue_executor(clone, fn, shard):
+        i = int(shard[0])
+        return i, shard_times[i]
+
+    wall0 = time.perf_counter()
+    res = par.run(lambda i: i, [(i,) for i in range(4)],
+                  venue_executor=venue_executor, merge=sum)
+    wall = time.perf_counter() - wall0
+    # primary is RUNNING, 3 paused clones resume simultaneously
+    expected = resume_time(3) + 4.0 + SYNC_SECONDS_PER_CLONE * 3
+    assert res.makespan_s == pytest.approx(expected, rel=0.10)
+    assert res.makespan_s == pytest.approx(expected, rel=1e-6)
+    assert max(res.shard_times) == pytest.approx(4.0)
+    assert res.value == 0 + 1 + 2 + 3
+    assert wall < 1.0                           # simulated, not slept
+
+
+def test_straggler_detected_at_event_time():
+    pool = ClonePool()
+    pool.provision("main", 6)
+    par = Parallelizer(pool, straggler_factor=2.0)
+    seen = {"rescues": 0}
+
+    def venue_executor(clone, fn, shard):
+        i = int(shard[0])
+        if i == 3 and seen["rescues"] == 0:
+            seen["rescues"] += 1
+            return i, 50.0                      # straggling first attempt
+        return i, 1.0
+
+    res = par.run(lambda i: i, [(i,) for i in range(4)],
+                  venue_executor=venue_executor, merge=list)
+    assert res.redispatches == 1
+    # detection at 2 x median(=1.0) => rescue lands at ~2 + resume + 1
+    assert max(res.shard_times) == pytest.approx(
+        2.0 + resume_time(1) + 1.0, rel=1e-6)
+    assert res.value == [0, 1, 2, 3]
+
+
+# --------------------------------------------------------------------------- #
+# clone pool accounting (satellite regressions)
+# --------------------------------------------------------------------------- #
+def test_boot_seconds_counted_per_clone():
+    pool = ClonePool()
+    pool.acquire("x4large", n=3)                # three cold boots
+    assert pool.stats["boots"] == 3
+    assert pool.stats["boot_seconds"] == pytest.approx(3 * BOOT_SECONDS)
+
+
+def test_ensure_secondaries_and_pause_surplus():
+    pool = ClonePool()
+    pool.provision("main", 2)                   # paused
+    fresh, costs = pool.ensure_secondaries("main", 3)
+    assert len(fresh) == 3                      # 2 resumed + 1 booted
+    # per-clone readiness: resumed clones don't wait for the boot
+    assert costs == pytest.approx([resume_time(2), resume_time(2),
+                                   BOOT_SECONDS])
+    assert len(pool.running_secondaries("main")) == 3
+    assert all(not c.busy for c in fresh)       # idle capacity, not acquired
+    assert pool.pause_surplus(keep=1, type_name="main") == 2
+    assert len(pool.running_secondaries("main")) == 1
+
+
+def test_parallel_run_feeds_network_profiler():
+    """Multi-clone runs must update bandwidth/RTT history like single-clone
+    runs, or later offload predictions go stale."""
+    ec = ExecutionController(policy=Policy.EXEC_TIME)
+    ec.pool.provision("main", 4, state=CloneState.RUNNING)
+    rm = RemoteableMethod(
+        "par", lambda xs: xs.sum(), size_fn=lambda xs: xs.size,
+        split_fn=lambda args, k: split_batch(args, k),
+        merge_fn=lambda vs: sum(float(v) for v in vs))
+    ec.execute(rm, np.ones((8, 16), np.float32), force="remote", n_clones=4)
+    assert ec.network.perceived_bw.get(ec.network.active)
+    assert ec.network.perceived_rtt.get(ec.network.active)
+
+
+# --------------------------------------------------------------------------- #
+# admission queue
+# --------------------------------------------------------------------------- #
+def test_admission_queue_sheds_beyond_depth():
+    q = AdmissionQueue(max_depth=2)
+    reqs = [ServeRequest(i, np.zeros(4, np.int32)) for i in range(5)]
+    admitted = [q.offer(r, now=0.0) for r in reqs]
+    assert admitted == [True, True, False, False, False]
+    assert q.rejected == 3
+    assert [r.rid for r in q.take(10)] == [0, 1]
+
+
+def test_poisson_arrivals_deterministic():
+    a = poisson_arrivals(4.0, 10, seed=3)
+    b = poisson_arrivals(4.0, 10, seed=3)
+    assert [r.arrival_t for r in a] == [r.arrival_t for r in b]
+    assert all(x.arrival_t < y.arrival_t for x, y in zip(a, a[1:]))
+
+
+# --------------------------------------------------------------------------- #
+# client handler: elasticity + continuous batching (fake backend => pure
+# virtual-clock scheduling, no model in the loop)
+# --------------------------------------------------------------------------- #
+class FakeBackend:
+    """Token i+1 follows token i; venue time injected via executor."""
+
+    capacity = 64
+    params = None
+
+    def prefill(self, params, toks):
+        b = int(toks.shape[0])
+        return np.zeros(b, np.int32), {"state": np.zeros((b, 1), np.int32)}
+
+    def decode(self, params, cache, tok, pos):
+        return np.asarray(tok)[:, 0] + 1, cache
+
+    def cache_take(self, cache, keep):
+        return {"state": cache["state"][np.asarray(keep, np.int32)]}
+
+
+def _make_handler(**kw):
+    from repro.launch.serve import ClientHandler
+    ex = kw.pop("executor", lambda clone, fn, args: (fn(*args), 0.05))
+    return ClientHandler(FakeBackend(), executor=ex, prompt_pad=4, **kw)
+
+
+def test_autoscaler_grows_and_ttl_pauses_under_burst():
+    h = _make_handler(max_batch=1, max_secondaries=4, use_primary=False)
+    reqs = [ServeRequest(i, np.zeros(4, np.int32), max_new_tokens=4,
+                         arrival_t=0.001 * i) for i in range(12)]
+    report = h.run(reqs, drain_idle_s=40.0)     # > PAUSE_IDLE_TTL
+    assert len(report.completions) == 12
+    assert report.peak_secondaries >= 2         # burst grew the pool
+    assert report.pool_stats["resumes"] >= 2    # paused pool resumed, not
+    assert report.pool_stats["boots"] == 0      # booted (pre-provisioned)
+    # after the idle drain every secondary is paused again
+    assert len(h.pool.running_secondaries()) == 0
+    assert report.pool_stats["pauses"] >= 2
+    # elasticity visible in the samples: grew then shrank
+    counts = [n for _, n in report.clone_samples]
+    assert max(counts) >= 2 and counts[-1] == 0
+
+
+def test_handler_overlaps_cohorts_across_clones():
+    """2 cohorts on 2 clones must overlap: makespan ~ max, not sum."""
+    h = _make_handler(max_batch=1, max_secondaries=2, use_primary=False,
+                      executor=lambda c, f, a: (f(*a), 1.0))
+    reqs = [ServeRequest(i, np.zeros(4, np.int32), max_new_tokens=3,
+                         arrival_t=0.0) for i in range(2)]
+    report = h.run(reqs)
+    # each request: prefill + 3 steps = 4 units of 1.0s (+resume +net);
+    # serial would be >= 8s, overlapped is ~4s
+    assert report.makespan_s < 6.0
+    assert report.p50_latency_s < 6.0
+
+
+def test_handler_requests_leave_at_step_granularity():
+    h = _make_handler(max_batch=2, max_secondaries=1)
+    reqs = [ServeRequest(0, np.zeros(4, np.int32), max_new_tokens=2),
+            ServeRequest(1, np.zeros(4, np.int32), max_new_tokens=5)]
+    report = h.run(reqs)
+    by_rid = {c.rid: c for c in report.completions}
+    assert by_rid[0].tokens == [0, 1]           # left after 2 tokens
+    assert by_rid[1].tokens == [0, 1, 2, 3, 4]  # kept decoding alone
+    assert by_rid[0].done_t < by_rid[1].done_t
+
+
+def test_handler_adopts_supplied_pool_clock():
+    """A supplied pool must share the handler's timeline, or TTL reaping
+    would run on a clock frozen at 0 and never pause the secondaries."""
+    from repro.launch.serve import ClientHandler
+    clk = VirtualClock()
+    pool = ClonePool(clock=clk)
+    h = ClientHandler(FakeBackend(), pool=pool, max_secondaries=2,
+                      prompt_pad=4,
+                      executor=lambda c, f, a: (f(*a), 0.05))
+    assert h.clock is clk
+    reqs = [ServeRequest(i, np.zeros(4, np.int32), max_new_tokens=2,
+                         arrival_t=0.0) for i in range(4)]
+    h.run(reqs, drain_idle_s=40.0)
+    assert clk.now() > 40.0                     # pool timeline advanced
+    assert len(pool.running_secondaries()) == 0  # TTL pause actually fired
+    with pytest.raises(TypeError):
+        ClientHandler(FakeBackend(), pool=ClonePool(clock=lambda: 0.0))
+
+
+def test_handler_admission_control_sheds_load():
+    h = _make_handler(max_batch=1, queue_depth=4, max_secondaries=1,
+                      use_primary=False)
+    reqs = [ServeRequest(i, np.zeros(4, np.int32), max_new_tokens=2,
+                         arrival_t=0.0) for i in range(10)]
+    report = h.run(reqs)
+    assert report.rejected > 0
+    assert report.accepted + report.rejected == 10
+    assert len(report.completions) == report.accepted

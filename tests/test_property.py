@@ -1,7 +1,12 @@
 """Hypothesis property tests on system invariants."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dependency (pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.clones import resume_time
 from repro.core.policy import Policy, Prediction, should_offload

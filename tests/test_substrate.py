@@ -12,7 +12,8 @@ from repro.data.pipeline import DataConfig, Pipeline
 from repro.distributed.compression import (dequantize_int8,
                                            init_error_feedback,
                                            quantize_int8)
-from repro.distributed.sharding import DEFAULT_RULES, spec_for
+from repro.distributed.sharding import (DEFAULT_RULES, abstract_mesh,
+                                        spec_for)
 from repro.optim import adamw
 from repro.optim.adamw import OptConfig
 
@@ -125,7 +126,7 @@ def test_error_feedback_unbiased_over_steps():
 # sharding rules
 # --------------------------------------------------------------------------- #
 def test_spec_for_divisibility_and_uniqueness():
-    mesh = jax.sharding.AbstractMesh((2, 4), ("data", "model"))
+    mesh = abstract_mesh((2, 4), ("data", "model"))
     P = jax.sharding.PartitionSpec
     # divisible dims get their preferred axes
     assert spec_for((16, 8), ("embed", "mlp"), mesh) == P("data", "model")
@@ -138,7 +139,7 @@ def test_spec_for_divisibility_and_uniqueness():
 
 
 def test_spec_for_batch_tuple_rule():
-    mesh = jax.sharding.AbstractMesh((2, 2, 2), ("pod", "data", "model"))
+    mesh = abstract_mesh((2, 2, 2), ("pod", "data", "model"))
     P = jax.sharding.PartitionSpec
     assert spec_for((8, 4), ("batch", None), mesh) == P(("pod", "data"))
     # batch=1 cannot shard

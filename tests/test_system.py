@@ -145,6 +145,54 @@ def test_serving_engine_end_to_end():
     assert eng.stats["requests"] == 3
 
 
+def test_continuous_batching_matches_serial_path():
+    """The event-driven ClientHandler must emit exactly the tokens the old
+    batch-serial path emits — both for a fused cohort and across a
+    step-granularity leave (the survivor keeps decoding alone)."""
+    from repro.core.scheduler import ServeRequest
+    from repro.launch.serve import ClientHandler, LMBackend
+
+    cfg = reduced_config(get_config("smollm-360m"))
+    backend = LMBackend(cfg, capacity=32)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 6, dtype=np.int32)
+               for _ in range(4)]
+
+    eng = ServingEngine(cfg, capacity=32, backend=backend)
+    serial = eng.serve_batch([Request(i, p, 4)
+                              for i, p in enumerate(prompts)], force="local")
+    serial_tokens = {c.rid: c.tokens for c in serial}
+
+    handler = ClientHandler(backend, max_batch=4, prompt_pad=6)
+    rep = handler.run([ServeRequest(i, p, 4, arrival_t=0.0)
+                       for i, p in enumerate(prompts)])
+    assert {c.rid: c.tokens for c in rep.completions} == serial_tokens
+
+    # ragged token budgets: rid 0 leaves after 2 steps, rid 1 decodes on
+    serial2 = eng.serve_batch([Request(0, prompts[0], 2),
+                               Request(1, prompts[1], 5)], force="local")
+    s2 = {c.rid: c.tokens for c in serial2}
+    handler2 = ClientHandler(backend, max_batch=2, prompt_pad=6)
+    rep2 = handler2.run([ServeRequest(0, prompts[0], 2),
+                         ServeRequest(1, prompts[1], 5)])
+    c2 = {c.rid: c.tokens for c in rep2.completions}
+    assert c2[0] == s2[0][:2]
+    assert c2[1] == s2[1]
+
+
+def test_serving_engine_stats_aggregate_decode_steps():
+    """offloaded/escalations must reflect every step in the batch, not just
+    the prefill result."""
+    cfg = reduced_config(get_config("smollm-360m"))
+    eng = ServingEngine(cfg, capacity=32)
+    reqs = [Request(0, np.arange(6, dtype=np.int32), 3)]
+    eng.serve_batch(reqs, force="remote")
+    # prefill + 3 decode steps, all forced remote
+    assert eng.stats["offloaded"] == 4
+    eng.serve_batch(reqs, force="local")
+    assert eng.stats["offloaded"] == 4          # unchanged by local batch
+
+
 def test_serving_deterministic_across_placements():
     """Local and offloaded execution return identical tokens (correctness
     of transparent offloading — the paper's §4.4 contract)."""
