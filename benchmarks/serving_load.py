@@ -1,23 +1,29 @@
 """Serving under offered load: the Client Handler's elasticity, measured.
 
 Sweeps Poisson arrival rates against the event-driven continuous-batching
-``ClientHandler`` (paper §5.2-§5.3) on the virtual timeline and reports,
-per load level: p50/p99 request latency, p50 time-to-first-token,
-throughput (tokens/s), client-side shed rate, clone-pool activity
-(resumes/boots/pauses), busy energy, and the autoscaler's peak secondary
-count.  The final high-load level must show the autoscaler provisioning
-multiple secondaries; every level ends with an idle drain past the pause
-TTL so the elastic shrink is visible too.
+``ClientHandler`` (paper §5.2-§5.3) on the virtual timeline, in both KV
+cache modes, and reports per (rate, mode): p50/p99 request latency, p50
+time-to-first-token, throughput (tokens/s), client-side shed rate,
+clone-pool activity (resumes/boots/pauses), busy energy, the autoscaler's
+peak secondary count, and KV memory utilization (written / reserved
+tokens).  ``paged`` admits late arrivals into free slots of in-flight
+engines (per-slot decode cursors over a block pool); ``contiguous`` is the
+step-boundary-fusion baseline.  Every level ends with an idle drain past
+the pause TTL so the elastic shrink is visible too.
 
     PYTHONPATH=src python benchmarks/serving_load.py
     PYTHONPATH=src python benchmarks/serving_load.py --rates 1 4 16
+    PYTHONPATH=src python benchmarks/serving_load.py --kv paged --seed 3
 
-All times are virtual-clock seconds (venue-model execution + modeled
-transfer + provisioning); nothing here sleeps for real.
+Results are also written machine-readable to ``BENCH_serving.json`` (see
+docs/benchmarks.md for the schema) so the perf trajectory is tracked
+across PRs.  All times are virtual-clock seconds (venue-model execution +
+modeled transfer + provisioning); nothing here sleeps for real.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
@@ -28,39 +34,64 @@ from repro.core.clones import PAUSE_IDLE_TTL                    # noqa: E402
 from repro.core.scheduler import poisson_arrivals               # noqa: E402
 from repro.launch.serve import ClientHandler, LMBackend         # noqa: E402
 
+HEADER = (f"{'rate_rps':>8s} {'kv':>10s} {'served':>6s} {'shed':>5s} "
+          f"{'p50_s':>8s} {'p99_s':>8s} {'ttft50_s':>8s} "
+          f"{'tok/s':>7s} {'kv_util':>7s} {'peak_2nd':>8s} "
+          f"{'resumes':>7s} {'pauses':>6s} {'busy_J':>9s}")
+
 
 def run_sweep(arch: str = "smollm-360m", rates=(0.5, 4.0, 32.0),
               n_requests: int = 32, max_batch: int = 4,
               max_secondaries: int = 6, new_tokens: int = 6,
-              prompt_len: int = 6):
+              prompt_len: int = 6, seed: int = 0,
+              kv_modes=("paged", "contiguous"), block_size: int = 8):
+    """Returns (table_lines, rows) with one row dict per (rate, kv mode)."""
     cfg = reduced_config(get_config(arch))
     backend = LMBackend(cfg, capacity=32)
-    header = (f"{'rate_rps':>8s} {'served':>6s} {'shed':>5s} "
-              f"{'p50_s':>8s} {'p99_s':>8s} {'ttft50_s':>8s} "
-              f"{'tok/s':>7s} {'peak_2nd':>8s} {'resumes':>7s} "
-              f"{'pauses':>6s} {'busy_J':>9s}")
-    lines = [header]
-    reports = []
+    lines = [HEADER]
+    rows = []
     for rate in rates:
-        handler = ClientHandler(backend, max_batch=max_batch,
-                                max_secondaries=max_secondaries,
-                                prompt_pad=prompt_len)
-        reqs = poisson_arrivals(rate, n_requests, seed=0,
-                                prompt_len=prompt_len,
-                                vocab=cfg.vocab_size,
-                                max_new_tokens=new_tokens)
-        report = handler.run(reqs, drain_idle_s=PAUSE_IDLE_TTL + 5.0)
-        still_running = len(handler.pool.running_secondaries())
-        lines.append(
-            f"{rate:>8.2f} {len(report.completions):>6d} "
-            f"{report.rejected:>5d} {report.p50_latency_s:>8.3f} "
-            f"{report.p99_latency_s:>8.3f} {report.p50_ttft_s:>8.3f} "
-            f"{report.tokens_per_s:>7.2f} {report.peak_secondaries:>8d} "
-            f"{report.pool_stats['resumes']:>7d} "
-            f"{report.pool_stats['pauses']:>6d} "
-            f"{report.busy_energy_j:>9.2f}")
-        reports.append((rate, report, still_running))
-    return lines, reports
+        for kv in kv_modes:
+            handler = ClientHandler(backend, max_batch=max_batch,
+                                    max_secondaries=max_secondaries,
+                                    prompt_pad=prompt_len, kv=kv,
+                                    block_size=block_size)
+            reqs = poisson_arrivals(rate, n_requests, seed=seed,
+                                    prompt_len=prompt_len,
+                                    vocab=cfg.vocab_size,
+                                    max_new_tokens=new_tokens)
+            report = handler.run(reqs, drain_idle_s=PAUSE_IDLE_TTL + 5.0)
+            still_running = len(handler.pool.running_secondaries())
+            lines.append(
+                f"{rate:>8.2f} {kv:>10s} {len(report.completions):>6d} "
+                f"{report.rejected:>5d} {report.p50_latency_s:>8.3f} "
+                f"{report.p99_latency_s:>8.3f} {report.p50_ttft_s:>8.3f} "
+                f"{report.tokens_per_s:>7.2f} {report.kv_util:>7.0%} "
+                f"{report.peak_secondaries:>8d} "
+                f"{report.pool_stats['resumes']:>7d} "
+                f"{report.pool_stats['pauses']:>6d} "
+                f"{report.busy_energy_j:>9.2f}")
+            rows.append({
+                "rate_rps": rate,
+                "kv": kv,
+                "served": len(report.completions),
+                "shed": report.rejected,
+                "p50_latency_s": report.p50_latency_s,
+                "p99_latency_s": report.p99_latency_s,
+                "p50_ttft_s": report.p50_ttft_s,
+                "tokens_per_s": report.tokens_per_s,
+                "kv_util": report.kv_util,
+                "kv_reserved_peak_tokens": report.kv_reserved_peak,
+                "peak_secondaries": report.peak_secondaries,
+                "resumes": report.pool_stats["resumes"],
+                "boots": report.pool_stats["boots"],
+                "pauses": report.pool_stats["pauses"],
+                "busy_energy_j": report.busy_energy_j,
+                "makespan_s": report.makespan_s,
+                "secondaries_after_drain": still_running,
+                "report": report,
+            })
+    return lines, rows
 
 
 def main() -> None:
@@ -72,29 +103,75 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--secondaries", type=int, default=6)
     ap.add_argument("--new-tokens", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="arrival-trace seed (deterministic per seed)")
+    ap.add_argument("--kv", choices=["both", "paged", "contiguous"],
+                    default="both")
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--json", default="BENCH_serving.json",
+                    help="machine-readable output path ('' to skip)")
     args = ap.parse_args()
 
-    lines, reports = run_sweep(args.arch, tuple(args.rates), args.requests,
-                               args.batch, args.secondaries, args.new_tokens)
+    modes = (("paged", "contiguous") if args.kv == "both" else (args.kv,))
+    lines, rows = run_sweep(args.arch, tuple(args.rates), args.requests,
+                            args.batch, args.secondaries, args.new_tokens,
+                            seed=args.seed, kv_modes=modes,
+                            block_size=args.block_size)
     print("\n".join(lines))
 
-    hi_rate, hi, still_running = reports[-1]
-    print(f"\nhigh load ({hi_rate} req/s): autoscaler peaked at "
-          f"{hi.peak_secondaries} secondaries "
-          f"({hi.pool_stats['resumes']} resumes, "
-          f"{hi.pool_stats['boots']} boots); after the idle drain "
-          f"{still_running} remain running "
-          f"({hi.pool_stats['pauses']} TTL pauses).")
+    # highest offered rate regardless of CLI order; among its modes take
+    # the most elastic row for the provisioning assertion
+    hi_rate = max(args.rates)
+    hi = max((r for r in rows if r["rate_rps"] == hi_rate),
+             key=lambda r: r["peak_secondaries"])
+    hi_rep = hi["report"]
+    print(f"\nhigh load ({hi_rate} req/s, {hi['kv']}): autoscaler peaked at "
+          f"{hi_rep.peak_secondaries} secondaries "
+          f"({hi['resumes']} resumes, {hi['boots']} boots); after the idle "
+          f"drain {hi['secondaries_after_drain']} remain running "
+          f"({hi['pauses']} TTL pauses).")
     # acceptance check — only meaningful when the offered load is actually
     # high and the cap allows elasticity
     if args.secondaries >= 2 and hi_rate >= 2.0 and args.requests >= 8:
-        assert hi.peak_secondaries >= 2, \
+        assert hi_rep.peak_secondaries >= 2, \
             "autoscaler failed to provision secondaries under high load"
-    assert still_running == 0, "idle TTL failed to pause the secondaries"
-    lo = reports[0][1]
-    print(f"latency under load: p99 {lo.p99_latency_s:.3f}s @ "
-          f"{reports[0][0]} req/s -> {hi.p99_latency_s:.3f}s @ "
-          f"{hi_rate} req/s")
+    assert all(r["secondaries_after_drain"] == 0 for r in rows), \
+        "idle TTL failed to pause the secondaries"
+    lo_rate = min(args.rates)
+    lo = next(r for r in rows if r["rate_rps"] == lo_rate
+              and r["kv"] == hi["kv"])           # same mode: rate effect only
+    print(f"latency under load ({hi['kv']}): p99 {lo['p99_latency_s']:.3f}s "
+          f"@ {lo_rate} req/s -> {hi['p99_latency_s']:.3f}s @ {hi_rate} "
+          f"req/s")
+    if len(modes) == 2:
+        for rate in args.rates:
+            pr = next(r for r in rows if r["rate_rps"] == rate
+                      and r["kv"] == "paged")
+            cr = next(r for r in rows if r["rate_rps"] == rate
+                      and r["kv"] == "contiguous")
+            print(f"paged vs contiguous @ {rate} req/s: "
+                  f"ttft50 {pr['p50_ttft_s']:.3f}s vs "
+                  f"{cr['p50_ttft_s']:.3f}s, "
+                  f"p99 {pr['p99_latency_s']:.3f}s vs "
+                  f"{cr['p99_latency_s']:.3f}s, "
+                  f"kv_util {pr['kv_util']:.0%} vs {cr['kv_util']:.0%}")
+
+    if args.json:
+        payload = {
+            "benchmark": "serving_load",
+            "arch": args.arch,
+            "seed": args.seed,
+            "requests": args.requests,
+            "max_batch": args.batch,
+            "max_secondaries": args.secondaries,
+            "new_tokens": args.new_tokens,
+            "block_size": args.block_size,
+            "rows": [{k: v for k, v in r.items() if k != "report"}
+                     for r in rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

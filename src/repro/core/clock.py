@@ -39,6 +39,7 @@ class BaseClock:
     virtual = False
 
     def now(self) -> float:
+        """Current time in seconds on this clock's timeline."""
         raise NotImplementedError
 
     def sleep(self, dt: float) -> None:
@@ -79,6 +80,7 @@ class Event:
         self.fired = False
 
     def cancel(self) -> None:
+        """Mark the event dead; it will be skipped (and pruned) unfired."""
         self.cancelled = True
 
 
@@ -103,12 +105,15 @@ class VirtualClock(BaseClock):
 
     # ------------------------------------------------------------- reading
     def now(self) -> float:
+        """Current simulated time (seconds since ``start``)."""
         return self._now
 
     def pending(self) -> int:
+        """Number of scheduled, not-yet-fired, not-cancelled events."""
         return sum(1 for _, _, e in self._heap if not e.cancelled)
 
     def next_event_time(self) -> Optional[float]:
+        """Timestamp of the earliest live event, or None when idle."""
         self._prune()
         return self._heap[0][0] if self._heap else None
 
@@ -119,6 +124,7 @@ class VirtualClock(BaseClock):
         return self.at(self._now + max(0.0, float(delay)), callback)
 
     def at(self, t: float, callback: Optional[Callable] = None) -> Event:
+        """Enqueue an event at absolute time ``t`` (>= now)."""
         if t < self._now - 1e-12:
             raise ValueError(f"cannot schedule in the past: {t} < {self._now}")
         ev = Event(max(t, self._now), next(self._seq), callback)

@@ -37,9 +37,11 @@ class CloneTask:
 
     @property
     def duration(self) -> float:
+        """Total timeline seconds from submission to completion."""
         return self.done_at - self.submitted_at
 
     def add_done_callback(self, cb: Callable[["CloneTask"], None]) -> None:
+        """Run ``cb(task)`` at completion (immediately if already done)."""
         if self.done:
             cb(self)
         else:

@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import numpy as np
 
@@ -49,6 +49,8 @@ class ServeRequest:
 
 @dataclasses.dataclass
 class ServeCompletion:
+    """A finished request with its client-visible timeline stamps."""
+
     rid: int
     tokens: List[int]
     arrival_t: float
@@ -58,10 +60,12 @@ class ServeCompletion:
 
     @property
     def latency_s(self) -> float:
+        """End-to-end request latency: arrival to last token."""
         return self.done_t - self.arrival_t
 
     @property
     def ttft_s(self) -> float:
+        """Time to first token: arrival to the first emitted token."""
         return self.first_token_t - self.arrival_t
 
 
@@ -75,6 +79,8 @@ class AdmissionQueue:
         self.rejected = 0
 
     def offer(self, req: ServeRequest, now: float) -> bool:
+        """Admit ``req`` (stamping ``admitted_t``) or shed it; returns
+        True when admitted."""
         if len(self._q) >= self.max_depth:
             self.rejected += 1
             return False
@@ -84,13 +90,19 @@ class AdmissionQueue:
         return True
 
     def take(self, n: int) -> List[ServeRequest]:
+        """Pop up to ``n`` requests in FIFO order."""
         out = []
         while self._q and len(out) < n:
             out.append(self._q.popleft())
         return out
 
+    def peek(self) -> Optional[ServeRequest]:
+        """The request ``take`` would pop next, without popping it."""
+        return self._q[0] if self._q else None
+
     @property
     def depth(self) -> int:
+        """Requests currently queued (admitted, not yet taken)."""
         return len(self._q)
 
 
@@ -107,6 +119,69 @@ def poisson_arrivals(rate: float, n: int, *, seed: int = 0,
         prompt = rng.integers(0, vocab, size=prompt_len, dtype=np.int32)
         out.append(ServeRequest(i, prompt, max_new_tokens, arrival_t=t))
     return out
+
+
+class SlotLedger:
+    """Open decode slots across in-flight engines (paged serving).
+
+    The admission policy the paged Client Handler consults *before* it
+    spawns new engines: queued requests are offered to partially-full
+    in-flight engines first (a mid-flight cohort join — ThinkAir's
+    dynamic-provisioning claim at the request level), and only residual
+    demand counts toward autoscaling.  Keys are opaque engine handles; the
+    ledger holds only free-slot counts, never requests.
+    """
+
+    def __init__(self):
+        self._free: Dict[object, int] = {}
+
+    def update(self, key, free_slots: int) -> None:
+        """Record that engine ``key`` has ``free_slots`` open slots."""
+        if free_slots > 0:
+            self._free[key] = free_slots
+        else:
+            self._free.pop(key, None)
+
+    def drop(self, key) -> None:
+        """Forget a retired engine."""
+        self._free.pop(key, None)
+
+    @property
+    def total_free(self) -> int:
+        return sum(self._free.values())
+
+    def assign(self, queue: "AdmissionQueue",
+               fits: Optional[Callable] = None,
+               on_assign: Optional[Callable] = None) -> List[tuple]:
+        """Drain the queue into open slots; returns [(key, request)].
+
+        Tightest-fit first: the engine with the fewest open slots is
+        filled before emptier ones, so nearly-drained engines refill (and
+        surplus clones go idle for the TTL reaper) instead of every engine
+        hovering half-full.  Deterministic: ties break by insertion order.
+
+        ``fits(key, request) -> bool`` (optional) is re-checked per
+        assignment so engines can veto on resources beyond slot count —
+        e.g. KV block commitments; a vetoing engine leaves this round.
+        ``on_assign(key, request)`` (optional) runs *immediately* after
+        each pop, before the next ``fits`` check — admission must happen
+        here so resource checks see the commitments of earlier
+        assignments in the same round, not stale pre-round state.
+        """
+        out = []
+        while queue.depth > 0 and self._free:
+            key = min(self._free, key=self._free.get)  # type: ignore[arg-type]
+            if fits is not None and not fits(key, queue.peek()):
+                del self._free[key]        # can't take the head request
+                continue
+            req = queue.take(1)[0]
+            out.append((key, req))
+            if on_assign is not None:
+                on_assign(key, req)
+            self._free[key] -= 1
+            if self._free[key] <= 0:
+                del self._free[key]
+        return out
 
 
 class QueueAutoscaler:

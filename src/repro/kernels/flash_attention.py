@@ -77,6 +77,99 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref,
+                  l_ref, acc_ref, *, scale: float,
+                  softcap: Optional[float], bs: int, nblk: int):
+    """One (slot, q-head, kv-block) step of decode-time paged attention.
+
+    The block table and context lengths arrive as scalar prefetch so the KV
+    BlockSpec index map can chase ``tbl_ref`` — only the blocks a slot
+    actually owns are ever staged into VMEM; there is no materialized
+    (B, M*bs, ...) gather.  Online-softmax state (m, l, acc) persists in
+    VMEM scratch across the sequential block grid dimension.
+    """
+    del tbl_ref                                   # consumed by the index maps
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    ctx = len_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(j * bs < ctx)                        # block holds written slots
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (1, d)
+        k = k_ref[0, :, 0].astype(jnp.float32)               # (bs, d)
+        v = v_ref[0, :, 0].astype(jnp.float32)               # (bs, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = j * bs + jax.lax.iota(jnp.int32, bs)
+        s = jnp.where((k_pos < ctx)[None, :], s, _NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nblk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention_bhsd(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                         block_tables: jax.Array, context_lens: jax.Array, *,
+                         softcap: Optional[float] = None,
+                         interpret: bool = False) -> jax.Array:
+    """Decode-time paged attention over a block-table KV pool.
+
+    q: (B, Hq, 1, D) — one query token per slot;
+    k_pool, v_pool: (N, bs, Hkv, D) — the shared physical block pool;
+    block_tables: (B, M) int32 — per-slot physical block ids, logical order;
+    context_lens: (B,) int32 — tokens valid per slot.  Returns (B, Hq, 1, D).
+    """
+    b, hq, _, d = q.shape
+    _, bs, hkv, _ = k_pool.shape
+    m = block_tables.shape[1]
+    g = hq // hkv
+    kern = functools.partial(_paged_kernel, scale=d ** -0.5, softcap=softcap,
+                             bs=bs, nblk=m)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hq, m),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda b_, h, j, tbl, cl:
+                         (b_, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda b_, h, j, tbl, cl:
+                         (tbl[b_, j], 0, h // g, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda b_, h, j, tbl, cl:
+                         (tbl[b_, j], 0, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda b_, h, j, tbl, cl:
+                               (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, 1, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, context_lens, q, k_pool, v_pool)
+
+
 def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
                          causal: bool = True, window: Optional[int] = None,
                          softcap: Optional[float] = None, bq: int = 128,

@@ -54,6 +54,27 @@ def flash_attention(q, k, v, *, causal: bool = True,
     return jnp.swapaxes(out[:, :, :s0], 1, 2)
 
 
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_attention(q, k_pool, v_pool, block_tables, context_lens, *,
+                    softcap: Optional[float] = None,
+                    interpret: Optional[bool] = None):
+    """Decode-time paged attention, model layout.
+
+    q: (B, 1, Hq, D) — the current token's query per slot;
+    k_pool, v_pool: (N, bs, Hkv, D) physical KV block pool;
+    block_tables: (B, M) int32; context_lens: (B,) int32.
+    Returns (B, 1, Hq, D).  The kernel gathers KV blocks through the block
+    table with scalar prefetch, so slots scattered anywhere in the pool cost
+    the same as a contiguous cache.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    qt = jnp.swapaxes(q, 1, 2)                   # (B, Hq, 1, D)
+    out = _fa.paged_attention_bhsd(
+        qt, k_pool, v_pool, block_tables.astype(jnp.int32),
+        context_lens.astype(jnp.int32), softcap=softcap, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)
+
+
 @functools.partial(jax.jit, static_argnames=("bs", "br", "interpret"))
 def rglru_scan(a, b, h0=None, *, bs: int = 256, br: int = 128,
                interpret: Optional[bool] = None):

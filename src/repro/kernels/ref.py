@@ -37,6 +37,35 @@ def flash_attention_ref(q, k, v, *, causal=True, window: Optional[int] = None,
     return out.astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pool, v_pool, block_tables, context_lens, *,
+                        softcap: Optional[float] = None):
+    """Decode-time paged attention oracle (block-table gather, materialized).
+
+    q: (B, Hq, D) one query per slot; k_pool, v_pool: (N, bs, Hkv, D) the
+    shared KV block pool; block_tables: (B, M) int32 physical block ids in
+    logical order; context_lens: (B,) int32 tokens written per slot (the
+    per-slot cursor + 1).  Returns (B, Hq, D).  Positions >= context_lens[i]
+    (including every slot of an unused table entry) are masked out, so stale
+    pool contents can never leak into a slot's output.
+    """
+    b, hq, d = q.shape
+    _, bs, hkv, _ = k_pool.shape
+    g = hq // hkv
+    k = k_pool[block_tables].reshape(b, -1, hkv, d)      # (B, M*bs, Hkv, D)
+    v = v_pool[block_tables].reshape(b, -1, hkv, d)
+    kk = jnp.repeat(jnp.swapaxes(k, 1, 2), g, axis=1)    # (B, Hq, M*bs, D)
+    vv = jnp.repeat(jnp.swapaxes(v, 1, 2), g, axis=1)
+    scores = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * (d ** -0.5)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    ok = jnp.arange(k.shape[1])[None, :] < context_lens[:, None]   # (B, M*bs)
+    scores = jnp.where(ok[:, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhk,bhkd->bhd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def rglru_scan_ref(a, b, h0):
     """Sequential linear recurrence. a, b: (B,S,R); h0: (B,R) fp32."""
     def step(h, ab):

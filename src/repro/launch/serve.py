@@ -26,13 +26,17 @@ TTL-pauses secondaries through the ClonePool lifecycle, which makes the
 paper's elasticity claim measurable as p50/p99 latency and tokens/s under
 Poisson offered load (see ``benchmarks/serving_load.py``).
 
-Cohort fusion note: the decode cache keeps a single shared position cursor,
-so only requests admitted at the same step boundary are fused into one
-batched decode call; a late arrival starts its own cohort rather than
-joining mid-flight (per-slot cursors / paged caches are future work).
-Weights are resident on the clones (serving fleet), so per-request network
-cost is prompt/token traffic only — unlike the offload path, which ships
-the method's whole state.
+KV cache modes: the default ``kv="paged"`` path batches at *slot*
+granularity — each clone runs a :class:`_SlotEngine` whose requests each
+own a per-slot decode cursor and a row of a block table over a fixed
+:class:`KVBlockPool`; a late arrival is prefilled into any free slot of an
+in-flight engine at the next decode step (no step-boundary fusion, no
+``cache_take`` re-gather on retire).  ``kv="contiguous"`` keeps the PR-1
+cohort path — one shared cursor, fusion only at the same step boundary —
+as the measurable baseline (see ``benchmarks/serving_load.py`` and
+``docs/architecture.md``).  Weights are resident on the clones (serving
+fleet), so per-request network cost is prompt/token traffic only — unlike
+the offload path, which ships the method's whole state.
 """
 from __future__ import annotations
 
@@ -50,7 +54,7 @@ from repro.core import (ClonePool, ExecutionController, Policy,
 from repro.core.clock import VirtualClock
 from repro.core.dispatch import Dispatcher
 from repro.core.scheduler import (AdmissionQueue, QueueAutoscaler,
-                                  ServeCompletion, ServeRequest,
+                                  ServeCompletion, ServeRequest, SlotLedger,
                                   poisson_arrivals)
 from repro.core.venues import Venue, pytree_bytes, transfer_time
 from repro.launch import steps as S
@@ -100,16 +104,9 @@ class LMBackend:
 
         self.prefill = jax.jit(prefill_fn)
         self.decode = jax.jit(decode_fn)
-        # locate each cache leaf's batch axis by diffing abstract shapes
-        a1 = model.abstract_cache(cfg, 1, cap)
-        a2 = model.abstract_cache(cfg, 2, cap)
-
-        def batch_axis(x, y):
-            diff = [i for i, (p, q) in enumerate(zip(x.shape, y.shape))
-                    if p != q]
-            return diff[0] if diff else None
-
-        self._batch_axis = jax.tree.map(batch_axis, a1, a2)
+        # locate each cache leaf's batch/capacity axes by diffing shapes
+        self._batch_axis, self._cap_axis = model.cache_axes(cfg)
+        self._paged_fns: Dict[int, tuple] = {}
 
     def cache_mem_bytes(self, batch: int) -> int:
         return pytree_bytes(model.abstract_cache(self.cfg, batch,
@@ -123,6 +120,65 @@ class LMBackend:
             return leaf if ax is None else jnp.take(leaf, idx, axis=ax)
 
         return jax.tree.map(take, cache, self._batch_axis)
+
+    # ---------------------------------------------------------------- paged
+    def init_paged_pool(self, max_slots: int, num_blocks: int,
+                        block_size: int):
+        """Zero KV block pool + per-slot state rows (block 0 = trash)."""
+        return model.init_paged_cache(self.cfg, max_slots, num_blocks,
+                                      block_size)
+
+    def paged_fns(self, block_size: int):
+        """(prefill_into, decode_slots) jitted pure fns for one block size.
+
+        ``prefill_into(params, toks (J,P), pool, blk_ids (J,nb0), slots
+        (J,))`` prefills J prompts in one batched call and scatters each
+        row's KV into its pool blocks (and its recurrent state into its
+        slot row), returning ``(first_tokens (J,), new_pool)``.  Joins
+        landing at the same step boundary therefore cost one prefill, like
+        a contiguous cohort.
+
+        ``decode_slots(params, pool, tok (S,1), pos (S,), tables (S,M))``
+        runs one decode step for every slot at its own cursor, returning
+        ``(next_tokens (S,), new_pool)``.  Inactive slots must carry
+        ``pos=0`` and an all-zero table row so their writes land in the
+        trash block.
+        """
+        if block_size in self._paged_fns:
+            return self._paged_fns[block_size]
+        cfg, ctx = self.cfg, self.ctx
+        b_ax, c_ax = self._batch_axis, self._cap_axis
+
+        def prefill_into(params, toks, pool, blk_ids, slots):
+            j, nb0 = blk_ids.shape
+            logits, pcache = model.forward(
+                cfg, params, {"tokens": toks}, ctx, "prefill",
+                cache_capacity=nb0 * block_size)
+            flat_ids = blk_ids.reshape(-1)
+
+            def scatter(pool_leaf, pre, bax, cax):
+                if cax is None:                      # per-slot state rows
+                    lp = jnp.moveaxis(pool_leaf, bax, 0)
+                    rows = jnp.moveaxis(pre, bax, 0)
+                    return jnp.moveaxis(lp.at[slots].set(rows), 0, bax)
+                lp = jnp.moveaxis(pool_leaf, (bax, cax), (0, 1))
+                pr = jnp.moveaxis(pre, (bax, cax), (0, 1))
+                pr = pr.reshape((j * nb0, block_size) + pr.shape[2:])
+                return jnp.moveaxis(lp.at[flat_ids].set(pr), (0, 1),
+                                    (bax, cax))
+
+            pool = jax.tree.map(scatter, pool, pcache, b_ax, c_ax)
+            return jnp.argmax(logits, -1), pool
+
+        def decode_slots(params, pool, tok, pos, tables):
+            logits, pool = model.decode_step(
+                cfg, params, pool, tok, pos, ctx, block_tables=tables,
+                block_size=block_size)
+            return jnp.argmax(logits, -1), pool
+
+        fns = (jax.jit(prefill_into), jax.jit(decode_slots))
+        self._paged_fns[block_size] = fns
+        return fns
 
 
 class ServingEngine:
@@ -212,7 +268,13 @@ class ServingEngine:
 # --------------------------------------------------------------------------- #
 @dataclasses.dataclass
 class _Cohort:
-    """Requests admitted at one step boundary, decoding in lockstep."""
+    """Requests admitted at one step boundary, decoding in lockstep.
+
+    This is the *contiguous* (legacy, ``kv="contiguous"``) batching unit:
+    one shared position cursor, so only requests admitted at the same step
+    boundary fuse, and late arrivals wait for a clone to free up.  The paged
+    path (:class:`_SlotEngine`) replaces it as the default.
+    """
 
     reqs: List[ServeRequest]
     clone: object
@@ -225,8 +287,179 @@ class _Cohort:
     phase: str = "prefill"
 
 
+class KVBlockPool:
+    """Host-side paged-KV bookkeeping for one engine (one clone).
+
+    Owns the device block pool plus the block table, per-slot decode
+    cursors, and the free lists.  Block id 0 is the *trash block*: it is
+    never allocated, every inactive slot's table points at it, so decode
+    writes from idle rows land somewhere harmless.  Blocks are allocated
+    lazily — ``ceil(prompt/len block_size)`` at admission, then one at a
+    time as a slot's cursor crosses a block boundary — which is what makes
+    KV memory track *written* tokens instead of worst-case capacity.
+    """
+
+    def __init__(self, backend, max_slots: int, block_size: int,
+                 num_blocks: Optional[int] = None):
+        self.backend = backend
+        self.bs = block_size
+        self.max_slots = max_slots
+        self.capacity = backend.capacity
+        self.max_blk = -(-backend.capacity // block_size)
+        # default pool provisions worst case (+1 for the trash block), so
+        # admission can never deadlock; benchmarks may size it tighter
+        self.num_blocks = num_blocks or max_slots * self.max_blk + 1
+        self.pool = backend.init_paged_pool(max_slots, self.num_blocks,
+                                            block_size)
+        self.tables = np.zeros((max_slots, self.max_blk), np.int32)
+        self.pos = np.zeros((max_slots,), np.int32)
+        self.active = np.zeros((max_slots,), bool)
+        self.n_blocks_of = np.zeros((max_slots,), np.int32)
+        self.need = np.zeros((max_slots,), np.int32)
+        self.committed = 0          # blocks promised to slots, unallocated
+        self._free_slots = list(range(max_slots - 1, -1, -1))
+        self._free_blocks = list(range(self.num_blocks - 1, 0, -1))
+
+    def reset(self) -> None:
+        """Return the allocator to its initial state for engine reuse.
+        The device pool is kept as-is: stale block contents are harmless
+        because prefill fully overwrites a slot's blocks before any read
+        and positions past a slot's cursor are always masked."""
+        self.tables[:] = 0
+        self.pos[:] = 0
+        self.active[:] = False
+        self.n_blocks_of[:] = 0
+        self.need[:] = 0
+        self.committed = 0
+        self._free_slots = list(range(self.max_slots - 1, -1, -1))
+        self._free_blocks = list(range(self.num_blocks - 1, 0, -1))
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free_slots)
+
+    def _need_blocks(self, prompt_len: int, max_new_tokens: int) -> int:
+        total = min(prompt_len + max_new_tokens, self.capacity)
+        return min(-(-max(total, prompt_len) // self.bs), self.max_blk)
+
+    def can_admit(self, prompt_len: int, max_new_tokens: int = 0) -> bool:
+        """True when a request fits *now*: a free slot plus enough
+        uncommitted blocks for its whole token budget.  No overcommit —
+        every admitted request's worst-case block need is reserved up
+        front, so decode growth can never exhaust the pool mid-flight and
+        a tightly-sized pool queues instead of crashing."""
+        if not self._free_slots:
+            return False
+        need = self._need_blocks(prompt_len, max_new_tokens)
+        return len(self._free_blocks) - self.committed >= need
+
+    def used_blocks(self) -> int:
+        return (self.num_blocks - 1) - len(self._free_blocks)
+
+    def written_tokens(self) -> int:
+        return int(self.pos[self.active | (self.pos > 0)].sum())
+
+    def _alloc_block(self) -> int:
+        if not self._free_blocks:
+            raise RuntimeError(
+                "KV block pool exhausted: all "
+                f"{self.num_blocks - 1} blocks in use (size the pool with "
+                "num_blocks, or lower max_batch/capacity)")
+        return self._free_blocks.pop()
+
+    def alloc_slot(self, prompt_len: int, max_new_tokens: int = 0):
+        """Claim a free slot + its prefill blocks, committing the rest of
+        its token budget's blocks for later growth; cursor starts at the
+        prompt length.  Returns (slot, block_ids)."""
+        slot = self._free_slots.pop()
+        nb0 = -(-prompt_len // self.bs)
+        ids = [self._alloc_block() for _ in range(nb0)]
+        self.tables[slot, :] = 0
+        self.tables[slot, :nb0] = ids
+        self.pos[slot] = prompt_len
+        self.n_blocks_of[slot] = nb0
+        self.need[slot] = self._need_blocks(prompt_len, max_new_tokens)
+        self.committed += max(0, int(self.need[slot]) - nb0)
+        return slot, np.asarray(ids, np.int32)
+
+    def grow_for_write(self) -> None:
+        """Before a decode step: every active slot must own the block its
+        next token lands in (cursor may have crossed a block boundary).
+        Growth draws down the slot's admission-time commitment."""
+        for slot in np.nonzero(self.active)[0]:
+            blk_i = int(self.pos[slot]) // self.bs
+            if blk_i >= int(self.n_blocks_of[slot]) and blk_i < self.max_blk:
+                self.tables[slot, blk_i] = self._alloc_block()
+                self.n_blocks_of[slot] = blk_i + 1
+                if blk_i < int(self.need[slot]):
+                    self.committed -= 1
+
+    def free_slot(self, slot: int) -> None:
+        """Retire a slot: return its blocks and its unused commitment,
+        zero its table row (trash)."""
+        for j in range(int(self.n_blocks_of[slot])):
+            self._free_blocks.append(int(self.tables[slot, j]))
+        self.committed -= max(0, int(self.need[slot])
+                              - int(self.n_blocks_of[slot]))
+        self.tables[slot, :] = 0
+        self.pos[slot] = 0
+        self.active[slot] = False
+        self.n_blocks_of[slot] = 0
+        self.need[slot] = 0
+        self._free_slots.append(slot)
+
+
+@dataclasses.dataclass
+class _Slot:
+    """One request occupying one decode slot of a :class:`_SlotEngine`."""
+
+    req: ServeRequest
+    out: List[int]
+    first_token_t: float = 0.0
+
+
+class _SlotEngine:
+    """A clone's decode loop: max_batch slots over one paged KV pool.
+
+    The engine replaces the cohort as the unit of batching.  A request is
+    *admitted* into any free slot (``admit``) at any time — including while
+    a decode step is in flight — and its prefill is folded into the next
+    step, so late arrivals join mid-flight instead of waiting for the next
+    cohort.  Slots retire independently at step granularity; their blocks
+    return to the pool with no cache re-gather.
+    """
+
+    def __init__(self, backend, clone, kv: KVBlockPool):
+        self.clone = clone
+        self.kv = kv
+        self.prefill_into, self.decode_slots = backend.paged_fns(kv.bs)
+        self.slots: List[Optional[_Slot]] = [None] * kv.max_slots
+        self.tok_host = np.zeros((kv.max_slots,), np.int32)
+        self.joins: List[tuple] = []        # (slot, req, toks, blk_ids)
+        self.submitted_joins: List[tuple] = []
+        self.decode_rows: Optional[np.ndarray] = None
+
+    def admit(self, req: ServeRequest, prompt_pad: int) -> None:
+        toks = np.zeros((1, prompt_pad), np.int32)
+        toks[0, :min(len(req.prompt), prompt_pad)] = req.prompt[:prompt_pad]
+        slot, blk_ids = self.kv.alloc_slot(prompt_pad, req.max_new_tokens)
+        self.joins.append((slot, req, jnp.asarray(toks), jnp.asarray(blk_ids)))
+
+    def alive(self) -> bool:
+        return any(s is not None for s in self.slots) or bool(self.joins)
+
+
 @dataclasses.dataclass
 class ServeReport:
+    """One ``ClientHandler.run`` outcome: latency, elasticity, KV economy.
+
+    ``kv_util`` is the time-averaged fraction of *reserved* KV memory that
+    holds written tokens (sampled at every decode submission); contiguous
+    cohorts reserve ``rows x capacity`` up front while the paged pool only
+    reserves allocated blocks, which is the whole point of paging.
+    ``kv_reserved_peak`` is the peak reservation in tokens.
+    """
+
     completions: List[ServeCompletion]
     accepted: int
     rejected: int
@@ -240,16 +473,29 @@ class ServeReport:
     busy_energy_j: float
     pool_stats: Dict
     clone_samples: List[tuple]
+    kv_mode: str = "paged"
+    kv_util: float = 0.0
+    kv_reserved_peak: int = 0
 
     def summary(self) -> str:
+        """One-line digest (documented in docs/benchmarks.md)."""
         return (f"served={len(self.completions)} shed={self.rejected} "
                 f"p50={self.p50_latency_s:.3f}s p99={self.p99_latency_s:.3f}s "
+                f"ttft50={self.p50_ttft_s:.3f}s "
                 f"tok/s={self.tokens_per_s:.1f} "
+                f"kv={self.kv_mode} kv_util={self.kv_util:.0%} "
                 f"peak_secondaries={self.peak_secondaries}")
 
 
 class ClientHandler:
-    """Event-driven continuous-batching server on an elastic clone pool."""
+    """Event-driven continuous-batching server on an elastic clone pool.
+
+    ``kv="paged"`` (default): each clone runs a :class:`_SlotEngine` —
+    ``max_batch`` slots over a :class:`KVBlockPool`, per-slot decode
+    cursors, mid-flight admission into free slots.  ``kv="contiguous"``
+    keeps the PR-1 cohort path (shared cursor, step-boundary fusion only)
+    as the measurable baseline for the paged design.
+    """
 
     def __init__(self, backend, *, link: str = "wifi-local",
                  clone_type: str = "main", max_batch: int = 4,
@@ -257,9 +503,16 @@ class ClientHandler:
                  min_secondaries: int = 0, work_per_clone: int = 1,
                  prompt_pad: int = 8, use_primary: bool = True,
                  provision_paused: bool = True,
+                 kv: str = "paged", block_size: int = 8,
+                 num_blocks: Optional[int] = None,
                  executor: Optional[Callable] = None,
                  pool: Optional[ClonePool] = None,
                  clock: Optional[VirtualClock] = None):
+        if kv not in ("paged", "contiguous"):
+            raise ValueError(f"kv must be 'paged' or 'contiguous': {kv!r}")
+        self.kv_mode = kv
+        self.block_size = block_size
+        self.num_blocks = num_blocks
         self.backend = backend
         # one timeline: adopt a supplied pool's clock (TTL accounting and
         # dispatch must share it), otherwise build pool around ours
@@ -297,6 +550,9 @@ class ClientHandler:
         self.executor = executor
         self.busy_energy_j = 0.0
         self.tokens_emitted = 0
+        self.ledger = SlotLedger()
+        self.kv_samples: List[tuple] = []   # (written_tokens, reserved)
+        self._kv_pools: Dict[int, KVBlockPool] = {}   # clone.cid -> pool
 
     # ---------------------------------------------------------------- clones
     def _free_clone(self):
@@ -336,6 +592,10 @@ class ClientHandler:
     def _submit_decode(self, cohort: _Cohort):
         pos = jnp.int32(min(cohort.plen + cohort.step,
                             self.backend.capacity - 1))
+        written = len(cohort.reqs) * min(cohort.plen + cohort.step + 1,
+                                         self.backend.capacity)
+        self.kv_samples.append((written,
+                                len(cohort.reqs) * self.backend.capacity))
         task = self.dispatcher.submit(
             cohort.clone, self.backend.decode,
             (self.backend.params, cohort.cache, cohort.tok, pos),
@@ -372,13 +632,127 @@ class ClientHandler:
             cohort.cache = self.backend.cache_take(cohort.cache, keep)
         return True
 
+    # ------------------------------------------------------------- slots
+    def _start_engine(self, clone) -> _SlotEngine:
+        """Engine for ``clone``; the clone's KV pool is allocated once and
+        reused (reset) across engine generations — no per-spawn zeros."""
+        clone.busy = True
+        kv = self._kv_pools.get(clone.cid)
+        if kv is None:
+            kv = KVBlockPool(self.backend, self.max_batch, self.block_size,
+                             self.num_blocks)
+            self._kv_pools[clone.cid] = kv
+        else:
+            kv.reset()
+        return _SlotEngine(self.backend, clone, kv)
+
+    def _submit_engine_step(self, engine: _SlotEngine):
+        """One dispatched unit of engine work: fold every pending join's
+        prefill into the step, then decode all previously-active slots.
+
+        The dispatched closure is *pure* over its bound arguments (the
+        Venue executor re-runs it to stabilize timing), so all block/slot
+        bookkeeping happens here on the host before submission.
+        """
+        joins, engine.joins = engine.joins, []
+        engine.submitted_joins = joins
+        kv = engine.kv
+        rows = np.nonzero(kv.active)[0]
+        do_decode = rows.size > 0
+        engine.decode_rows = rows if do_decode else None
+        if do_decode:
+            kv.grow_for_write()
+            written = kv.written_tokens() + rows.size
+            self.kv_samples.append((written, kv.used_blocks() * kv.bs))
+        tables = jnp.asarray(kv.tables)
+        pos = jnp.asarray(np.minimum(kv.pos, self.backend.capacity - 1))
+        tok = jnp.asarray(engine.tok_host[:, None])
+        prefill_into, decode_slots = engine.prefill_into, engine.decode_slots
+        nbytes = 8 * rows.size
+        join_batch = None
+        if joins:
+            # joins landing at the same boundary prefill as ONE batched call
+            join_batch = (
+                jnp.concatenate([t for _, _, t, _ in joins], axis=0),
+                jnp.stack([b for _, _, _, b in joins]),
+                jnp.asarray([s for s, _, _, _ in joins], jnp.int32))
+            nbytes += int(join_batch[0].nbytes)
+
+        def step_fn(params, pool, tok, pos, tables):
+            firsts = None
+            if join_batch is not None:
+                toks, blks, slots = join_batch
+                firsts, pool = prefill_into(params, toks, pool, blks, slots)
+            nxt = None
+            if do_decode:
+                nxt, pool = decode_slots(params, pool, tok, pos, tables)
+            return firsts, nxt, pool
+
+        delay = (self.autoscaler.clone_ready_delay(engine.clone,
+                                                   self.clock.now())
+                 + self._net_s(nbytes))
+        task = self.dispatcher.submit(
+            engine.clone, step_fn,
+            (self.backend.params, kv.pool, tok, pos, tables),
+            executor=self.executor, extra_delay=delay,
+            label="step" if do_decode else "prefill")
+        self.busy_energy_j += (task.venue_seconds
+                               * engine.clone.spec.power_peak)
+        return task
+
+    def _engine_step_done(self, engine: _SlotEngine, task,
+                          completions: List[ServeCompletion]) -> bool:
+        """Fold a completed step back into host state.  True while alive."""
+        now = self.clock.now()
+        firsts, nxt, pool = task.value
+        kv = engine.kv
+        kv.pool = pool
+        firsts = [] if firsts is None else np.asarray(firsts)
+        for (slot, req, _, _), ft in zip(engine.submitted_joins, firsts):
+            t0 = int(ft)
+            engine.slots[slot] = _Slot(req, [t0], now)
+            engine.tok_host[slot] = t0
+            kv.active[slot] = True
+        engine.submitted_joins = []
+        if engine.decode_rows is not None and nxt is not None:
+            nxt = np.asarray(nxt)
+            for slot in engine.decode_rows:
+                s = engine.slots[slot]
+                s.out.append(int(nxt[slot]))
+                engine.tok_host[slot] = int(nxt[slot])
+                # clamp: past capacity the write position pins to the last
+                # slot (like the contiguous path), so the written-token
+                # count must not keep growing either
+                kv.pos[slot] = min(int(kv.pos[slot]) + 1, kv.capacity)
+            engine.decode_rows = None
+        for slot, s in enumerate(engine.slots):   # evict at step granularity
+            if s is not None and len(s.out) >= s.req.max_new_tokens:
+                self.tokens_emitted += len(s.out)
+                completions.append(ServeCompletion(
+                    s.req.rid, s.out, s.req.arrival_t, s.first_token_t,
+                    now, engine.clone.spec.name))
+                engine.slots[slot] = None
+                kv.free_slot(slot)
+        return engine.alive()
+
     # ------------------------------------------------------------------ run
     def run(self, requests: List[ServeRequest], *,
             drain_idle_s: float = 0.0) -> ServeReport:
+        """Serve ``requests`` on the virtual timeline; returns a report.
+
+        The loop (both KV modes): admit due arrivals into the bounded
+        queue; in paged mode, *offer queued requests to partially-full
+        in-flight engines first* (the :class:`~repro.core.scheduler.
+        SlotLedger` admission policy — mid-flight joins); autoscale on the
+        residual demand; start new engines/cohorts on free clones; then
+        advance time to the next task completion or arrival.
+        """
+        paged = self.kv_mode == "paged"
         reqs = sorted(requests, key=lambda r: r.arrival_t)
         t_start = self.clock.now()
         i = 0
-        inflight: Dict[object, _Cohort] = {}
+        inflight: Dict[object, object] = {}        # task -> engine | cohort
+        engines: Dict[int, _SlotEngine] = {}       # id -> live engine
         completions: List[ServeCompletion] = []
 
         while True:
@@ -386,17 +760,50 @@ class ClientHandler:
             while i < len(reqs) and reqs[i].arrival_t <= now + 1e-12:
                 self.queue.offer(reqs[i], now)
                 i += 1
+            if paged and engines:
+                # mid-flight joins: fill open slots of in-flight engines
+                # before counting residual demand or spawning new ones
+                # (block-commitment checked per request via ``fits``)
+                for key, eng in engines.items():
+                    self.ledger.update(key, eng.kv.free_slots)
+                # admit via on_assign so each fits() check sees the block
+                # commitments of earlier assignments in the same round
+                self.ledger.assign(
+                    self.queue,
+                    fits=lambda key, r: engines[key].kv.can_admit(
+                        self.prompt_pad, r.max_new_tokens),
+                    on_assign=lambda key, r: engines[key].admit(
+                        r, self.prompt_pad))
             # demand in cohort units: queued requests coalesce into batches
             queued_cohorts = -(-self.queue.depth // self.max_batch)
             self.autoscaler.step(now, queued_cohorts, len(inflight))
-            # form cohorts while a clone is free (join at step boundaries)
+            # spawn engines/cohorts while a clone is free
             while self.queue.depth > 0:
                 clone = self._free_clone()
                 if clone is None:
                     break
-                task, cohort = self._start_cohort(
-                    self.queue.take(self.max_batch), clone)
-                inflight[task] = cohort
+                if paged:
+                    engine = self._start_engine(clone)
+                    n = 0
+                    while (n < self.max_batch and self.queue.depth > 0
+                           and engine.kv.can_admit(
+                               self.prompt_pad,
+                               self.queue.peek().max_new_tokens)):
+                        engine.admit(self.queue.take(1)[0], self.prompt_pad)
+                        n += 1
+                    if n == 0:
+                        raise RuntimeError(
+                            "KV block pool too small to admit one request "
+                            f"(num_blocks={engine.kv.num_blocks}, "
+                            f"prompt_pad={self.prompt_pad}, "
+                            f"block_size={self.block_size})")
+                    engines[id(engine)] = engine
+                    self.ledger.update(id(engine), engine.kv.free_slots)
+                    inflight[self._submit_engine_step(engine)] = engine
+                else:
+                    task, cohort = self._start_cohort(
+                        self.queue.take(self.max_batch), clone)
+                    inflight[task] = cohort
 
             if inflight:
                 # bound the wait so due arrivals are admitted on time
@@ -406,17 +813,24 @@ class ClientHandler:
                     self.clock.advance_to(next_arrival)
                     continue
                 for task in self.dispatcher.wait_any(list(inflight)):
-                    cohort = inflight.pop(task)
-                    if cohort.phase == "prefill":
-                        tok, cohort.cache = task.value
-                        cohort.tok = tok[:, None]
-                        cohort.phase = "decode"
+                    unit = inflight.pop(task)
+                    if paged:
+                        if self._engine_step_done(unit, task, completions):
+                            inflight[self._submit_engine_step(unit)] = unit
+                        else:
+                            engines.pop(id(unit), None)
+                            self.ledger.drop(id(unit))
+                            self.pool.release([unit.clone])
                     else:
+                        cohort = unit
                         tok, cohort.cache = task.value
                         cohort.tok = tok[:, None]
-                        cohort.step += 1
-                    if self._retire(cohort, completions):
-                        inflight[self._submit_decode(cohort)] = cohort
+                        if cohort.phase == "prefill":
+                            cohort.phase = "decode"
+                        else:
+                            cohort.step += 1
+                        if self._retire(cohort, completions):
+                            inflight[self._submit_decode(cohort)] = cohort
             elif i < len(reqs):
                 self.clock.advance_to(reqs[i].arrival_t)
             elif self.queue.depth > 0:
@@ -434,6 +848,7 @@ class ClientHandler:
         ttft = np.array([c.ttft_s for c in completions]) \
             if completions else np.zeros(1)
         makespan = self.clock.now() - t_start - drain_idle_s
+        utils = [w / r for w, r in self.kv_samples if r > 0]
         return ServeReport(
             completions=completions,
             accepted=self.queue.accepted,
@@ -447,7 +862,11 @@ class ClientHandler:
             scale_ups=self.autoscaler.scale_ups,
             busy_energy_j=self.busy_energy_j,
             pool_stats=dict(self.pool.stats),
-            clone_samples=list(self.autoscaler.samples))
+            clone_samples=list(self.autoscaler.samples),
+            kv_mode=self.kv_mode,
+            kv_util=float(np.mean(utils)) if utils else 0.0,
+            kv_reserved_peak=max((r for _, r in self.kv_samples),
+                                 default=0))
 
 
 def main() -> None:
@@ -461,12 +880,14 @@ def main() -> None:
                     help="serve through the event-driven ClientHandler")
     ap.add_argument("--rate", type=float, default=4.0,
                     help="Poisson offered load (req/s) for --handler")
+    ap.add_argument("--kv", choices=["paged", "contiguous"], default="paged",
+                    help="KV cache mode for --handler")
     args = ap.parse_args()
 
     cfg = reduced_config(get_config(args.arch))
     if args.handler:
         backend = LMBackend(cfg, capacity=64)
-        handler = ClientHandler(backend, max_batch=args.batch)
+        handler = ClientHandler(backend, max_batch=args.batch, kv=args.kv)
         reqs = poisson_arrivals(args.rate, args.requests,
                                 prompt_len=8, vocab=cfg.vocab_size,
                                 max_new_tokens=args.new_tokens)

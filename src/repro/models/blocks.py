@@ -78,7 +78,8 @@ def _ring_positions(pos: jax.Array, window: int) -> jax.Array:
 def attn_apply(params: dict, x: jax.Array, cfg: ModelConfig, ctx: RunContext,
                rope: Tuple[jax.Array, jax.Array], cache: Optional[dict],
                mode: str, prefix_len: int, pos,
-               cache_capacity: int = 0) -> Tuple[jax.Array, Optional[dict]]:
+               cache_capacity: int = 0, block_tables=None,
+               block_size: int = 0) -> Tuple[jax.Array, Optional[dict]]:
     cos, sin = rope
     q = jnp.einsum("bsd,dhn->bshn", x, params["wq"],
                    preferred_element_type=jnp.float32).astype(x.dtype)
@@ -123,7 +124,35 @@ def attn_apply(params: dict, x: jax.Array, cfg: ModelConfig, ctx: RunContext,
             v = constrain(v, ctx, None, kv_m, None)
 
     new_cache = None
-    if mode == "decode":
+    if mode == "decode" and block_tables is not None:
+        # Paged decode: the cache leaves are a physical block pool
+        # (num_blocks, block_size, Hkv, D) shared by every slot; each row of
+        # the batch is one slot with its own cursor ``pos[i]`` and its own
+        # row of ``block_tables``.  The new token's K/V lands in the slot's
+        # current block; attention gathers the slot's blocks in logical
+        # order.  Inactive slots point every table entry at block 0 (the
+        # reserved trash block), so their writes can never corrupt live KV.
+        if cfg.window is not None:
+            raise NotImplementedError("paged KV cache requires full "
+                                      "attention (cfg.window=None)")
+        bsz = x.shape[0]
+        rows = jnp.arange(bsz)
+        blk = block_tables[rows, pos // block_size]          # (B,)
+        off = pos % block_size
+        ck = cache["k"].at[blk, off].set(k[:, 0])
+        cv = cache["v"].at[blk, off].set(v[:, 0])
+        if ctx.impl == "pallas":
+            from repro.kernels import ops as kops
+            out = kops.paged_attention(q, ck, cv, block_tables, pos + 1,
+                                       softcap=cfg.logit_softcap)
+        else:
+            hkv_n = ck.shape[2]
+            kg = ck[block_tables].reshape(bsz, -1, hkv_n, ck.shape[3])
+            vg = cv[block_tables].reshape(bsz, -1, hkv_n, cv.shape[3])
+            out = attention_xla(q, kg, vg, causal=True, window=None,
+                                softcap=cfg.logit_softcap, q_offset=pos)
+        new_cache = {"k": ck, "v": cv}
+    elif mode == "decode":
         capacity = cache["k"].shape[1]
         if cfg.window is not None and capacity == cfg.window:
             slot = pos % capacity
@@ -190,14 +219,15 @@ def attn_apply(params: dict, x: jax.Array, cfg: ModelConfig, ctx: RunContext,
 # --------------------------------------------------------------------------- #
 def block_apply(kind: str, params: dict, x: jax.Array, cfg: ModelConfig,
                 ctx: RunContext, rope, cache: Optional[dict], mode: str,
-                prefix_len: int, pos, cache_capacity: int = 0):
+                prefix_len: int, pos, cache_capacity: int = 0,
+                block_tables=None, block_size: int = 0):
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     h = apply_norm(x, params["norm1"], cfg.norm_type)
     if kind == "attn":
         mix, mix_cache = attn_apply(params["attn"], h, cfg, ctx, rope,
                                     cache, mode, prefix_len, pos,
-                                    cache_capacity)
+                                    cache_capacity, block_tables, block_size)
     elif kind == "rglru":
         mix, mix_cache = rglru.rglru_block_apply(params["rec"], h, cfg, ctx,
                                                  cache, mode)

@@ -145,6 +145,46 @@ def abstract_cache(cfg: ModelConfig, batch: int, capacity: int):
         functools.partial(init_cache, cfg, batch, capacity))
 
 
+def cache_axes(cfg: ModelConfig):
+    """Locate each cache leaf's (batch_axis, capacity_axis) by shape diffing.
+
+    Returns two trees matching :func:`init_cache`'s structure: the axis that
+    scales with batch, and the axis that scales with capacity (``None`` for
+    per-row state leaves such as recurrent hidden states, which have no
+    sequence storage).  The paged-KV machinery uses these to treat KV leaves
+    as block pools and state leaves as slot-indexed rows, without
+    hard-coding any block's cache layout.
+    """
+    def diff_axis(x, y):
+        d = [i for i, (p, q) in enumerate(zip(x.shape, y.shape)) if p != q]
+        return d[0] if d else None
+
+    b1, b2 = abstract_cache(cfg, 1, 16), abstract_cache(cfg, 2, 16)
+    c1, c2 = abstract_cache(cfg, 1, 8), abstract_cache(cfg, 1, 16)
+    return (jax.tree.map(diff_axis, b1, b2), jax.tree.map(diff_axis, c1, c2))
+
+
+def init_paged_cache(cfg: ModelConfig, max_slots: int, num_blocks: int,
+                     block_size: int, dtype=None) -> Dict:
+    """Zero paged decode cache: a block pool plus per-slot state rows.
+
+    Attention KV leaves become physical block pools — the contiguous
+    (B, capacity, Hkv, D) storage is replaced by (num_blocks, block_size,
+    Hkv, D); which blocks belong to which slot is the caller's block table.
+    Leaves with no capacity axis (recurrent state) keep one row per slot:
+    (max_slots, ...).  Block id 0 is conventionally the trash block that
+    inactive slots write into; allocators should never hand it out.
+    """
+    if cfg.window is not None:
+        raise NotImplementedError("paged KV cache requires full attention "
+                                  "(cfg.window=None)")
+    pool = init_cache(cfg, num_blocks, block_size, dtype)
+    state = init_cache(cfg, max_slots, 1, dtype)
+    _, cap_ax = cache_axes(cfg)
+    return jax.tree.map(
+        lambda kv, st, ax: kv if ax is not None else st, pool, state, cap_ax)
+
+
 def cache_logical_axes(cfg: ModelConfig):
     """Logical axes tree matching ``init_cache`` (leading layer-stack dim)."""
     pat, _, rest = grouping(cfg)
@@ -223,7 +263,8 @@ def _remat_wrap(fn, ctx: RunContext, mode: str):
 
 def apply_stack(cfg: ModelConfig, params: Dict, x: jax.Array,
                 ctx: RunContext, rope, cache: Optional[Dict], mode: str,
-                prefix_len: int, pos, cache_capacity: int = 0):
+                prefix_len: int, pos, cache_capacity: int = 0,
+                block_tables=None, block_size: int = 0):
     """Runs all layers. Returns (x, new_cache, aux)."""
     pat, n_groups, rest = grouping(cfg)
     want_cache = cache is not None or mode == "prefill"
@@ -239,7 +280,8 @@ def apply_stack(cfg: ModelConfig, params: Dict, x: jax.Array,
             c_i = None if layer_cache is None else layer_cache[f"b{i}"]
             xc, nc, a = blocks.block_apply(kind, layer_params[f"b{i}"], xc,
                                            cfg, ctx, rope, c_i, mode,
-                                           prefix_len, pos, cache_capacity)
+                                           prefix_len, pos, cache_capacity,
+                                           block_tables, block_size)
             if want_cache:
                 new_caches[f"b{i}"] = nc
         return (xc, aux + a), (new_caches if want_cache else None)
@@ -259,7 +301,8 @@ def apply_stack(cfg: ModelConfig, params: Dict, x: jax.Array,
         c_i = None if cache is None else cache["rest"][f"r{i}"]
         x, nc, a = blocks.block_apply(kind, params["layers"]["rest"][f"r{i}"],
                                       x, cfg, ctx, rope, c_i, mode,
-                                      prefix_len, pos, cache_capacity)
+                                      prefix_len, pos, cache_capacity,
+                                      block_tables, block_size)
         aux = aux + a
         if want_cache:
             new_rest[f"r{i}"] = nc
@@ -367,8 +410,17 @@ def forward(cfg: ModelConfig, params: Dict, batch: Dict, ctx: RunContext,
 
 
 def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,
-                tokens: jax.Array, pos: jax.Array, ctx: RunContext):
-    """One decode step. tokens: (B,1) int32; pos: scalar int32 cursor.
+                tokens: jax.Array, pos: jax.Array, ctx: RunContext,
+                block_tables: Optional[jax.Array] = None,
+                block_size: int = 0):
+    """One decode step. tokens: (B,1) int32.
+
+    ``pos`` is the decode cursor: a scalar int32 when the whole batch shares
+    one position (contiguous cohort cache), or a (B,) int32 vector of
+    *per-slot* cursors when ``block_tables`` (B, M) maps each row onto a
+    paged KV block pool (leaves (num_blocks, block_size, Hkv, D) instead of
+    (B, capacity, Hkv, D)).  Per-slot cursors are what let a late arrival
+    join an in-flight batch: rows no longer share a position.
 
     Returns (logits (B,V), new_cache).
     """
@@ -377,9 +429,14 @@ def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,
     if cfg.scale_embeddings:
         x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
     b = x.shape[0]
-    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    if jnp.ndim(pos) == 0:
+        positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    else:
+        positions = pos[:, None]
     rope = rope_tables(positions, cfg.head_dim, cfg.rope_theta)
     x, new_cache, _ = apply_stack(cfg, params, x, ctx, rope, cache, "decode",
-                                  prefix_len=0, pos=pos)
+                                  prefix_len=0, pos=pos,
+                                  block_tables=block_tables,
+                                  block_size=block_size)
     logits = unembed(cfg, params, x, ctx)
     return logits[:, 0], new_cache

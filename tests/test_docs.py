@@ -1,0 +1,62 @@
+"""Docs stay valid: intra-repo links resolve, code snippets execute, and
+the ServeReport.summary() format shown in docs/benchmarks.md matches the
+implementation (the docs are tier-1, not decoration)."""
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_markdown_links_resolve():
+    bad = []
+    for md in check_docs.doc_files([]):
+        bad += check_docs.check_links(md)
+    assert not bad, f"broken intra-repo links: {bad}"
+
+
+def test_docs_code_snippets_run():
+    bad = []
+    for md in check_docs.doc_files([]):
+        bad += check_docs.check_doctests(md)
+    assert not bad, f"doctest failures in docs: {bad}"
+
+
+def test_docs_exist_and_cover_the_stack():
+    arch = (REPO / "docs" / "architecture.md").read_text()
+    for layer in ("VirtualClock", "Dispatcher", "ClonePool", "ClientHandler",
+                  "SlotLedger", "KVBlockPool"):
+        assert layer in arch, f"architecture.md misses {layer}"
+    bench = (REPO / "docs" / "benchmarks.md").read_text()
+    for metric in ("ttft", "kv_util", "busy_J", "BENCH_serving.json"):
+        assert metric in bench, f"benchmarks.md misses {metric}"
+
+
+def test_serve_report_summary_matches_docs_format():
+    """The summary line shown in docs/benchmarks.md must be exactly what
+    ServeReport.summary() produces for those values."""
+    from repro.launch.serve import ServeReport
+
+    rep = ServeReport(
+        completions=[None] * 32, accepted=32, rejected=0, makespan_s=8.7,
+        p50_latency_s=0.211, p99_latency_s=0.334, p50_ttft_s=0.035,
+        tokens_per_s=22.0, peak_secondaries=1, scale_ups=1,
+        busy_energy_j=149.0, pool_stats={}, clone_samples=[],
+        kv_mode="paged", kv_util=0.75, kv_reserved_peak=64)
+    line = rep.summary()
+    bench = (REPO / "docs" / "benchmarks.md").read_text()
+    assert line in bench, (
+        f"docs/benchmarks.md does not show the real summary() format:\n"
+        f"{line}")
+    # and the format carries every headline quantity
+    for frag in ("served=32", "p99=0.334s", "ttft50=0.035s", "kv_util=75%"):
+        assert frag in line
+
+
+def test_readme_links_docs():
+    readme = (REPO / "README.md").read_text()
+    assert re.search(r"docs/architecture\.md", readme)
+    assert re.search(r"docs/benchmarks\.md", readme)

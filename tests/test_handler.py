@@ -11,7 +11,7 @@ from repro.core import (ClonePool, Dispatcher, ExecutionController,
                         split_batch)
 from repro.core.clones import BOOT_SECONDS, CloneState, resume_time
 from repro.core.parallel import SYNC_SECONDS_PER_CLONE
-from repro.core.scheduler import (AdmissionQueue, ServeRequest,
+from repro.core.scheduler import (AdmissionQueue, ServeRequest, SlotLedger,
                                   poisson_arrivals)
 
 
@@ -184,6 +184,108 @@ def test_admission_queue_sheds_beyond_depth():
     assert [r.rid for r in q.take(10)] == [0, 1]
 
 
+def test_slot_ledger_fills_tightest_engine_first():
+    q = AdmissionQueue()
+    for i in range(4):
+        q.offer(ServeRequest(i, np.zeros(4, np.int32)), now=0.0)
+    led = SlotLedger()
+    led.update("a", 3)
+    led.update("b", 1)
+    assert led.total_free == 4
+    picks = led.assign(q)
+    # tightest engine (b, 1 free) is refilled before the emptier one
+    assert [(k, r.rid) for k, r in picks] == \
+        [("b", 0), ("a", 1), ("a", 2), ("a", 3)]
+    assert led.total_free == 0 and q.depth == 0
+
+
+def test_slot_ledger_drop_and_zero_update():
+    led = SlotLedger()
+    led.update("a", 2)
+    led.update("a", 0)          # engine filled up -> forgotten
+    led.update("b", 1)
+    led.drop("b")
+    q = AdmissionQueue()
+    q.offer(ServeRequest(0, np.zeros(4, np.int32)), now=0.0)
+    assert led.assign(q) == [] and q.depth == 1
+
+
+def test_kv_block_pool_alloc_grow_free():
+    from repro.launch.serve import KVBlockPool
+    kv = KVBlockPool(FakeBackend(), max_slots=2, block_size=4)
+    assert kv.max_blk == 16                     # capacity 64 / bs 4
+    slot, ids = kv.alloc_slot(6, max_new_tokens=6)   # 2 blocks for 6 tokens
+    assert len(ids) == 2 and 0 not in ids       # trash block never handed out
+    assert kv.pos[slot] == 6 and kv.used_blocks() == 2
+    assert kv.need[slot] == 3 and kv.committed == 1  # 12 tokens -> 3 blocks
+    kv.active[slot] = True
+    kv.pos[slot] = 8                            # cursor hits block boundary
+    kv.grow_for_write()                         # next write needs block 3
+    assert kv.n_blocks_of[slot] == 3 and kv.used_blocks() == 3
+    assert kv.committed == 0                    # growth drew the commitment
+    kv.free_slot(slot)
+    assert kv.used_blocks() == 0 and kv.free_slots == 2
+    assert kv.committed == 0
+    assert not kv.tables.any()                  # table rows reset to trash
+
+
+def test_kv_block_pool_commitment_gates_admission():
+    """No overcommit: a slot's whole token budget is reserved up front, so
+    grow_for_write can never hit an empty free list mid-decode."""
+    from repro.launch.serve import KVBlockPool
+    # 4 real blocks; each request needs 4 (prompt 4 + 12 new = 16 tok / 4)
+    kv = KVBlockPool(FakeBackend(), max_slots=4, block_size=4, num_blocks=5)
+    assert kv.can_admit(4, 12)
+    slot, _ = kv.alloc_slot(4, 12)              # allocates 1, commits 3
+    assert kv.committed == 3
+    assert not kv.can_admit(4, 0)               # 3 free but all committed
+    kv.free_slot(slot)
+    assert kv.committed == 0 and kv.can_admit(4, 12)   # commitment returned
+
+
+def test_kv_block_pool_exhaustion_raises():
+    from repro.launch.serve import KVBlockPool
+    kv = KVBlockPool(FakeBackend(), max_slots=2, block_size=4, num_blocks=2)
+    assert not kv.can_admit(4, 60)              # needs 16 blocks, has 1
+    kv.alloc_slot(4)                            # takes the single real block
+    with pytest.raises(RuntimeError, match="exhausted"):
+        kv.alloc_slot(4)                        # direct misuse still raises
+
+
+def test_tight_block_pool_queues_instead_of_crashing():
+    """An under-provisioned pool (fewer blocks than worst case) must gate
+    admission on block commitments, serving requests in waves — not crash
+    mid-flight on an exhausted free list, even when decode growth spans
+    several blocks per request."""
+    h = _make_handler(max_batch=4, max_secondaries=0,
+                      num_blocks=5, block_size=4,   # 4 real blocks
+                      executor=lambda c, f, a: (f(*a), 0.1))
+    # prompt 4 + 9 new tokens = 13 -> 4 blocks each: one request at a time
+    reqs = [ServeRequest(i, np.zeros(4, np.int32), 9, arrival_t=0.0)
+            for i in range(6)]
+    rep = h.run(reqs)
+    assert len(rep.completions) == 6
+    assert sorted(c.rid for c in rep.completions) == list(range(6))
+    assert all(len(c.tokens) == 9 for c in rep.completions)
+
+
+def test_tight_pool_mid_flight_joins_respect_commitments():
+    """Regression: two late arrivals offered to the same in-flight engine
+    in one round must be admission-checked against each other's block
+    commitments, not both against stale pre-round pool state (which
+    overcommitted and crashed grow_for_write mid-decode)."""
+    h = _make_handler(max_batch=3, max_secondaries=0,
+                      num_blocks=9, block_size=4,   # 8 real blocks
+                      executor=lambda c, f, a: (f(*a), 0.5))
+    # each request needs 4 blocks (prompt 4 + 12 new = 16 tokens)
+    reqs = [ServeRequest(0, np.zeros(4, np.int32), 12, arrival_t=0.0),
+            ServeRequest(1, np.zeros(4, np.int32), 12, arrival_t=1.2),
+            ServeRequest(2, np.zeros(4, np.int32), 12, arrival_t=1.2)]
+    rep = h.run(reqs)                           # crashed before the fix
+    assert len(rep.completions) == 3
+    assert all(len(c.tokens) == 12 for c in rep.completions)
+
+
 def test_poisson_arrivals_deterministic():
     a = poisson_arrivals(4.0, 10, seed=3)
     b = poisson_arrivals(4.0, 10, seed=3)
@@ -196,7 +298,13 @@ def test_poisson_arrivals_deterministic():
 # virtual-clock scheduling, no model in the loop)
 # --------------------------------------------------------------------------- #
 class FakeBackend:
-    """Token i+1 follows token i; venue time injected via executor."""
+    """Token i+1 follows token i; venue time injected via executor.
+
+    Implements both the contiguous cohort protocol (prefill/decode/
+    cache_take) and the paged slot protocol (init_paged_pool/paged_fns),
+    so handler tests exercise the real KVBlockPool/SlotLedger machinery
+    with no model in the loop.
+    """
 
     capacity = 64
     params = None
@@ -210,6 +318,19 @@ class FakeBackend:
 
     def cache_take(self, cache, keep):
         return {"state": cache["state"][np.asarray(keep, np.int32)]}
+
+    # --- paged slot protocol -------------------------------------------
+    def init_paged_pool(self, max_slots, num_blocks, block_size):
+        return {}
+
+    def paged_fns(self, block_size):
+        def prefill_into(params, toks, pool, blk_ids, slots):
+            return np.zeros(int(toks.shape[0]), np.int32), pool
+
+        def decode_slots(params, pool, tok, pos, tables):
+            return np.asarray(tok)[:, 0] + 1, pool
+
+        return prefill_into, decode_slots
 
 
 def _make_handler(**kw):
@@ -276,6 +397,67 @@ def test_handler_adopts_supplied_pool_clock():
     assert len(pool.running_secondaries()) == 0  # TTL pause actually fired
     with pytest.raises(TypeError):
         ClientHandler(FakeBackend(), pool=ClonePool(clock=lambda: 0.0))
+
+
+def test_late_arrival_joins_in_flight_engine_next_step():
+    """Paged mode: a request arriving while the only clone is mid-decode is
+    admitted into a free slot at the next step boundary — it never waits
+    for the cohort to drain, so its TTFT beats step-boundary fusion."""
+    def trace():
+        return [ServeRequest(0, np.zeros(4, np.int32), max_new_tokens=8,
+                             arrival_t=0.0),
+                ServeRequest(1, np.zeros(4, np.int32), max_new_tokens=3,
+                             arrival_t=1.2)]     # mid-decode of rid 0
+
+    def run(kv):
+        h = _make_handler(max_batch=2, max_secondaries=0, kv=kv,
+                          executor=lambda c, f, a: (f(*a), 0.5))
+        return h.run(trace()), h
+
+    rep_p, h_p = run("paged")
+    rep_c, _ = run("contiguous")
+    bp = {c.rid: c for c in rep_p.completions}
+    bc = {c.rid: c for c in rep_c.completions}
+    assert bp[1].ttft_s < bc[1].ttft_s          # joined mid-flight
+    assert bp[1].tokens == bc[1].tokens == [0, 1, 2]
+    assert bp[0].tokens == bc[0].tokens
+    # one engine served both: the join reused the in-flight clone
+    assert rep_p.pool_stats["resumes"] == 0
+    assert rep_p.kv_mode == "paged" and rep_c.kv_mode == "contiguous"
+
+
+def test_paged_slots_retire_independently_and_blocks_recycle():
+    h = _make_handler(max_batch=3, max_secondaries=0,
+                      executor=lambda c, f, a: (f(*a), 0.1))
+    reqs = [ServeRequest(i, np.zeros(4, np.int32), max_new_tokens=n,
+                         arrival_t=0.0) for i, n in enumerate((2, 5, 9))]
+    rep = h.run(reqs)
+    by = {c.rid: c for c in rep.completions}
+    assert [len(by[i].tokens) for i in range(3)] == [2, 5, 9]
+    assert by[0].done_t < by[1].done_t < by[2].done_t
+    assert 0.0 < rep.kv_util <= 1.0
+
+
+def test_paged_join_reuses_freed_slot():
+    """More requests than slots: late arrivals take slots freed by earlier
+    retirements on the same in-flight engine (blocks recycle)."""
+    def run(kv):
+        h = _make_handler(max_batch=2, max_secondaries=0, kv=kv,
+                          executor=lambda c, f, a: (f(*a), 0.5))
+        return h.run([
+            ServeRequest(0, np.zeros(4, np.int32), 2, arrival_t=0.0),
+            ServeRequest(1, np.zeros(4, np.int32), 6, arrival_t=0.0),
+            ServeRequest(2, np.zeros(4, np.int32), 2, arrival_t=1.6)])
+
+    rep, rep_c = run("paged"), run("contiguous")
+    assert len(rep.completions) == 3
+    by = {c.rid: c for c in rep.completions}
+    by_c = {c.rid: c for c in rep_c.completions}
+    assert by[2].tokens == [0, 1]
+    # rid 2 took the slot rid 0 freed on the in-flight engine; under
+    # step-boundary fusion it must wait for the whole cohort to drain
+    assert by[2].ttft_s < by_c[2].ttft_s
+    assert by[2].done_t <= by[1].done_t < by_c[2].done_t
 
 
 def test_handler_admission_control_sheds_load():

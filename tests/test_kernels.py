@@ -58,6 +58,90 @@ def test_flash_attention_block_size_invariance():
 
 
 # --------------------------------------------------------------------------- #
+# paged attention (decode-time block-table gather)
+# --------------------------------------------------------------------------- #
+def _paged_case(key, b, hq, hkv, d, bs, lens, dtype=jnp.float32, seed=0):
+    """Random pool + a block table giving each slot distinct blocks."""
+    max_blk = max(-(-ln // bs) for ln in lens)
+    n_blocks = sum(-(-ln // bs) for ln in lens) + 1      # block 0 = trash
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = _rand(k1, (b, hq, d), dtype)
+    kp = _rand(k2, (n_blocks, bs, hkv, d), dtype)
+    vp = _rand(k3, (n_blocks, bs, hkv, d), dtype)
+    tables = np.zeros((b, max_blk), np.int32)
+    nxt = 1
+    for i, ln in enumerate(lens):
+        for j in range(-(-ln // bs)):
+            tables[i, j] = nxt
+            nxt += 1
+    return q, kp, vp, jnp.asarray(tables), jnp.asarray(np.asarray(lens,
+                                                                  np.int32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hq,hkv,d,bs,lens,softcap", [
+    (2, 4, 2, 32, 8, (5, 16), None),            # GQA 2:1, ragged lengths
+    (3, 6, 2, 32, 8, (1, 17, 32), None),        # boundary + full block
+    (1, 3, 3, 16, 4, (11,), 20.0),              # softcap, MHA
+])
+def test_paged_attention_kernel_matches_ref(b, hq, hkv, d, bs, lens, softcap,
+                                            dtype):
+    q, kp, vp, tables, cls = _paged_case(KEY, b, hq, hkv, d, bs, lens, dtype)
+    got = ops.paged_attention(q[:, None], kp, vp, tables, cls,
+                              softcap=softcap, interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, tables, cls, softcap=softcap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got[:, 0], np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_paged_attention_matches_contiguous_cache():
+    """Gathering a slot's blocks through the table == attending over the
+    same KV stored contiguously (the paged/contiguous equivalence that the
+    serving layer relies on for token-identical mid-flight joins)."""
+    lens = (5, 12, 8)
+    q, kp, vp, tables, cls = _paged_case(KEY, 3, 4, 2, 32, 4, lens)
+    got = ref.paged_attention_ref(q, kp, vp, tables, cls)
+    for i, ln in enumerate(lens):
+        nb = -(-ln // 4)
+        kc = np.asarray(kp)[np.asarray(tables)[i, :nb]].reshape(-1, 2, 32)
+        vc = np.asarray(vp)[np.asarray(tables)[i, :nb]].reshape(-1, 2, 32)
+        want = ref.flash_attention_ref(
+            q[i:i + 1, :, None],
+            jnp.swapaxes(jnp.asarray(kc[None, :ln]), 1, 2),
+            jnp.swapaxes(jnp.asarray(vc[None, :ln]), 1, 2),
+            causal=False)[:, :, 0]
+        np.testing.assert_allclose(np.asarray(got[i:i + 1]),
+                                   np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_paged_attention_ignores_stale_pool_contents():
+    """Positions past a slot's context length — the unwritten tail *inside*
+    an allocated block, and the whole trash block — must never leak into
+    its output, whatever garbage they hold."""
+    q, kp, vp, tables, cls = _paged_case(KEY, 2, 2, 2, 16, 4, (3, 7))
+    out0 = ops.paged_attention(q[:, None], kp, vp, tables, cls,
+                               interpret=True)
+    poisoned_k = kp.at[0].set(1e9)               # trash block
+    poisoned_v = vp.at[0].set(-1e9)
+    # unwritten tail inside allocated blocks: slot 0 (ctx 3) owns block 1,
+    # its position 3 is unwritten; slot 1 (ctx 7) owns blocks 2,3 — block
+    # 3's position 7 (offset 3) is unwritten
+    blk0 = int(np.asarray(tables)[0, 0])
+    blk1 = int(np.asarray(tables)[1, 1])
+    poisoned_k = poisoned_k.at[blk0, 3].set(1e9).at[blk1, 3].set(1e9)
+    poisoned_v = poisoned_v.at[blk0, 3].set(-1e9).at[blk1, 3].set(-1e9)
+    out1 = ops.paged_attention(q[:, None], poisoned_k, poisoned_v, tables,
+                               cls, interpret=True)
+    np.testing.assert_allclose(np.asarray(out0), np.asarray(out1))
+    # same invariant for the reference oracle
+    ref0 = ref.paged_attention_ref(q, kp, vp, tables, cls)
+    ref1 = ref.paged_attention_ref(q, poisoned_k, poisoned_v, tables, cls)
+    np.testing.assert_allclose(np.asarray(ref0), np.asarray(ref1))
+
+
+# --------------------------------------------------------------------------- #
 # rglru scan
 # --------------------------------------------------------------------------- #
 @pytest.mark.parametrize("b,s,r,bs", [

@@ -60,6 +60,44 @@ def test_split_range_covers_exactly(lo, width, k):
         assert b == c and a <= b and c <= d
 
 
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 2 ** 31 - 1),
+       st.sampled_from([2, 4, 8]),
+       st.lists(st.integers(min_value=1, max_value=24), min_size=1,
+                max_size=4))
+def test_block_table_gather_matches_contiguous_cache(seed, bs, lens):
+    """For any block size, context lengths, and (shuffled) physical block
+    placement, attention through a block-table gather equals attention over
+    the same KV stored contiguously — the invariant that makes paged decode
+    token-identical to the contiguous cohort cache."""
+    from repro.kernels import ref
+    rng = np.random.default_rng(seed)
+    b, hq, hkv, d = len(lens), 4, 2, 16
+    max_blk = max(-(-ln // bs) for ln in lens)
+    n_blocks = sum(-(-ln // bs) for ln in lens) + 1
+    kp = rng.standard_normal((n_blocks, bs, hkv, d)).astype(np.float32)
+    vp = rng.standard_normal((n_blocks, bs, hkv, d)).astype(np.float32)
+    q = rng.standard_normal((b, hq, d)).astype(np.float32)
+    perm = list(rng.permutation(np.arange(1, n_blocks)))   # scattered blocks
+    tables = np.zeros((b, max_blk), np.int32)
+    for i, ln in enumerate(lens):
+        for j in range(-(-ln // bs)):
+            tables[i, j] = perm.pop()
+    got = np.asarray(ref.paged_attention_ref(
+        jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp),
+        jnp.asarray(tables), jnp.asarray(np.asarray(lens, np.int32))))
+    for i, ln in enumerate(lens):
+        nb = -(-ln // bs)
+        kc = kp[tables[i, :nb]].reshape(-1, hkv, d)[:ln]
+        vc = vp[tables[i, :nb]].reshape(-1, hkv, d)[:ln]
+        want = np.asarray(ref.flash_attention_ref(
+            jnp.asarray(q[i:i + 1, :, None]),
+            jnp.swapaxes(jnp.asarray(kc[None]), 1, 2),
+            jnp.swapaxes(jnp.asarray(vc[None]), 1, 2),
+            causal=False))[:, :, 0]
+        np.testing.assert_allclose(got[i:i + 1], want, atol=2e-5, rtol=2e-5)
+
+
 @settings(deadline=None)
 @given(st.lists(st.floats(min_value=-1e4, max_value=1e4,
                           allow_nan=False, width=32),

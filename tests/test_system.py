@@ -168,16 +168,55 @@ def test_continuous_batching_matches_serial_path():
                        for i, p in enumerate(prompts)])
     assert {c.rid: c.tokens for c in rep.completions} == serial_tokens
 
-    # ragged token budgets: rid 0 leaves after 2 steps, rid 1 decodes on
+    # ragged token budgets: rid 0 leaves after 2 steps, rid 1 decodes on —
+    # both KV modes must match the serial path token-for-token
     serial2 = eng.serve_batch([Request(0, prompts[0], 2),
                                Request(1, prompts[1], 5)], force="local")
     s2 = {c.rid: c.tokens for c in serial2}
-    handler2 = ClientHandler(backend, max_batch=2, prompt_pad=6)
-    rep2 = handler2.run([ServeRequest(0, prompts[0], 2),
-                         ServeRequest(1, prompts[1], 5)])
-    c2 = {c.rid: c.tokens for c in rep2.completions}
-    assert c2[0] == s2[0][:2]
-    assert c2[1] == s2[1]
+    for kv in ("paged", "contiguous"):
+        handler2 = ClientHandler(backend, max_batch=2, prompt_pad=6, kv=kv)
+        rep2 = handler2.run([ServeRequest(0, prompts[0], 2),
+                             ServeRequest(1, prompts[1], 5)])
+        c2 = {c.rid: c.tokens for c in rep2.completions}
+        assert c2[0] == s2[0][:2]
+        assert c2[1] == s2[1]
+
+
+def test_mid_flight_join_faster_ttft_and_token_identical():
+    """Acceptance (ISSUE 2): a request arriving while a cohort is mid-decode
+    is admitted into a free slot at the next decode step, its TTFT is
+    strictly lower than under step-boundary fusion, and its tokens are
+    identical to running it in a fresh cohort.  Deterministic VirtualClock:
+    the executor pins every venue call to 0.5s."""
+    from repro.core.scheduler import ServeRequest
+    from repro.launch.serve import ClientHandler, LMBackend
+
+    cfg = reduced_config(get_config("smollm-360m"))
+    backend = LMBackend(cfg, capacity=32)
+    rng = np.random.default_rng(7)
+    pA = rng.integers(0, cfg.vocab_size, 6, dtype=np.int32)
+    pB = rng.integers(0, cfg.vocab_size, 6, dtype=np.int32)
+    ex = lambda c, f, a: (f(*a), 0.5)           # noqa: E731
+
+    def run(kv):
+        h = ClientHandler(backend, max_batch=2, prompt_pad=6,
+                          max_secondaries=0, kv=kv, executor=ex)
+        return h.run([ServeRequest(0, pA, 8, arrival_t=0.0),
+                      ServeRequest(1, pB, 4, arrival_t=1.2)])
+
+    rep_p, rep_c = run("paged"), run("contiguous")
+    paged = {c.rid: c for c in rep_p.completions}
+    fused = {c.rid: c for c in rep_c.completions}
+    # fresh-cohort (unfused) reference run of B alone
+    h_solo = ClientHandler(backend, max_batch=1, prompt_pad=6,
+                           max_secondaries=0, executor=ex)
+    solo = h_solo.run([ServeRequest(1, pB, 4, arrival_t=0.0)])
+    assert paged[1].ttft_s < fused[1].ttft_s
+    assert paged[1].tokens == solo.completions[0].tokens
+    assert paged[0].tokens == fused[0].tokens
+    # paged reserves blocks as tokens are written; contiguous reserves
+    # rows x capacity up front
+    assert rep_p.kv_util > rep_c.kv_util
 
 
 def test_serving_engine_stats_aggregate_decode_steps():

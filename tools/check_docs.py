@@ -1,0 +1,82 @@
+"""Docs checks: intra-repo markdown links resolve; doctest code snippets run.
+
+Used by the CI ``docs`` job and by ``tests/test_docs.py``:
+
+    PYTHONPATH=src python tools/check_docs.py [paths...]
+
+With no arguments, checks every ``*.md`` under ``docs/`` plus the top-level
+``README.md``.  Two checks per file:
+
+- every relative markdown link ``[text](target)`` resolves to an existing
+  file (anchors are stripped; ``http(s)``/``mailto`` links are skipped);
+- every fenced ```` ```python ```` block containing ``>>>`` prompts is run
+  through :mod:`doctest` (so the examples in the docs can't rot).
+"""
+from __future__ import annotations
+
+import doctest
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+_LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def check_links(md_path: Path) -> list:
+    """Return a list of 'file:link' strings for unresolvable links."""
+    bad = []
+    for target in _LINK.findall(md_path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (md_path.parent / rel).resolve().exists():
+            bad.append(f"{md_path.relative_to(REPO)}:{target}")
+    return bad
+
+
+def check_doctests(md_path: Path) -> list:
+    """doctest every ```python fence with >>> prompts; returns failures."""
+    failures = []
+    runner = doctest.DocTestRunner(optionflags=doctest.ELLIPSIS)
+    parser = doctest.DocTestParser()
+    for i, snippet in enumerate(_FENCE.findall(md_path.read_text())):
+        if ">>>" not in snippet:
+            continue
+        name = f"{md_path.relative_to(REPO)}[{i}]"
+        test = parser.get_doctest(snippet, {}, name, str(md_path), 0)
+        result = runner.run(test, clear_globs=True)
+        if result.failed:
+            failures.append(name)
+    return failures
+
+
+def doc_files(args: list) -> list:
+    if args:
+        return [Path(a).resolve() for a in args]
+    files = sorted((REPO / "docs").glob("*.md"))
+    readme = REPO / "README.md"
+    return files + ([readme] if readme.exists() else [])
+
+
+def main(argv: list) -> int:
+    bad_links, bad_tests = [], []
+    files = doc_files(argv)
+    for md in files:
+        bad_links += check_links(md)
+        bad_tests += check_doctests(md)
+    for b in bad_links:
+        print(f"BROKEN LINK  {b}")
+    for b in bad_tests:
+        print(f"DOCTEST FAIL {b}")
+    print(f"checked {len(files)} files: "
+          f"{len(bad_links)} broken links, {len(bad_tests)} doctest failures")
+    return 1 if (bad_links or bad_tests) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
