@@ -12,6 +12,20 @@ from typing import Dict, Optional, Sequence, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+
+def shard_map_compat(body, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` across jax versions (replication checks off).
+
+    jax >= 0.6 exposes it as ``jax.shard_map(check_vma=...)``; older
+    releases as ``jax.experimental.shard_map.shard_map(check_rep=...)``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
 # logical axis -> preferred mesh axis / tuple of axes (None = replicated)
 DEFAULT_RULES: Dict[str, object] = {
     # data-parallel dims

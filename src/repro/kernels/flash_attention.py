@@ -77,16 +77,25 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
-def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref,
-                  l_ref, acc_ref, *, scale: float,
-                  softcap: Optional[float], bs: int, nblk: int):
-    """One (slot, q-head, kv-block) step of decode-time paged attention.
+def _paged_decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref,
+                         l_ref, acc_ref, *, scale: float,
+                         softcap: Optional[float], bs: int, nblk: int):
+    """One (slot, head-group, kv-block) step of decode-time paged attention.
 
-    The block table and context lengths arrive as scalar prefetch so the KV
-    BlockSpec index map can chase ``tbl_ref`` — only the blocks a slot
+    One body serves both grids (the per-head grid is exactly the g=1 shape
+    of the fused one).  Fused flash-decoding grid (B, Hkv, M): all
+    ``g = Hq/Hkv`` query heads of a GQA group are computed as one (g, d)
+    tile against each KV block — every block staged HBM->VMEM exactly once
+    per group (g x less KV traffic) and the score matmul is a real
+    (g, d) x (d, bs) MXU tile rather than g separate matvecs.  Per-head
+    A/B grid (B, Hq, M): the same body with g=1 query tiles, re-staging
+    each block once per query head.
+
+    The block table and context lengths arrive as scalar prefetch so the
+    KV BlockSpec index map can chase ``tbl_ref`` — only the blocks a slot
     actually owns are ever staged into VMEM; there is no materialized
-    (B, M*bs, ...) gather.  Online-softmax state (m, l, acc) persists in
-    VMEM scratch across the sequential block grid dimension.
+    (B, M*bs, ...) gather.  Online-softmax state ((g,)/(g, d) m, l, acc)
+    persists in VMEM scratch across the sequential block grid dimension.
     """
     del tbl_ref                                   # consumed by the index maps
     b = pl.program_id(0)
@@ -101,7 +110,7 @@ def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref,
 
     @pl.when(j * bs < ctx)                        # block holds written slots
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)                  # (1, d)
+        q = q_ref[0, 0].astype(jnp.float32)                  # (g, d)
         k = k_ref[0, :, 0].astype(jnp.float32)               # (bs, d)
         v = v_ref[0, :, 0].astype(jnp.float32)               # (bs, d)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
@@ -126,9 +135,22 @@ def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref,
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def paged_kv_fetches(b: int, hq: int, hkv: int, m: int, *,
+                     fused: bool = True) -> int:
+    """KV blocks staged HBM->VMEM per decode step, per pool tensor.
+
+    Exactly the paged grid volume: the fused kernel walks (B, Hkv, M) and
+    fetches each (slot, block) once per *group*; the per-head kernel walks
+    (B, Hq, M) and re-stages every block g = Hq/Hkv times.  The benchmark
+    (benchmarks/decode_micro.py) reports this, so it must stay in lockstep
+    with the grids below.
+    """
+    return b * (hkv if fused else hq) * m
+
+
 def paged_attention_bhsd(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                          block_tables: jax.Array, context_lens: jax.Array, *,
-                         softcap: Optional[float] = None,
+                         softcap: Optional[float] = None, fused: bool = True,
                          interpret: bool = False) -> jax.Array:
     """Decode-time paged attention over a block-table KV pool.
 
@@ -136,38 +158,54 @@ def paged_attention_bhsd(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     k_pool, v_pool: (N, bs, Hkv, D) — the shared physical block pool;
     block_tables: (B, M) int32 — per-slot physical block ids, logical order;
     context_lens: (B,) int32 — tokens valid per slot.  Returns (B, Hq, 1, D).
+
+    ``fused=True`` (default) runs the flash-decoding grid (B, Hkv, M): all
+    g = Hq/Hkv query heads of a GQA group computed per KV block fetch.
+    ``fused=False`` keeps the original per-query-head grid (B, Hq, M) for
+    A/B measurement (see benchmarks/decode_micro.py).
     """
     b, hq, _, d = q.shape
     _, bs, hkv, _ = k_pool.shape
     m = block_tables.shape[1]
     g = hq // hkv
-    kern = functools.partial(_paged_kernel, scale=d ** -0.5, softcap=softcap,
-                             bs=bs, nblk=m)
+    # one kernel body, two grids: fused walks KV heads with (g, d) query
+    # tiles (q regrouped (B, Hq, 1, D) -> (B, Hkv, g, D) so one grid step
+    # owns a whole GQA group); per-head walks query heads with g=1 tiles
+    gq = g if fused else 1                        # query rows per grid step
+    hg = hkv if fused else hq                     # head grid dimension
+    qg = q[:, :, 0, :].reshape(b, hg, gq, d)
+    if fused:
+        def kv_map(b_, h, j, tbl, cl):
+            return (tbl[b_, j], 0, h, 0)
+    else:
+        def kv_map(b_, h, j, tbl, cl):
+            return (tbl[b_, j], 0, h // g, 0)
+    kern = functools.partial(_paged_decode_kernel, scale=d ** -0.5,
+                             softcap=softcap, bs=bs, nblk=m)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(b, hq, m),
+        grid=(b, hg, m),
         in_specs=[
-            pl.BlockSpec((1, 1, 1, d), lambda b_, h, j, tbl, cl:
+            pl.BlockSpec((1, 1, gq, d), lambda b_, h, j, tbl, cl:
                          (b_, h, 0, 0)),
-            pl.BlockSpec((1, bs, 1, d), lambda b_, h, j, tbl, cl:
-                         (tbl[b_, j], 0, h // g, 0)),
-            pl.BlockSpec((1, bs, 1, d), lambda b_, h, j, tbl, cl:
-                         (tbl[b_, j], 0, h // g, 0)),
+            pl.BlockSpec((1, bs, 1, d), kv_map),
+            pl.BlockSpec((1, bs, 1, d), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, 1, 1, d), lambda b_, h, j, tbl, cl:
+        out_specs=pl.BlockSpec((1, 1, gq, d), lambda b_, h, j, tbl, cl:
                                (b_, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((1,), jnp.float32),
-            pltpu.VMEM((1,), jnp.float32),
-            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((gq,), jnp.float32),
+            pltpu.VMEM((gq,), jnp.float32),
+            pltpu.VMEM((gq, d), jnp.float32),
         ],
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hq, 1, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, hg, gq, d), q.dtype),
         interpret=interpret,
-    )(block_tables, context_lens, q, k_pool, v_pool)
+    )(block_tables, context_lens, qg, k_pool, v_pool)
+    return out.reshape(b, hq, 1, d)
 
 
 def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,

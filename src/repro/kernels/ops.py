@@ -54,9 +54,9 @@ def flash_attention(q, k, v, *, causal: bool = True,
     return jnp.swapaxes(out[:, :, :s0], 1, 2)
 
 
-@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+@functools.partial(jax.jit, static_argnames=("softcap", "fused", "interpret"))
 def paged_attention(q, k_pool, v_pool, block_tables, context_lens, *,
-                    softcap: Optional[float] = None,
+                    softcap: Optional[float] = None, fused: bool = True,
                     interpret: Optional[bool] = None):
     """Decode-time paged attention, model layout.
 
@@ -66,12 +66,18 @@ def paged_attention(q, k_pool, v_pool, block_tables, context_lens, *,
     Returns (B, 1, Hq, D).  The kernel gathers KV blocks through the block
     table with scalar prefetch, so slots scattered anywhere in the pool cost
     the same as a contiguous cache.
+
+    ``fused=True`` (default) is the flash-decoding grid: each KV block is
+    staged once per GQA *group* and all g = Hq/Hkv query heads of the group
+    hit the MXU as one (g, d) tile.  ``fused=False`` keeps the per-query-
+    head grid for A/B measurement (benchmarks/decode_micro.py).
     """
     interpret = _interpret_default() if interpret is None else interpret
     qt = jnp.swapaxes(q, 1, 2)                   # (B, Hq, 1, D)
     out = _fa.paged_attention_bhsd(
         qt, k_pool, v_pool, block_tables.astype(jnp.int32),
-        context_lens.astype(jnp.int32), softcap=softcap, interpret=interpret)
+        context_lens.astype(jnp.int32), softcap=softcap, fused=fused,
+        interpret=interpret)
     return jnp.swapaxes(out, 1, 2)
 
 

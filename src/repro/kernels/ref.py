@@ -47,6 +47,11 @@ def paged_attention_ref(q, k_pool, v_pool, block_tables, context_lens, *,
     per-slot cursor + 1).  Returns (B, Hq, D).  Positions >= context_lens[i]
     (including every slot of an unused table entry) are masked out, so stale
     pool contents can never leak into a slot's output.
+
+    This is the single oracle for *both* paged kernel grids — the per-head
+    (B, Hq, M) kernel and the GQA-fused flash-decoding (B, Hkv, M) kernel —
+    because fusion only changes how often a KV block is staged, never the
+    math; tests assert both against it (tests/test_kernels.py).
     """
     b, hq, d = q.shape
     _, bs, hkv, _ = k_pool.shape
@@ -61,7 +66,11 @@ def paged_attention_ref(q, k_pool, v_pool, block_tables, context_lens, *,
         scores = softcap * jnp.tanh(scores / softcap)
     ok = jnp.arange(k.shape[1])[None, :] < context_lens[:, None]   # (B, M*bs)
     scores = jnp.where(ok[:, None, :], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1)
+    # re-mask after softmax: for a live row this is exact (masked probs
+    # underflow to 0.0), while a context_lens==0 row — where softmax
+    # degrades to uniform over pure garbage — goes to all-zero output,
+    # matching the kernel's zero accumulator
+    probs = jax.nn.softmax(scores, axis=-1) * ok[:, None, :]
     out = jnp.einsum("bhk,bhkd->bhd", probs, vv.astype(jnp.float32))
     return out.astype(q.dtype)
 

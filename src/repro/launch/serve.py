@@ -106,7 +106,8 @@ class LMBackend:
         self.decode = jax.jit(decode_fn)
         # locate each cache leaf's batch/capacity axes by diffing shapes
         self._batch_axis, self._cap_axis = model.cache_axes(cfg)
-        self._paged_fns: Dict[int, tuple] = {}
+        self._paged_fns: Dict[tuple, tuple] = {}      # (bs, donate)
+        self._paged_win_fns: Dict[tuple, object] = {}  # (bs, window, donate)
 
     def cache_mem_bytes(self, batch: int) -> int:
         return pytree_bytes(model.abstract_cache(self.cfg, batch,
@@ -128,26 +129,48 @@ class LMBackend:
         return model.init_paged_cache(self.cfg, max_slots, num_blocks,
                                       block_size)
 
-    def paged_fns(self, block_size: int):
-        """(prefill_into, decode_slots) jitted pure fns for one block size.
+    def paged_fns(self, block_size: int, window: int = 1,
+                  donate: bool = False):
+        """(prefill_into, decode_slots, decode_window) jitted fns.
 
         ``prefill_into(params, toks (J,P), pool, blk_ids (J,nb0), slots
         (J,))`` prefills J prompts in one batched call and scatters each
         row's KV into its pool blocks (and its recurrent state into its
         slot row), returning ``(first_tokens (J,), new_pool)``.  Joins
         landing at the same step boundary therefore cost one prefill, like
-        a contiguous cohort.
+        a contiguous cohort.  Rows whose slot id is out of range (the
+        power-of-two bucket padding) scatter nowhere: their state-row
+        update is dropped and their KV lands in the trash block.
 
         ``decode_slots(params, pool, tok (S,1), pos (S,), tables (S,M))``
         runs one decode step for every slot at its own cursor, returning
         ``(next_tokens (S,), new_pool)``.  Inactive slots must carry
         ``pos=0`` and an all-zero table row so their writes land in the
         trash block.
+
+        ``decode_window(params, pool, tok (S,1), pos (S,), steps_left (S,),
+        tables (S,M))`` is the flash-decoding fast path: ``window`` greedy
+        steps fused into one ``lax.scan`` dispatch (``model.decode_loop``),
+        returning ``(tokens (S, window), new_pool)``.  Rows exhaust their
+        ``steps_left`` mid-window and park further writes in the trash
+        block until the host-side boundary.
+
+        ``donate=True`` adds ``donate_argnums`` on the pool so each step
+        updates the KV pool in place instead of deep-copying it.  A donated
+        call *consumes* its pool argument — callers whose executor re-runs
+        a closure (the default simulated Venue re-times cheap calls) must
+        keep ``donate=False``; see docs/architecture.md ADR-002.
         """
-        if block_size in self._paged_fns:
-            return self._paged_fns[block_size]
+        # prefill_into / decode_slots don't depend on the window: cache
+        # them under (bs, donate) so handlers with different windows share
+        # one compiled prefill graph; only decode_window is window-keyed
+        base_key = (block_size, donate)
+        win_key = (block_size, window, donate)
+        if base_key in self._paged_fns and win_key in self._paged_win_fns:
+            return self._paged_fns[base_key] + (self._paged_win_fns[win_key],)
         cfg, ctx = self.cfg, self.ctx
         b_ax, c_ax = self._batch_axis, self._cap_axis
+        capacity = self.capacity
 
         def prefill_into(params, toks, pool, blk_ids, slots):
             j, nb0 = blk_ids.shape
@@ -160,7 +183,8 @@ class LMBackend:
                 if cax is None:                      # per-slot state rows
                     lp = jnp.moveaxis(pool_leaf, bax, 0)
                     rows = jnp.moveaxis(pre, bax, 0)
-                    return jnp.moveaxis(lp.at[slots].set(rows), 0, bax)
+                    return jnp.moveaxis(lp.at[slots].set(rows, mode="drop"),
+                                        0, bax)
                 lp = jnp.moveaxis(pool_leaf, (bax, cax), (0, 1))
                 pr = jnp.moveaxis(pre, (bax, cax), (0, 1))
                 pr = pr.reshape((j * nb0, block_size) + pr.shape[2:])
@@ -176,9 +200,20 @@ class LMBackend:
                 block_size=block_size)
             return jnp.argmax(logits, -1), pool
 
-        fns = (jax.jit(prefill_into), jax.jit(decode_slots))
-        self._paged_fns[block_size] = fns
-        return fns
+        def decode_window(params, pool, tok, pos, steps_left, tables):
+            return model.decode_loop(
+                cfg, params, pool, tok, pos, steps_left, ctx,
+                block_tables=tables, block_size=block_size,
+                num_steps=window, capacity=capacity)
+
+        if base_key not in self._paged_fns:
+            self._paged_fns[base_key] = (
+                jax.jit(prefill_into, donate_argnums=(2,)),
+                jax.jit(decode_slots, donate_argnums=(1,))) if donate else (
+                jax.jit(prefill_into), jax.jit(decode_slots))
+        self._paged_win_fns[win_key] = jax.jit(
+            decode_window, donate_argnums=(1,) if donate else ())
+        return self._paged_fns[base_key] + (self._paged_win_fns[win_key],)
 
 
 class ServingEngine:
@@ -317,6 +352,9 @@ class KVBlockPool:
         self.n_blocks_of = np.zeros((max_slots,), np.int32)
         self.need = np.zeros((max_slots,), np.int32)
         self.committed = 0          # blocks promised to slots, unallocated
+        # bumped on every host-side table mutation; _SlotEngine caches the
+        # device copy of ``tables`` against it (re-upload only when dirty)
+        self.tables_version = 0
         self._free_slots = list(range(max_slots - 1, -1, -1))
         self._free_blocks = list(range(self.num_blocks - 1, 0, -1))
 
@@ -331,6 +369,7 @@ class KVBlockPool:
         self.n_blocks_of[:] = 0
         self.need[:] = 0
         self.committed = 0
+        self.tables_version += 1
         self._free_slots = list(range(self.max_slots - 1, -1, -1))
         self._free_blocks = list(range(self.num_blocks - 1, 0, -1))
 
@@ -380,19 +419,35 @@ class KVBlockPool:
         self.n_blocks_of[slot] = nb0
         self.need[slot] = self._need_blocks(prompt_len, max_new_tokens)
         self.committed += max(0, int(self.need[slot]) - nb0)
+        self.tables_version += 1
         return slot, np.asarray(ids, np.int32)
 
-    def grow_for_write(self) -> None:
-        """Before a decode step: every active slot must own the block its
-        next token lands in (cursor may have crossed a block boundary).
-        Growth draws down the slot's admission-time commitment."""
+    def grow_for_window(self, counts) -> None:
+        """Before a decode window: every active slot must own every block
+        its next ``counts[slot]`` token writes land in (the window may
+        cross several block boundaries, so the whole window's blocks are
+        reserved up front — the scan cannot call back into the allocator
+        mid-flight).  Growth draws down the slot's admission-time
+        commitment; write positions clamp at ``capacity - 1`` exactly like
+        the decode path, so a window running past capacity needs no block
+        beyond the last."""
         for slot in np.nonzero(self.active)[0]:
-            blk_i = int(self.pos[slot]) // self.bs
-            if blk_i >= int(self.n_blocks_of[slot]) and blk_i < self.max_blk:
+            n = int(counts[slot])
+            if n <= 0:
+                continue
+            last = min(int(self.pos[slot]) + n - 1, self.capacity - 1)
+            top = min(last // self.bs, self.max_blk - 1)
+            while int(self.n_blocks_of[slot]) <= top:
+                blk_i = int(self.n_blocks_of[slot])
                 self.tables[slot, blk_i] = self._alloc_block()
                 self.n_blocks_of[slot] = blk_i + 1
                 if blk_i < int(self.need[slot]):
                     self.committed -= 1
+                self.tables_version += 1
+
+    def grow_for_write(self) -> None:
+        """One-token lookahead: the per-token decode path's pre-step grow."""
+        self.grow_for_window(self.active.astype(np.int32))
 
     def free_slot(self, slot: int) -> None:
         """Retire a slot: return its blocks and its unused commitment,
@@ -406,6 +461,7 @@ class KVBlockPool:
         self.active[slot] = False
         self.n_blocks_of[slot] = 0
         self.need[slot] = 0
+        self.tables_version += 1
         self._free_slots.append(slot)
 
 
@@ -429,15 +485,33 @@ class _SlotEngine:
     return to the pool with no cache re-gather.
     """
 
-    def __init__(self, backend, clone, kv: KVBlockPool):
+    def __init__(self, backend, clone, kv: KVBlockPool, window: int = 1,
+                 donate: bool = False):
         self.clone = clone
         self.kv = kv
-        self.prefill_into, self.decode_slots = backend.paged_fns(kv.bs)
+        self.window = window
+        # decode_slots (the per-token fn) is deliberately unused here: the
+        # engine always dispatches windows (window=1 == one-step window);
+        # benchmarks/decode_micro.py is the per-token fn's only caller
+        self.prefill_into, _, self.decode_window = \
+            backend.paged_fns(kv.bs, window, donate)
         self.slots: List[Optional[_Slot]] = [None] * kv.max_slots
         self.tok_host = np.zeros((kv.max_slots,), np.int32)
         self.joins: List[tuple] = []        # (slot, req, toks, blk_ids)
         self.submitted_joins: List[tuple] = []
         self.decode_rows: Optional[np.ndarray] = None
+        self.decode_counts: Optional[np.ndarray] = None
+        self._tables_dev = None             # device tables cache
+        self._tables_ver = -1
+
+    def device_tables(self):
+        """Device copy of ``kv.tables``, re-uploaded only when the host
+        table has been dirtied since the last step (alloc/grow/free/reset
+        all bump ``tables_version``)."""
+        if self._tables_ver != self.kv.tables_version:
+            self._tables_dev = jnp.asarray(self.kv.tables)
+            self._tables_ver = self.kv.tables_version
+        return self._tables_dev
 
     def admit(self, req: ServeRequest, prompt_pad: int) -> None:
         toks = np.zeros((1, prompt_pad), np.int32)
@@ -505,14 +579,28 @@ class ClientHandler:
                  provision_paused: bool = True,
                  kv: str = "paged", block_size: int = 8,
                  num_blocks: Optional[int] = None,
+                 decode_window: int = 1, donate_kv: bool = False,
                  executor: Optional[Callable] = None,
                  pool: Optional[ClonePool] = None,
                  clock: Optional[VirtualClock] = None):
         if kv not in ("paged", "contiguous"):
             raise ValueError(f"kv must be 'paged' or 'contiguous': {kv!r}")
+        if decode_window < 1:
+            raise ValueError(f"decode_window must be >= 1: {decode_window}")
+        if decode_window > 1 and kv != "paged":
+            raise ValueError("decode_window > 1 requires kv='paged' (the "
+                             "contiguous cohort path decodes per token)")
+        if donate_kv and executor is None:
+            # the default Venue executor re-runs a closure to stabilize its
+            # timing; a donated pool is consumed by the first run
+            raise ValueError("donate_kv needs an executor that runs each "
+                             "dispatch exactly once (the default venue "
+                             "executor re-times cheap calls)")
         self.kv_mode = kv
         self.block_size = block_size
         self.num_blocks = num_blocks
+        self.decode_window = decode_window
+        self.donate_kv = donate_kv
         self.backend = backend
         # one timeline: adopt a supplied pool's clock (TTL accounting and
         # dispatch must share it), otherwise build pool around ours
@@ -644,11 +732,15 @@ class ClientHandler:
             self._kv_pools[clone.cid] = kv
         else:
             kv.reset()
-        return _SlotEngine(self.backend, clone, kv)
+        return _SlotEngine(self.backend, clone, kv, self.decode_window,
+                           self.donate_kv)
 
     def _submit_engine_step(self, engine: _SlotEngine):
         """One dispatched unit of engine work: fold every pending join's
-        prefill into the step, then decode all previously-active slots.
+        prefill into the step, then decode a multi-token *window* for all
+        previously-active slots (one device dispatch for up to
+        ``decode_window`` tokens per slot; rows at their budget park
+        mid-window writes in the trash block).
 
         The dispatched closure is *pure* over its bound arguments (the
         Venue executor re-runs it to stabilize timing), so all block/slot
@@ -660,32 +752,59 @@ class ClientHandler:
         rows = np.nonzero(kv.active)[0]
         do_decode = rows.size > 0
         engine.decode_rows = rows if do_decode else None
+        # tokens each slot will emit this window: min(window, budget left)
+        counts = np.zeros((kv.max_slots,), np.int32)
         if do_decode:
-            kv.grow_for_write()
-            written = kv.written_tokens() + rows.size
+            for slot in rows:
+                s = engine.slots[slot]
+                counts[slot] = min(engine.window,
+                                   s.req.max_new_tokens - len(s.out))
+            kv.grow_for_window(counts)       # whole window's blocks up front
+            # written-token sample: writes past capacity pin to the last
+            # cell (same clamp the host fold applies to kv.pos), so they
+            # must not count as newly written either
+            eff = np.minimum(counts, np.maximum(kv.capacity - kv.pos, 0))
+            written = kv.written_tokens() + int(eff.sum())
             self.kv_samples.append((written, kv.used_blocks() * kv.bs))
-        tables = jnp.asarray(kv.tables)
+        engine.decode_counts = counts
+        tables = engine.device_tables()      # re-uploaded only when dirty
         pos = jnp.asarray(np.minimum(kv.pos, self.backend.capacity - 1))
         tok = jnp.asarray(engine.tok_host[:, None])
-        prefill_into, decode_slots = engine.prefill_into, engine.decode_slots
-        nbytes = 8 * rows.size
+        steps_left = jnp.asarray(counts)
+        prefill_into = engine.prefill_into
+        decode_window = engine.decode_window
+        nbytes = 8 * int(counts.sum())
         join_batch = None
         if joins:
-            # joins landing at the same boundary prefill as ONE batched call
-            join_batch = (
-                jnp.concatenate([t for _, _, t, _ in joins], axis=0),
-                jnp.stack([b for _, _, _, b in joins]),
-                jnp.asarray([s for s, _, _, _ in joins], jnp.int32))
-            nbytes += int(join_batch[0].nbytes)
+            # joins landing at the same boundary prefill as ONE batched
+            # call, padded to a power-of-two bucket so the prefill only
+            # ever compiles for log2(max_batch) join counts.  Pad rows
+            # scatter nowhere: slot id ``max_slots`` is out of range
+            # (state-row update dropped) and block id 0 is the trash block.
+            j = len(joins)
+            jpad = 1 << (j - 1).bit_length()
+            toks = jnp.concatenate(
+                [t for _, _, t, _ in joins]
+                + [jnp.zeros((jpad - j,) + joins[0][2].shape[1:],
+                             jnp.int32)] * (jpad > j), axis=0)
+            blks = jnp.concatenate(
+                [jnp.stack([b for _, _, _, b in joins])]
+                + [jnp.zeros((jpad - j, joins[0][3].shape[0]),
+                             jnp.int32)] * (jpad > j), axis=0)
+            slots = jnp.asarray([s for s, _, _, _ in joins]
+                                + [kv.max_slots] * (jpad - j), jnp.int32)
+            join_batch = (toks, blks, slots)
+            nbytes += int(toks.nbytes)
 
-        def step_fn(params, pool, tok, pos, tables):
+        def step_fn(params, pool, tok, pos, steps_left, tables):
             firsts = None
             if join_batch is not None:
                 toks, blks, slots = join_batch
                 firsts, pool = prefill_into(params, toks, pool, blks, slots)
             nxt = None
             if do_decode:
-                nxt, pool = decode_slots(params, pool, tok, pos, tables)
+                nxt, pool = decode_window(params, pool, tok, pos,
+                                          steps_left, tables)
             return firsts, nxt, pool
 
         delay = (self.autoscaler.clone_ready_delay(engine.clone,
@@ -693,7 +812,7 @@ class ClientHandler:
                  + self._net_s(nbytes))
         task = self.dispatcher.submit(
             engine.clone, step_fn,
-            (self.backend.params, kv.pool, tok, pos, tables),
+            (self.backend.params, kv.pool, tok, pos, steps_left, tables),
             executor=self.executor, extra_delay=delay,
             label="step" if do_decode else "prefill")
         self.busy_energy_j += (task.venue_seconds
@@ -715,15 +834,17 @@ class ClientHandler:
             kv.active[slot] = True
         engine.submitted_joins = []
         if engine.decode_rows is not None and nxt is not None:
-            nxt = np.asarray(nxt)
-            for slot in engine.decode_rows:
-                s = engine.slots[slot]
-                s.out.append(int(nxt[slot]))
-                engine.tok_host[slot] = int(nxt[slot])
-                # clamp: past capacity the write position pins to the last
-                # slot (like the contiguous path), so the written-token
-                # count must not keep growing either
-                kv.pos[slot] = min(int(kv.pos[slot]) + 1, kv.capacity)
+            nxt = np.asarray(nxt)                       # (S, window)
+            rows = engine.decode_rows
+            n = engine.decode_counts[rows]              # >= 1 per active row
+            # vectorized fold: last live token and the capacity clamp via
+            # fancy indexing (the clamp: past capacity the write position
+            # pins to the last slot, like the contiguous path, so the
+            # written-token count must not keep growing either)
+            engine.tok_host[rows] = nxt[rows, n - 1]
+            kv.pos[rows] = np.minimum(kv.pos[rows] + n, kv.capacity)
+            for slot, row, k in zip(rows, nxt[rows].tolist(), n.tolist()):
+                engine.slots[slot].out.extend(row[:k])
             engine.decode_rows = None
         for slot, s in enumerate(engine.slots):   # evict at step granularity
             if s is not None and len(s.out) >= s.req.max_new_tokens:
@@ -882,12 +1003,15 @@ def main() -> None:
                     help="Poisson offered load (req/s) for --handler")
     ap.add_argument("--kv", choices=["paged", "contiguous"], default="paged",
                     help="KV cache mode for --handler")
+    ap.add_argument("--window", type=int, default=1,
+                    help="decode window: tokens fused per device dispatch")
     args = ap.parse_args()
 
     cfg = reduced_config(get_config(args.arch))
     if args.handler:
         backend = LMBackend(cfg, capacity=64)
-        handler = ClientHandler(backend, max_batch=args.batch, kv=args.kv)
+        handler = ClientHandler(backend, max_batch=args.batch, kv=args.kv,
+                                decode_window=args.window)
         reqs = poisson_arrivals(args.rate, args.requests,
                                 prompt_len=8, vocab=cfg.vocab_size,
                                 max_new_tokens=args.new_tokens)

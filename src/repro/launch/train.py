@@ -51,10 +51,11 @@ def build_compressed_train_step(cfg, opt_cfg, ctx):
                                    metrics)
             return new_params, new_opt, ef, metrics
 
-        new_p, new_o, new_ef, metrics = jax.shard_map(
+        from repro.distributed.sharding import shard_map_compat
+        new_p, new_o, new_ef, metrics = shard_map_compat(
             local_step, mesh=ctx.mesh,
             in_specs=(P(), P(), P(), P("data")),
-            out_specs=(P(), P(), P(), P()), check_vma=False,
+            out_specs=(P(), P(), P(), P()),
         )(state["params"], state["opt"], state["ef"], batch)
         return {"params": new_p, "opt": new_o, "ef": new_ef}, metrics
 

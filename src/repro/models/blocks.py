@@ -144,7 +144,8 @@ def attn_apply(params: dict, x: jax.Array, cfg: ModelConfig, ctx: RunContext,
         if ctx.impl == "pallas":
             from repro.kernels import ops as kops
             out = kops.paged_attention(q, ck, cv, block_tables, pos + 1,
-                                       softcap=cfg.logit_softcap)
+                                       softcap=cfg.logit_softcap,
+                                       fused=ctx.paged_fused)
         else:
             hkv_n = ck.shape[2]
             kg = ck[block_tables].reshape(bsz, -1, hkv_n, ck.shape[3])

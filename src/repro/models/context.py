@@ -20,6 +20,9 @@ class RunContext:
     model_axis: str = "model"
     impl: str = "xla"                          # xla | pallas
     remat: str = "full"                        # none | dots | full
+    # paged decode kernel: GQA-fused flash-decoding grid (B, Hkv, M) vs the
+    # per-query-head grid (B, Hq, M) — kept only as the A/B baseline
+    paged_fused: bool = True
     moe_capacity_factor: float = 1.25
     # hillclimb knobs (see EXPERIMENTS.md §Perf)
     seq_shard_attn: bool = False               # sequence-parallel attention

@@ -344,10 +344,11 @@ def _ce_vocab_sharded(logits: jax.Array, targets: jax.Array,
         ll = jax.lax.psum(jnp.where(ok, ll_loc, 0.0), m)
         return jnp.log(denom) + lmax - ll
 
-    return jax.shard_map(
+    from repro.distributed.sharding import shard_map_compat
+    return shard_map_compat(
         body, mesh=ctx.mesh,
         in_specs=(P(dp, None, m), P(dp, None)),
-        out_specs=P(dp, None), check_vma=False)(logits, targets)
+        out_specs=P(dp, None))(logits, targets)
 
 
 def cross_entropy(logits: jax.Array, targets: jax.Array,
@@ -440,3 +441,52 @@ def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,
                                   block_size=block_size)
     logits = unembed(cfg, params, x, ctx)
     return logits[:, 0], new_cache
+
+
+def decode_loop(cfg: ModelConfig, params: Dict, cache: Dict,
+                tokens: jax.Array, pos: jax.Array, steps_left: jax.Array,
+                ctx: RunContext, *, block_tables: jax.Array,
+                block_size: int, num_steps: int, capacity: int):
+    """Fused multi-token decode: ``num_steps`` greedy steps in ONE dispatch.
+
+    A ``lax.scan`` over T :func:`decode_step` calls, entirely on device —
+    greedy (argmax) sampling, per-slot cursor advance, and the block-table-
+    indexed KV writes all happen inside the scan, so the host↔device
+    round-trip cost drops from one-per-token to one-per-window.
+
+    tokens: (B, 1) int32 — each slot's current token; pos: (B,) int32
+    per-slot cursors (``kv.pos`` convention: may equal ``capacity``);
+    steps_left: (B,) int32 — tokens still to emit per slot this window.
+    A row whose ``steps_left`` is exhausted (or 0: an empty slot) is *dead*:
+    its table row and cursor are masked to 0 so its KV write lands in the
+    trash block (block 0) and its emitted token freezes — the host frees
+    the slot's real blocks only at the window boundary, so mid-window
+    completions can never corrupt live KV.  Cursor advance clamps exactly
+    like the per-token serving path (write position pins to ``capacity-1``
+    past the end), which is what makes the window token-identical to T
+    calls of :func:`decode_step`.
+
+    Returns (tokens_out (B, T) int32, new_cache); row i of ``tokens_out``
+    holds the token emitted at each step (frozen once the row dies).
+    """
+    tok0 = tokens[:, 0].astype(jnp.int32)
+    tables = block_tables.astype(jnp.int32)
+    steps_left = steps_left.astype(jnp.int32)
+
+    def step(carry, t):
+        cache, tok, cur = carry
+        live = t < steps_left
+        eff_tables = jnp.where(live[:, None], tables, 0)
+        eff_pos = jnp.where(live, jnp.minimum(cur, capacity - 1), 0)
+        logits, cache = decode_step(cfg, params, cache, tok[:, None],
+                                    eff_pos, ctx, block_tables=eff_tables,
+                                    block_size=block_size)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        nxt = jnp.where(live, nxt, tok)
+        cur = jnp.where(live, jnp.minimum(cur + 1, capacity), cur)
+        return (cache, nxt, cur), nxt
+
+    (cache, _, _), toks = jax.lax.scan(
+        step, (cache, tok0, pos.astype(jnp.int32)),
+        jnp.arange(num_steps, dtype=jnp.int32))
+    return jnp.swapaxes(toks, 0, 1), cache

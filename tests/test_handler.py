@@ -323,14 +323,25 @@ class FakeBackend:
     def init_paged_pool(self, max_slots, num_blocks, block_size):
         return {}
 
-    def paged_fns(self, block_size):
+    def paged_fns(self, block_size, window=1, donate=False):
         def prefill_into(params, toks, pool, blk_ids, slots):
             return np.zeros(int(toks.shape[0]), np.int32), pool
 
         def decode_slots(params, pool, tok, pos, tables):
             return np.asarray(tok)[:, 0] + 1, pool
 
-        return prefill_into, decode_slots
+        def decode_window(params, pool, tok, pos, steps_left, tables):
+            # mirrors model.decode_loop: live rows count up, dead rows
+            # freeze their token
+            cur = np.asarray(tok)[:, 0].astype(np.int32)
+            sl = np.asarray(steps_left)
+            out = np.zeros((cur.size, window), np.int32)
+            for t in range(window):
+                cur = np.where(t < sl, cur + 1, cur)
+                out[:, t] = cur
+            return out, pool
+
+        return prefill_into, decode_slots, decode_window
 
 
 def _make_handler(**kw):
@@ -458,6 +469,88 @@ def test_paged_join_reuses_freed_slot():
     # step-boundary fusion it must wait for the whole cohort to drain
     assert by[2].ttft_s < by_c[2].ttft_s
     assert by[2].done_t <= by[1].done_t < by_c[2].done_t
+
+
+def test_decode_window_token_identical_and_fewer_dispatches():
+    """A multi-token decode window must emit exactly the per-token path's
+    tokens while issuing ~1/T the decode dispatches — under a fixed
+    per-dispatch venue cost that shows up directly as makespan."""
+    def run(window):
+        calls = {"n": 0}
+
+        def ex(clone, fn, args):
+            calls["n"] += 1
+            return fn(*args), 0.5               # fixed cost per dispatch
+        h = _make_handler(max_batch=2, max_secondaries=0, executor=ex,
+                          decode_window=window)
+        reqs = [ServeRequest(0, np.zeros(4, np.int32), max_new_tokens=8),
+                ServeRequest(1, np.zeros(4, np.int32), max_new_tokens=5)]
+        return h.run(reqs), calls["n"]
+
+    rep1, n1 = run(1)
+    rep4, n4 = run(4)
+    by1 = {c.rid: c.tokens for c in rep1.completions}
+    by4 = {c.rid: c.tokens for c in rep4.completions}
+    assert by4 == by1                           # token-identical
+    assert n4 < n1 / 2                          # window amortizes dispatch
+    assert rep4.makespan_s < rep1.makespan_s
+
+
+def test_decode_window_mid_window_completion_keeps_budgets():
+    """Rows hitting their budget mid-window stop at exactly
+    ``max_new_tokens`` tokens (the scan parks their writes, the host fold
+    truncates at the submitted per-slot count)."""
+    h = _make_handler(max_batch=3, max_secondaries=0, decode_window=4,
+                      executor=lambda c, f, a: (f(*a), 0.1))
+    reqs = [ServeRequest(i, np.zeros(4, np.int32), max_new_tokens=n,
+                         arrival_t=0.0) for i, n in enumerate((1, 6, 10))]
+    rep = h.run(reqs)
+    by = {c.rid: c.tokens for c in rep.completions}
+    assert [len(by[i]) for i in range(3)] == [1, 6, 10]
+    # FakeBackend counts up from the prefill token: budgets sliced exactly
+    assert by[2] == list(range(10))
+
+
+def test_donate_kv_requires_single_run_executor():
+    with pytest.raises(ValueError):
+        from repro.launch.serve import ClientHandler
+        ClientHandler(FakeBackend(), donate_kv=True)
+
+
+def test_decode_window_rejected_on_contiguous_kv():
+    from repro.launch.serve import ClientHandler
+    with pytest.raises(ValueError):
+        ClientHandler(FakeBackend(), kv="contiguous", decode_window=4,
+                      executor=lambda c, f, a: (f(*a), 0.05))
+
+
+def test_join_prefill_pads_to_power_of_two_buckets():
+    """3 simultaneous joins prefill as one bucket-of-4 batched call; the
+    prefill sees a padded row whose slot id is out of range."""
+    seen = []
+
+    class Probe(FakeBackend):
+        def paged_fns(self, block_size, window=1, donate=False):
+            pf, ds, dw = FakeBackend.paged_fns(self, block_size, window,
+                                               donate)
+
+            def prefill_into(params, toks, pool, blk_ids, slots):
+                seen.append((int(toks.shape[0]), np.asarray(slots).copy()))
+                return pf(params, toks, pool, blk_ids, slots)
+
+            return prefill_into, ds, dw
+
+    from repro.launch.serve import ClientHandler
+    h = ClientHandler(Probe(), prompt_pad=4, max_batch=4, max_secondaries=0,
+                      executor=lambda c, f, a: (f(*a), 0.05))
+    reqs = [ServeRequest(i, np.zeros(4, np.int32), max_new_tokens=2,
+                         arrival_t=0.0) for i in range(3)]
+    rep = h.run(reqs)
+    assert len(rep.completions) == 3
+    j, slots = seen[0]
+    assert j == 4                               # 3 joins -> bucket of 4
+    assert slots[-1] == 4                       # pad row: out-of-range slot
+    assert sorted(slots[:3]) == [0, 1, 2]
 
 
 def test_handler_admission_control_sheds_load():

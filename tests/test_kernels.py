@@ -78,22 +78,45 @@ def _paged_case(key, b, hq, hkv, d, bs, lens, dtype=jnp.float32, seed=0):
                                                                   np.int32))
 
 
+@pytest.mark.parametrize("fused", [True, False])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("b,hq,hkv,d,bs,lens,softcap", [
     (2, 4, 2, 32, 8, (5, 16), None),            # GQA 2:1, ragged lengths
     (3, 6, 2, 32, 8, (1, 17, 32), None),        # boundary + full block
-    (1, 3, 3, 16, 4, (11,), 20.0),              # softcap, MHA
+    (1, 3, 3, 16, 4, (11,), 20.0),              # softcap, MHA (group 1)
+    (2, 8, 2, 16, 4, (3, 9), None),             # GQA 4:1
 ])
 def test_paged_attention_kernel_matches_ref(b, hq, hkv, d, bs, lens, softcap,
-                                            dtype):
+                                            dtype, fused):
     q, kp, vp, tables, cls = _paged_case(KEY, b, hq, hkv, d, bs, lens, dtype)
     got = ops.paged_attention(q[:, None], kp, vp, tables, cls,
-                              softcap=softcap, interpret=True)
+                              softcap=softcap, fused=fused, interpret=True)
     want = ref.paged_attention_ref(q, kp, vp, tables, cls, softcap=softcap)
     tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
     np.testing.assert_allclose(np.asarray(got[:, 0], np.float32),
                                np.asarray(want, np.float32), atol=tol,
                                rtol=tol)
+
+
+@pytest.mark.parametrize("hq,hkv", [(2, 2), (4, 2), (8, 2)])   # groups 1/2/4
+def test_paged_attention_fused_matches_per_head_kernel(hq, hkv):
+    """The GQA-fused flash-decoding grid computes exactly what the per-head
+    grid computes — fusion only changes KV staging, never the math — and it
+    stages each block g x fewer times (the fetch accounting the benchmark
+    reports)."""
+    from repro.kernels.flash_attention import paged_kv_fetches
+    lens = (5, 13, 24)
+    q, kp, vp, tables, cls = _paged_case(KEY, 3, hq, hkv, 16, 8, lens)
+    fused = ops.paged_attention(q[:, None], kp, vp, tables, cls,
+                                fused=True, interpret=True)
+    unfused = ops.paged_attention(q[:, None], kp, vp, tables, cls,
+                                  fused=False, interpret=True)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               atol=2e-6, rtol=2e-6)
+    g = hq // hkv
+    m = tables.shape[1]
+    assert paged_kv_fetches(3, hq, hkv, m, fused=False) == \
+        g * paged_kv_fetches(3, hq, hkv, m, fused=True)
 
 
 def test_paged_attention_matches_contiguous_cache():
@@ -116,13 +139,14 @@ def test_paged_attention_matches_contiguous_cache():
                                    np.asarray(want), atol=2e-5, rtol=2e-5)
 
 
-def test_paged_attention_ignores_stale_pool_contents():
+@pytest.mark.parametrize("fused", [True, False])
+def test_paged_attention_ignores_stale_pool_contents(fused):
     """Positions past a slot's context length — the unwritten tail *inside*
     an allocated block, and the whole trash block — must never leak into
     its output, whatever garbage they hold."""
     q, kp, vp, tables, cls = _paged_case(KEY, 2, 2, 2, 16, 4, (3, 7))
     out0 = ops.paged_attention(q[:, None], kp, vp, tables, cls,
-                               interpret=True)
+                               fused=fused, interpret=True)
     poisoned_k = kp.at[0].set(1e9)               # trash block
     poisoned_v = vp.at[0].set(-1e9)
     # unwritten tail inside allocated blocks: slot 0 (ctx 3) owns block 1,
@@ -133,12 +157,26 @@ def test_paged_attention_ignores_stale_pool_contents():
     poisoned_k = poisoned_k.at[blk0, 3].set(1e9).at[blk1, 3].set(1e9)
     poisoned_v = poisoned_v.at[blk0, 3].set(-1e9).at[blk1, 3].set(-1e9)
     out1 = ops.paged_attention(q[:, None], poisoned_k, poisoned_v, tables,
-                               cls, interpret=True)
+                               cls, fused=fused, interpret=True)
     np.testing.assert_allclose(np.asarray(out0), np.asarray(out1))
     # same invariant for the reference oracle
     ref0 = ref.paged_attention_ref(q, kp, vp, tables, cls)
     ref1 = ref.paged_attention_ref(q, poisoned_k, poisoned_v, tables, cls)
     np.testing.assert_allclose(np.asarray(ref0), np.asarray(ref1))
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_paged_attention_zero_context_slot_outputs_zero(fused):
+    """A context_lens==0 row (empty/inactive slot) must output exact zeros
+    in both kernel grids AND the oracle — not a softmax over garbage."""
+    q, kp, vp, tables, cls = _paged_case(KEY, 2, 4, 2, 16, 4, (7, 8))
+    cls = cls.at[1].set(0)
+    want = np.asarray(ref.paged_attention_ref(q, kp, vp, tables, cls))
+    np.testing.assert_array_equal(want[1], 0.0)
+    got = np.asarray(ops.paged_attention(q[:, None], kp, vp, tables, cls,
+                                         fused=fused, interpret=True))
+    np.testing.assert_array_equal(got[1], 0.0)
+    np.testing.assert_allclose(got[:, 0], want, atol=2e-5, rtol=2e-5)
 
 
 # --------------------------------------------------------------------------- #

@@ -150,6 +150,110 @@ def test_moe_capacity_drops_are_bounded():
     assert np.isfinite(float(l_full)) and np.isfinite(float(l_tight))
 
 
+def _paged_decode_state(cfg, ctx, params, prompt_lens, block_size, capacity):
+    """Write each slot's random prompt into a paged pool via decode steps.
+
+    Returns (cache, tables, tok (B,1), pos (B,)) — the state a serving
+    engine would hold right before a decode window.
+    """
+    slots = len(prompt_lens)
+    max_blk = capacity // block_size
+    pool = model.init_paged_cache(cfg, slots, slots * max_blk + 1,
+                                  block_size)
+    rng = np.random.default_rng(11)
+    tables = np.zeros((slots, max_blk), np.int32)
+    nxt_blk = 1
+    for i, ln in enumerate(prompt_lens):
+        for j in range(-(-ln // block_size)):
+            tables[i, j] = nxt_blk
+            nxt_blk += 1
+    prompts = [rng.integers(0, cfg.vocab_size, ln).astype(np.int32)
+               for ln in prompt_lens]
+    tok = np.zeros((slots, 1), np.int32)
+    pos = np.zeros((slots,), np.int32)
+    for t in range(max(prompt_lens)):
+        cur = np.array([[p[t] if t < len(p) else 0] for p in prompts],
+                       np.int32)
+        live = np.array([t < len(p) for p in prompts])
+        logits, pool = model.decode_step(
+            cfg, params, pool, jnp.asarray(cur),
+            jnp.asarray(np.where(live, pos, 0)), ctx,
+            block_tables=jnp.asarray(np.where(live[:, None], tables, 0)),
+            block_size=block_size)
+        nx = np.asarray(jnp.argmax(logits, -1), np.int32)
+        tok = np.where(live[:, None], nx[:, None], tok)
+        pos = np.where(live, pos + 1, pos)
+    return pool, tables, tok, pos
+
+
+def _stepwise_decode(cfg, ctx, params, cache, tables, tok, pos, budgets,
+                     block_size, capacity, num_steps):
+    """The PR-2 per-token path: T decode_step dispatches with host masking
+    between steps (dead rows -> trash block), mirroring the serving loop."""
+    cur, p = tok[:, 0].copy(), pos.copy()
+    out = np.zeros((len(budgets), num_steps), np.int32)
+    for t in range(num_steps):
+        live = t < budgets
+        logits, cache = model.decode_step(
+            cfg, params, cache, jnp.asarray(cur[:, None]),
+            jnp.asarray(np.where(live, np.minimum(p, capacity - 1), 0)),
+            ctx,
+            block_tables=jnp.asarray(np.where(live[:, None], tables, 0)),
+            block_size=block_size)
+        nx = np.asarray(jnp.argmax(logits, -1), np.int32)
+        cur = np.where(live, nx, cur)
+        out[:, t] = cur
+        p = np.where(live, np.minimum(p + 1, capacity), p)
+    return out, cache
+
+
+def test_decode_loop_matches_stepwise_decode():
+    """decode_loop(T) — one on-device scan — must emit token-identical
+    output to T host-driven decode_step calls, across ragged budgets
+    (mid-window completions park in the trash block) and an inactive slot,
+    and leave a bitwise-identical KV pool behind."""
+    cfg = reduced_config(get_config("smollm-360m"))
+    ctx = RunContext()
+    params = model.init(cfg, KEY)
+    bs, cap, T = 4, 16, 4
+    cache, tables, tok, pos = _paged_decode_state(
+        cfg, ctx, params, prompt_lens=[3, 5, 1], block_size=bs, capacity=cap)
+    budgets = np.array([T, 2, 0], np.int32)     # full / mid-window / empty
+
+    want, cache_ref = _stepwise_decode(
+        cfg, ctx, params, jax.tree.map(jnp.copy, cache), tables, tok, pos,
+        budgets, bs, cap, T)
+    got, cache_win = model.decode_loop(
+        cfg, params, jax.tree.map(jnp.copy, cache), jnp.asarray(tok),
+        jnp.asarray(pos), jnp.asarray(budgets), ctx,
+        block_tables=jnp.asarray(tables), block_size=bs, num_steps=T,
+        capacity=cap)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    for a, b in zip(jax.tree.leaves(cache_ref), jax.tree.leaves(cache_win)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_decode_loop_past_capacity_clamps_like_stepwise():
+    """A window running past ``capacity`` pins its writes to the last cell
+    exactly like the per-token path (the contiguous-path clamp rule)."""
+    cfg = reduced_config(get_config("smollm-360m"))
+    ctx = RunContext()
+    params = model.init(cfg, KEY)
+    bs, cap, T = 4, 8, 6
+    cache, tables, tok, pos = _paged_decode_state(
+        cfg, ctx, params, prompt_lens=[6, 4], block_size=bs, capacity=cap)
+    budgets = np.array([T, T], np.int32)        # slot 0 crosses capacity
+    want, _ = _stepwise_decode(
+        cfg, ctx, params, jax.tree.map(jnp.copy, cache), tables, tok, pos,
+        budgets, bs, cap, T)
+    got, _ = model.decode_loop(
+        cfg, params, jax.tree.map(jnp.copy, cache), jnp.asarray(tok),
+        jnp.asarray(pos), jnp.asarray(budgets), ctx,
+        block_tables=jnp.asarray(tables), block_size=bs, num_steps=T,
+        capacity=cap)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
 def test_cache_logical_axes_match_cache_structure():
     for arch in list_archs():
         cfg = reduced_config(get_config(arch))

@@ -98,6 +98,76 @@ def test_block_table_gather_matches_contiguous_cache(seed, bs, lens):
         np.testing.assert_allclose(got[i:i + 1], want, atol=2e-5, rtol=2e-5)
 
 
+class _DecodeLoopRig:
+    """Shared tiny model + paged decode state for the decode_loop property.
+
+    Built once (module scope) so hypothesis examples only re-run the cheap
+    decode calls; all shapes are fixed across examples, so the jitted
+    decode_step / decode_loop compile exactly once each.
+    """
+
+    SLOTS, BLOCK, CAP, T = 3, 4, 16, 4
+
+    def __init__(self):
+        import test_models as tm      # sibling module (pytest sys.path)
+        from repro.configs import get_config, reduced_config
+        from repro.models import model
+        from repro.models.context import RunContext
+        self.model = model
+        self.cfg = reduced_config(get_config("smollm-360m"))
+        self.ctx = RunContext()
+        self.params = model.init(self.cfg, jnp.asarray([0, 5],
+                                                       dtype=jnp.uint32))
+        self.cache, self.tables, self.tok, self.pos = tm._paged_decode_state(
+            self.cfg, self.ctx, self.params, prompt_lens=[3, 5, 2],
+            block_size=self.BLOCK, capacity=self.CAP)
+        self._stepwise = tm._stepwise_decode
+
+    def run(self, budgets, warmup):
+        """Advance each slot ``warmup`` extra tokens (randomizing cursors),
+        then compare decode_loop vs stepwise over ``budgets``."""
+        import jax
+        cache = jax.tree.map(jnp.copy, self.cache)
+        warm = np.asarray(warmup, np.int32)
+        tok, pos = self.tok, self.pos
+        if warm.max() > 0:
+            out, cache = self._stepwise(self.cfg, self.ctx, self.params,
+                                        cache, self.tables, tok, pos, warm,
+                                        self.BLOCK, self.CAP,
+                                        int(warm.max()))
+            rows = np.arange(self.SLOTS)
+            tok = np.where(warm > 0, out[rows, warm - 1],
+                           tok[:, 0])[:, None].astype(np.int32)
+            pos = np.minimum(pos + warm, self.CAP)
+        budgets = np.asarray(budgets, np.int32)
+        want, _ = self._stepwise(self.cfg, self.ctx, self.params,
+                                 jax.tree.map(jnp.copy, cache), self.tables,
+                                 tok, pos, budgets, self.BLOCK, self.CAP,
+                                 self.T)
+        got, _ = self.model.decode_loop(
+            self.cfg, self.params, cache, jnp.asarray(tok),
+            jnp.asarray(pos), jnp.asarray(budgets), self.ctx,
+            block_tables=jnp.asarray(self.tables), block_size=self.BLOCK,
+            num_steps=self.T, capacity=self.CAP)
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+_RIG = []
+
+
+@settings(deadline=None, max_examples=12)
+@given(st.lists(st.integers(0, _DecodeLoopRig.T), min_size=3, max_size=3),
+       st.lists(st.integers(0, 3), min_size=3, max_size=3))
+def test_decode_loop_token_identical_to_stepwise(budgets, warmup):
+    """For any slot occupancy (budget 0 = empty slot), cursor offsets, and
+    mid-window completions (budget < T), one decode_loop dispatch emits
+    exactly the tokens of T host-driven decode_step dispatches — the
+    invariant that lets the serving layer fuse T tokens per round-trip."""
+    if not _RIG:
+        _RIG.append(_DecodeLoopRig())
+    _RIG[0].run(budgets, warmup)
+
+
 @settings(deadline=None)
 @given(st.lists(st.floats(min_value=-1e4, max_value=1e4,
                           allow_nan=False, width=32),

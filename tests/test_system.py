@@ -182,6 +182,37 @@ def test_continuous_batching_matches_serial_path():
         assert c2[1] == s2[1]
 
 
+def test_decode_window_matches_serial_path_real_model():
+    """Acceptance (ISSUE 3): the fused decode window — ragged budgets, a
+    mid-window completion, a mid-flight join — serves exactly the tokens of
+    the batch-serial path, while dispatching T tokens per device round-trip."""
+    from repro.core.scheduler import ServeRequest
+    from repro.launch.serve import ClientHandler, LMBackend
+
+    cfg = reduced_config(get_config("smollm-360m"))
+    backend = LMBackend(cfg, capacity=32)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, 6, dtype=np.int32)
+               for _ in range(3)]
+    eng = ServingEngine(cfg, capacity=32, backend=backend)
+    s1 = {c.rid: c.tokens for c in eng.serve_batch(
+        [Request(0, prompts[0], 2), Request(1, prompts[1], 7)],
+        force="local")}
+    s2 = {c.rid: c.tokens for c in eng.serve_batch(
+        [Request(2, prompts[2], 5)], force="local")}
+
+    handler = ClientHandler(backend, max_batch=2, prompt_pad=6,
+                            decode_window=4,
+                            executor=lambda c, f, a: (f(*a), 0.5))
+    rep = handler.run([ServeRequest(0, prompts[0], 2, arrival_t=0.0),
+                       ServeRequest(1, prompts[1], 7, arrival_t=0.0),
+                       ServeRequest(2, prompts[2], 5, arrival_t=1.2)])
+    got = {c.rid: c.tokens for c in rep.completions}
+    assert got[0] == s1[0][:2]                  # mid-window completion
+    assert got[1] == s1[1]
+    assert got[2] == s2[2][:5]                  # mid-flight join, own slots
+
+
 def test_mid_flight_join_faster_ttft_and_token_identical():
     """Acceptance (ISSUE 2): a request arriving while a cohort is mid-decode
     is admitted into a free slot at the next decode step, its TTFT is

@@ -1,0 +1,96 @@
+"""Benchmark-artifact schema checks: BENCH_decode.json invariants.
+
+Used by the CI ``docs`` job and runnable standalone:
+
+    python tools/check_bench.py [path/to/BENCH_decode.json]
+
+Beyond key/type presence, this asserts the two claims the artifact exists
+to document (ISSUE 3 acceptance):
+
+- the fused kernel stages each KV block once per GQA *group*: every kernel
+  sweep row must show ``kv_fetches_unfused == group * kv_fetches_fused``;
+- the on-device decode window amortizes dispatch: every ``decode_loop``
+  row must show ``dispatches_per_token <= 1/window`` (one device dispatch
+  per T-token window) and token-identical output vs the per-token path.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DEFAULT = REPO / "BENCH_decode.json"
+
+_TOP_KEYS = ("benchmark", "arch", "interpret", "kernel_sweep", "decode_loop")
+_SWEEP_KEYS = ("b", "hq", "hkv", "group", "block_size", "num_blocks",
+               "fused_us", "unfused_us", "kv_fetches_fused",
+               "kv_fetches_unfused", "fetch_ratio")
+_LOOP_KEYS = ("window", "dispatches_per_token", "us_per_token",
+              "us_per_token_stepwise", "pool_donated", "tokens_match")
+
+
+def check(path: Path) -> list:
+    """Return a list of human-readable violations (empty == pass)."""
+    bad = []
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable ({e})"]
+    for k in _TOP_KEYS:
+        if k not in doc:
+            bad.append(f"missing top-level key {k!r}")
+    if bad:
+        return bad
+    if doc["benchmark"] != "decode_micro":
+        bad.append(f"benchmark != decode_micro: {doc['benchmark']!r}")
+    if not doc["kernel_sweep"]:
+        bad.append("kernel_sweep is empty")
+    for i, row in enumerate(doc["kernel_sweep"]):
+        missing = [k for k in _SWEEP_KEYS if k not in row]
+        if missing:
+            bad.append(f"kernel_sweep[{i}]: missing {missing}")
+            continue
+        g = row["hq"] // row["hkv"]
+        if row["group"] != g:
+            bad.append(f"kernel_sweep[{i}]: group {row['group']} != "
+                       f"hq/hkv {g}")
+        if row["kv_fetches_unfused"] != g * row["kv_fetches_fused"]:
+            bad.append(
+                f"kernel_sweep[{i}]: unfused fetches "
+                f"{row['kv_fetches_unfused']} != group({g}) x fused "
+                f"{row['kv_fetches_fused']} — the fused kernel must stage "
+                "each KV block once per GQA group")
+        if row["fetch_ratio"] != g:
+            bad.append(f"kernel_sweep[{i}]: fetch_ratio {row['fetch_ratio']}"
+                       f" != group {g}")
+    if not doc["decode_loop"]:
+        bad.append("decode_loop is empty")
+    for i, row in enumerate(doc["decode_loop"]):
+        missing = [k for k in _LOOP_KEYS if k not in row]
+        if missing:
+            bad.append(f"decode_loop[{i}]: missing {missing}")
+            continue
+        t = row["window"]
+        if t >= 1 and row["dispatches_per_token"] > 1.0 / t + 1e-9:
+            bad.append(
+                f"decode_loop[{i}]: {row['dispatches_per_token']} dispatches"
+                f"/token for window={t} — the scan must issue one device "
+                "dispatch per window")
+        if not row["tokens_match"]:
+            bad.append(f"decode_loop[{i}]: window output is not token-"
+                       "identical to the per-token path")
+    return bad
+
+
+def main(argv: list) -> int:
+    path = Path(argv[0]) if argv else DEFAULT
+    bad = check(path)
+    for b in bad:
+        print(f"BENCH SCHEMA  {b}")
+    print(f"checked {path.name}: {len(bad)} violations")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
