@@ -118,8 +118,8 @@ def _paged_setup(backend, slots: int, prompt_len: int, budgets):
     toks = rng.integers(0, backend.cfg.vocab_size, (slots, prompt_len),
                         dtype=np.int32)
     joins = [kv.alloc_slot(prompt_len, int(bu)) for bu in budgets]
-    blks = jnp.stack([jnp.asarray(b_) for _, b_ in joins])
-    slot_ids = jnp.asarray([s for s, _ in joins], jnp.int32)
+    blks = jnp.stack([jnp.asarray(b_) for _, b_, _, _ in joins])
+    slot_ids = jnp.asarray([s for s, _, _, _ in joins], jnp.int32)
     firsts, pool = prefill(backend.params, jnp.asarray(toks), kv.pool,
                            blks, slot_ids)
     kv.pool = pool

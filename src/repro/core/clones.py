@@ -55,6 +55,21 @@ TPU_CLONE_TYPES: Dict[str, int] = {
     "tpu-pod": 256, "tpu-2pod": 512,
 }
 
+# Explicit CloneType -> TPU sub-mesh mapping for tpu=True pools.  The paper's
+# VM ladder (Table 1) spans 1-8 CPUs; the TPU fleet's ladder spans sub-mesh
+# sizes up to multi-pod, so the escalation path (basic -> ... -> x8large)
+# must cover the whole TPU range — keying on the CPU count (the old
+# ``tpu-{cpus}`` lookup) missed every type whose count has no same-named
+# entry (x2large/x8large) and could never reach ``tpu-pod``/``tpu-2pod``.
+TPU_BY_CLONE_TYPE: Dict[str, str] = {
+    "basic": "tpu-1",
+    "main": "tpu-4",
+    "large": "tpu-16",
+    "x2large": "tpu-64",
+    "x4large": "tpu-pod",
+    "x8large": "tpu-2pod",
+}
+
 # Transition-cost model, calibrated to the paper's §5.3 measurements.
 RESUME_SECONDS = 0.300            # paused -> running
 BOOT_SECONDS = 32.0               # powered_off -> running (VM boot / XLA jit)
@@ -108,8 +123,9 @@ class ClonePool:
     # ---------------------------------------------------------------- utils
     def _make_spec(self, ctype: CloneType) -> VenueSpec:
         if self.tpu:
-            chips = TPU_CLONE_TYPES.get(f"tpu-{ctype.cpus}", ctype.cpus)
-            return make_tpu_venue(f"tpu-{chips}", chips, self.link)
+            tpu_name = TPU_BY_CLONE_TYPE[ctype.name]
+            chips = TPU_CLONE_TYPES[tpu_name]
+            return make_tpu_venue(tpu_name, chips, self.link)
         return make_cloud_vm(ctype.name, ctype.cpus, ctype.mem_mb,
                              ctype.heap_mb, self.link)
 

@@ -38,13 +38,26 @@ from repro.core.clones import ClonePool
 
 @dataclasses.dataclass
 class ServeRequest:
-    """One client request to the serving fleet."""
+    """One client request to the serving fleet.
+
+    ``priority`` orders preemption victim selection (lower = evicted
+    first); it never reorders the FIFO admission queue.  The restore
+    fields are written by the serving layer when a slot is *preempted*
+    (KV blocks reclaimed mid-decode, ADR-003): ``generated`` carries the
+    tokens already emitted so a restore resumes instead of restarting,
+    ``first_token_t`` preserves the client-visible TTFT, and
+    ``preemptions`` counts how often this request was evicted.
+    """
 
     rid: int
     prompt: np.ndarray               # (prompt_len,) int32
     max_new_tokens: int = 16
     arrival_t: float = 0.0           # offered-load timestamp (virtual)
     admitted_t: Optional[float] = None
+    priority: int = 0
+    generated: List[int] = dataclasses.field(default_factory=list)
+    first_token_t: Optional[float] = None
+    preemptions: int = 0
 
 
 @dataclasses.dataclass
@@ -96,6 +109,19 @@ class AdmissionQueue:
             out.append(self._q.popleft())
         return out
 
+    def requeue(self, req: ServeRequest) -> None:
+        """Return a *preempted* request to the head of the queue.
+
+        The request was already admitted once (it counted toward
+        ``accepted`` and holds its original ``admitted_t``), so it bypasses
+        the depth bound — preemption must never turn into load shedding —
+        and goes to the *front*: evicted work restores before any fresh
+        arrival is admitted.  Among several evictions in one exhaustion
+        round this is LIFO (the most recent eviction restores first);
+        starvation is bounded because every restored request's remaining
+        budget only shrinks."""
+        self._q.appendleft(req)
+
     def peek(self) -> Optional[ServeRequest]:
         """The request ``take`` would pop next, without popping it."""
         return self._q[0] if self._q else None
@@ -108,15 +134,26 @@ class AdmissionQueue:
 
 def poisson_arrivals(rate: float, n: int, *, seed: int = 0,
                      prompt_len: int = 8, vocab: int = 256,
-                     max_new_tokens: int = 8,
-                     start: float = 0.0) -> List[ServeRequest]:
-    """Open-loop Poisson arrival trace (seeded, deterministic)."""
+                     max_new_tokens: int = 8, start: float = 0.0,
+                     prefix_len: int = 0,
+                     prefix_share: float = 1.0) -> List[ServeRequest]:
+    """Open-loop Poisson arrival trace (seeded, deterministic).
+
+    ``prefix_len > 0`` models a shared system prompt: a fraction
+    ``prefix_share`` of requests start with one common ``prefix_len``-token
+    prefix (drawn once per seed) followed by a random tail, the rest stay
+    fully random — the workload shape the block-level prefix cache exists
+    for (thousands of users, one system prompt).  The trace is identical
+    for a given seed whatever serving configuration consumes it."""
     rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, size=prefix_len, dtype=np.int32)
     t = start
     out = []
     for i in range(n):
         t += float(rng.exponential(1.0 / max(rate, 1e-9)))
         prompt = rng.integers(0, vocab, size=prompt_len, dtype=np.int32)
+        if prefix_len > 0 and rng.random() < prefix_share:
+            prompt[:prefix_len] = prefix
         out.append(ServeRequest(i, prompt, max_new_tokens, arrival_t=t))
     return out
 
@@ -145,6 +182,22 @@ class SlotLedger:
     def drop(self, key) -> None:
         """Forget a retired engine."""
         self._free.pop(key, None)
+
+    @staticmethod
+    def pick_victim(candidates) -> Optional[int]:
+        """Priority-ordered preemption policy (ADR-003).
+
+        ``candidates``: iterable of ``(slot, priority, generated_tokens)``
+        for the engine's active slots when its KV pool exhausts mid-decode.
+        The victim is the slot with the *lowest priority*; among equals,
+        the one with the *fewest generated tokens* (cheapest to restore —
+        its re-prefill suffix is shortest and its prompt blocks are most
+        likely still resident in the prefix cache); remaining ties break
+        by highest slot id, so the choice is deterministic.  Returns the
+        victim slot, or None when there is no candidate."""
+        best = min(candidates, key=lambda c: (c[1], c[2], -c[0]),
+                   default=None)
+        return None if best is None else best[0]
 
     @property
     def total_free(self) -> int:

@@ -81,6 +81,27 @@ def paged_attention(q, k_pool, v_pool, block_tables, context_lens, *,
     return jnp.swapaxes(out, 1, 2)
 
 
+@functools.partial(jax.jit, static_argnames=("axis",))
+def copy_blocks(leaf, src, dst, *, axis: int = 0):
+    """Device-side KV block copy: ``leaf[dst] = leaf[src]`` along ``axis``.
+
+    The copy-on-write primitive of the prefix cache (docs/architecture.md
+    ADR-003): when a new prompt diverges partway into a cached block, the
+    allocator maps a *fresh* block for the slot and the serving layer copies
+    the cached block's contents into it on device — the slot then overwrites
+    the divergent tail in place while the shared source stays immutable.
+
+    src, dst: (C,) int32 physical block ids.  Pairs are independent (every
+    dst is freshly allocated, so no pair's dst is another pair's src);
+    (0, 0) pairs are harmless no-ops, which is what lets callers pad the
+    pair list to a fixed bucket size.  Runs as one fused gather+scatter —
+    one dispatch per pool leaf regardless of the number of pairs.
+    """
+    moved = jnp.moveaxis(leaf, axis, 0)
+    moved = moved.at[dst].set(moved[src])
+    return jnp.moveaxis(moved, 0, axis)
+
+
 @functools.partial(jax.jit, static_argnames=("bs", "br", "interpret"))
 def rglru_scan(a, b, h0=None, *, bs: int = 256, br: int = 128,
                interpret: Optional[bool] = None):

@@ -37,6 +37,16 @@ as the measurable baseline (see ``benchmarks/serving_load.py`` and
 ``docs/architecture.md``).  Weights are resident on the clones (serving
 fleet), so per-request network cost is prompt/token traffic only — unlike
 the offload path, which ships the method's whole state.
+
+The paged pool is a **refcounted copy-on-write prefix cache** with
+**preemption-aware slot scheduling** (ADR-003): prompt blocks are
+content-indexed so shared prefixes map into new slots at refcount + 1
+instead of re-prefilling (the first divergent block is copied-on-write on
+device), admission reserves only prompt blocks, and a pool exhausting
+mid-decode evicts a victim slot for prefix-accelerated restore instead of
+raising — overload degrades into latency, not failure (paper §5's
+many-users elasticity claim at the KV level).  ``prefix_cache=False``
+keeps the unshared path as the measurable baseline.
 """
 from __future__ import annotations
 
@@ -108,6 +118,8 @@ class LMBackend:
         self._batch_axis, self._cap_axis = model.cache_axes(cfg)
         self._paged_fns: Dict[tuple, tuple] = {}      # (bs, donate)
         self._paged_win_fns: Dict[tuple, object] = {}  # (bs, window, donate)
+        self._paged_sfx_fns: Dict[tuple, object] = {}  # (bs, T, donate)
+        self._copy_fns: Dict[bool, object] = {}        # donate -> fn
 
     def cache_mem_bytes(self, batch: int) -> int:
         return pytree_bytes(model.abstract_cache(self.cfg, batch,
@@ -214,6 +226,56 @@ class LMBackend:
         self._paged_win_fns[win_key] = jax.jit(
             decode_window, donate_argnums=(1,) if donate else ())
         return self._paged_fns[base_key] + (self._paged_win_fns[win_key],)
+
+    def prefill_window_fn(self, block_size: int, num_steps: int,
+                          donate: bool = False):
+        """Jitted suffix prefill for prefix-hit / restored rows.
+
+        ``fn(params, pool, toks (J,T), pos0 (J,), n_tok (J,), tables
+        (J,M)) -> (first_tokens (J,), new_pool)`` — a teacher-forced
+        :func:`model.prefill_loop` scan: row i writes its ``n_tok[i]``
+        suffix tokens from position ``pos0[i]`` through its block table
+        and returns the greedy token after its last suffix position.
+        Rows with ``n_tok == 0`` (bucket padding) park in the trash
+        block.  Cached per (block_size, num_steps, donate), so suffix
+        batches bucketed to powers of two compile O(log) variants."""
+        key = (block_size, num_steps, donate)
+        fn = self._paged_sfx_fns.get(key)
+        if fn is not None:
+            return fn
+        cfg, ctx, capacity = self.cfg, self.ctx, self.capacity
+
+        def prefill_window(params, pool, toks, pos0, n_tok, tables):
+            return model.prefill_loop(
+                cfg, params, pool, toks, pos0, n_tok, ctx,
+                block_tables=tables, block_size=block_size,
+                num_steps=num_steps, capacity=capacity)
+
+        fn = jax.jit(prefill_window,
+                     donate_argnums=(1,) if donate else ())
+        self._paged_sfx_fns[key] = fn
+        return fn
+
+    def copy_fn(self, donate: bool = False):
+        """Jitted copy-on-write: ``fn(pool, src (C,), dst (C,))`` copies
+        the listed KV blocks on device across every pool leaf with a
+        capacity axis (per-slot state rows pass through untouched) — one
+        fused dispatch per CoW batch, see ``ops.copy_blocks``."""
+        if self._copy_fns.get(donate) is None:
+            from repro.kernels import ops as kops
+            b_ax, c_ax = self._batch_axis, self._cap_axis
+
+            def copy_into(pool, src, dst):
+                def cp(leaf, bax, cax):
+                    if cax is None:
+                        return leaf
+                    return kops.copy_blocks(leaf, src, dst, axis=bax)
+
+                return jax.tree.map(cp, pool, b_ax, c_ax)
+
+            self._copy_fns[donate] = jax.jit(
+                copy_into, donate_argnums=(0,) if donate else ())
+        return self._copy_fns[donate]
 
 
 class ServingEngine:
@@ -322,56 +384,102 @@ class _Cohort:
     phase: str = "prefill"
 
 
+class PoolExhausted(RuntimeError):
+    """Raised by the allocator when no block can be produced — the signal
+    the serving layer converts into a preemption (ADR-003), never a
+    crash."""
+
+
 class KVBlockPool:
     """Host-side paged-KV bookkeeping for one engine (one clone).
 
     Owns the device block pool plus the block table, per-slot decode
-    cursors, and the free lists.  Block id 0 is the *trash block*: it is
-    never allocated, every inactive slot's table points at it, so decode
-    writes from idle rows land somewhere harmless.  Blocks are allocated
-    lazily — ``ceil(prompt/len block_size)`` at admission, then one at a
-    time as a slot's cursor crosses a block boundary — which is what makes
-    KV memory track *written* tokens instead of worst-case capacity.
+    cursors, per-block *refcounts*, and a content-addressed **prefix
+    index** (ADR-003).  Block id 0 is the *trash block*: it is never
+    allocated, every inactive slot's table points at it, so decode writes
+    from idle rows land somewhere harmless.
+
+    Refcounted sharing: a block may appear in several slots' tables at
+    once (``ref[b]`` = number of table references).  ``free_slot`` only
+    decrements; a block returns to circulation at refcount zero — and if
+    it is a *prompt* block recorded in the prefix index it parks on the
+    ``cached-free`` list (still resident, LRU-evicted only when a fresh
+    block is needed), so a later request with the same prompt prefix maps
+    it back at refcount 1 instead of re-prefilling.
+
+    The prefix index is a trie over full token blocks: node = physical
+    block id, edge = that block's ``block_size`` token tuple under its
+    parent (root = -1).  Admission walks the trie (``match_prefix``),
+    maps every fully-matched block shared, and handles the *first
+    divergent block* by copy-on-write: a cached block whose first ``rem``
+    tokens match the remaining prompt is copied on device into a fresh
+    private block (``ops.copy_blocks``) which the slot then overwrites
+    from position ``cached_len`` on, leaving the shared source intact.
+
+    Admission reserves only the *prompt's* private blocks (optimistic —
+    no worst-case commitment); decode growth that exhausts the pool
+    raises :class:`PoolExhausted`, which the engine resolves by
+    preempting a victim slot instead of failing the request.
     """
 
     def __init__(self, backend, max_slots: int, block_size: int,
-                 num_blocks: Optional[int] = None):
+                 num_blocks: Optional[int] = None,
+                 prefix_cache: bool = True):
         self.backend = backend
         self.bs = block_size
         self.max_slots = max_slots
         self.capacity = backend.capacity
         self.max_blk = -(-backend.capacity // block_size)
-        # default pool provisions worst case (+1 for the trash block), so
-        # admission can never deadlock; benchmarks may size it tighter
+        # default pool provisions worst case (+1 for the trash block);
+        # benchmarks may size it tighter — preemption absorbs the squeeze
         self.num_blocks = num_blocks or max_slots * self.max_blk + 1
         self.pool = backend.init_paged_pool(max_slots, self.num_blocks,
                                             block_size)
+        self.prefix_cache = prefix_cache
         self.tables = np.zeros((max_slots, self.max_blk), np.int32)
         self.pos = np.zeros((max_slots,), np.int32)
         self.active = np.zeros((max_slots,), bool)
         self.n_blocks_of = np.zeros((max_slots,), np.int32)
-        self.need = np.zeros((max_slots,), np.int32)
-        self.committed = 0          # blocks promised to slots, unallocated
+        self.ref = np.zeros((self.num_blocks,), np.int32)
         # bumped on every host-side table mutation; _SlotEngine caches the
         # device copy of ``tables`` against it (re-upload only when dirty)
         self.tables_version = 0
         self._free_slots = list(range(max_slots - 1, -1, -1))
         self._free_blocks = list(range(self.num_blocks - 1, 0, -1))
+        # prefix index: trie node = block id; root parent = -1
+        self._children: Dict[int, Dict[tuple, int]] = {}
+        self._node: Dict[int, tuple] = {}        # bid -> (parent, tokens)
+        self._cached_free: Dict[int, None] = {}  # ref==0, indexed (LRU)
+        # blocks whose cached content lands via an in-flight suffix scan:
+        # not yet readable by a same-round sharer (see _submit_engine_step)
+        self._pending: set = set()
+        # cached-free blocks serving as CoW sources this round: eviction
+        # must not recycle them before the device copy reads them
+        self._hold: set = set()
+        # trie nodes created by each slot's admission, until its prefill
+        # completes: a *cancelled* admission must unindex exactly these
+        # (their device content was never written)
+        self._fresh_nodes: Dict[int, List[int]] = {}
+        self.stats = {"hit_tokens": 0, "prompt_tokens": 0,
+                      "cow_copies": 0, "evictions": 0}
 
     def reset(self) -> None:
-        """Return the allocator to its initial state for engine reuse.
-        The device pool is kept as-is: stale block contents are harmless
-        because prefill fully overwrites a slot's blocks before any read
-        and positions past a slot's cursor are always masked."""
-        self.tables[:] = 0
+        """Release every slot for engine reuse, *keeping the prefix
+        index*: the device pool is retained as-is, so indexed blocks stay
+        valid cached KV across engine generations on the same clone —
+        that persistence is what lets serial (non-overlapping) requests
+        still share a system prompt.  Stale content in unindexed blocks
+        is harmless: prefill fully overwrites a slot's fresh blocks
+        before any read and positions past a cursor are always masked."""
+        for slot in range(self.max_slots):
+            if self.n_blocks_of[slot]:
+                self.free_slot(slot)
         self.pos[:] = 0
         self.active[:] = False
-        self.n_blocks_of[:] = 0
-        self.need[:] = 0
-        self.committed = 0
         self.tables_version += 1
         self._free_slots = list(range(self.max_slots - 1, -1, -1))
-        self._free_blocks = list(range(self.num_blocks - 1, 0, -1))
+        self._pending.clear()
+        self._hold.clear()
 
     @property
     def free_slots(self) -> int:
@@ -381,56 +489,236 @@ class KVBlockPool:
         total = min(prompt_len + max_new_tokens, self.capacity)
         return min(-(-max(total, prompt_len) // self.bs), self.max_blk)
 
-    def can_admit(self, prompt_len: int, max_new_tokens: int = 0) -> bool:
-        """True when a request fits *now*: a free slot plus enough
-        uncommitted blocks for its whole token budget.  No overcommit —
-        every admitted request's worst-case block need is reserved up
-        front, so decode growth can never exhaust the pool mid-flight and
-        a tightly-sized pool queues instead of crashing."""
+    def available_blocks(self) -> int:
+        """Blocks allocatable right now: free plus cached-but-unreferenced
+        (the latter evict from the prefix index on demand)."""
+        return len(self._free_blocks) + len(self._cached_free)
+
+    # ------------------------------------------------------------ prefix
+    def match_prefix(self, prompt: np.ndarray):
+        """Longest cached prefix of ``prompt`` (pure — no state change).
+
+        Returns ``(shared_ids, cow_src, cached_len)``: ``shared_ids`` are
+        resident full blocks covering ``prompt[:len(shared_ids) * bs]``,
+        ``cow_src`` is the first-divergent-block copy-on-write source (a
+        cached block whose leading tokens extend the match partway), and
+        ``cached_len`` the total matched token count.  The match is
+        capped at ``len(prompt) - 1``: at least one suffix token is
+        always re-prefilled, because the *logits* after the last prompt
+        token (the row's first generated token) are not cached."""
+        shared: List[int] = []
+        cow_src = None
+        c = 0
+        if not self.prefix_cache:
+            return shared, cow_src, 0
+        p = len(prompt)
+        parent = -1
+        while c + self.bs <= p - 1:
+            tok = tuple(int(t) for t in prompt[c:c + self.bs])
+            b = self._children.get(parent, {}).get(tok)
+            if b is None or b in self._pending:
+                break
+            shared.append(b)
+            parent = b
+            c += self.bs
+        rem_cap = min(p - 1 - c, self.bs)
+        if rem_cap > 0:
+            want = tuple(int(t) for t in prompt[c:c + rem_cap])
+            best_m = 0
+            for tok, b in self._children.get(parent, {}).items():
+                if b in self._pending:
+                    continue
+                m = 0
+                while m < rem_cap and tok[m] == want[m]:
+                    m += 1
+                if m > best_m:      # ties: first-inserted child wins
+                    best_m, cow_src = m, b
+            c += best_m
+        return shared, cow_src, c
+
+    def _index_prompt(self, slot: int, prompt: np.ndarray,
+                      n_shared: int, via_suffix: bool) -> None:
+        """Record the slot's fully-covered prompt blocks as trie nodes.
+        Blocks whose content arrives via an in-flight suffix scan are
+        marked pending — unreadable by same-round sharers."""
+        if not self.prefix_cache:
+            return
+        parent = -1
+        created = self._fresh_nodes.setdefault(slot, [])
+        for i in range(len(prompt) // self.bs):
+            tok = tuple(int(t) for t in prompt[i * self.bs:
+                                               (i + 1) * self.bs])
+            kids = self._children.setdefault(parent, {})
+            b = kids.get(tok)
+            if b is None:
+                b = int(self.tables[slot, i])
+                kids[tok] = b
+                self._node[b] = (parent, tok)
+                created.append(b)
+                if via_suffix and i >= n_shared:
+                    self._pending.add(b)
+            parent = b
+
+    def clear_pending(self) -> None:
+        """Called when a submitted step folds back: every suffix-written
+        block's device content is now real (shareable), and in-flight CoW
+        sources have been copied (evictable again)."""
+        self._pending.clear()
+        self._hold.clear()
+
+    def _unindex(self, bid: int) -> None:
+        """Drop ``bid`` from the trie.  Its cached descendants become
+        unreachable (their chain is broken), so they are unindexed too
+        and — when unreferenced — recycled straight to the free list."""
+        parent, tok = self._node.pop(bid)
+        kids = self._children.pop(bid, {})
+        d = self._children.get(parent)
+        if d is not None:
+            d.pop(tok, None)
+            if not d and parent != -1:
+                del self._children[parent]
+        self._pending.discard(bid)
+        for child in kids.values():
+            self._unindex(child)
+            if self.ref[child] == 0 and child in self._cached_free:
+                del self._cached_free[child]
+                self._free_blocks.append(child)
+
+    # ------------------------------------------------------- block alloc
+    def _alloc_block(self) -> int:
+        """A private block: free list first, then LRU-evict a cached-free
+        block out of the prefix index; ``PoolExhausted`` when every block
+        is referenced by a live slot."""
+        evictable = (b for b in self._cached_free if b not in self._hold)
+        if self._free_blocks:
+            b = self._free_blocks.pop()
+        elif (b := next(evictable, None)) is not None:  # LRU: oldest first
+            del self._cached_free[b]
+            self._unindex(b)
+            self.stats["evictions"] += 1
+        else:
+            raise PoolExhausted(
+                "KV block pool exhausted: all "
+                f"{self.num_blocks - 1} blocks referenced by live slots "
+                "(the engine preempts a victim when this surfaces "
+                "mid-decode; a single request whose context exceeds the "
+                "pool cannot be served — raise num_blocks)")
+        self.ref[b] = 1
+        return b
+
+    def _ref_inc(self, bid: int) -> None:
+        if self.ref[bid] == 0:
+            self._cached_free.pop(bid, None)      # resurrected from cache
+        self.ref[bid] += 1
+
+    def can_admit(self, prompt, max_new_tokens: int = 0) -> bool:
+        """True when a request's *prompt* fits now: a free slot plus
+        enough allocatable blocks for its non-shared prompt blocks.
+        ``prompt`` is the effective token array (prefix matching applies)
+        or a bare length (no matching — the worst case).  Decode growth
+        is not reserved: exhaustion mid-decode preempts a victim instead
+        of being pre-gated, which is what keeps a tight pool admitting
+        work instead of serializing on worst-case commitments."""
         if not self._free_slots:
             return False
-        need = self._need_blocks(prompt_len, max_new_tokens)
-        return len(self._free_blocks) - self.committed >= need
+        if isinstance(prompt, (int, np.integer)):
+            p, n_shared, n_spoken_for = int(prompt), 0, len(self._hold)
+        else:
+            p = len(prompt)
+            shared, cow_src, _ = self.match_prefix(prompt)
+            n_shared = len(shared)
+            # cached-free blocks this admission would *resurrect* or hold
+            # as its CoW source (and already-held sources) can't also
+            # serve the private need
+            n_spoken_for = (sum(1 for b in shared if self.ref[b] == 0)
+                            + sum(1 for b in self._hold
+                                  if b in self._cached_free
+                                  and b not in shared))
+            if (cow_src is not None and self.ref[cow_src] == 0
+                    and cow_src not in self._hold):
+                n_spoken_for += 1
+        nb0 = -(-p // self.bs)
+        return self.available_blocks() - n_spoken_for >= nb0 - n_shared
 
     def used_blocks(self) -> int:
-        return (self.num_blocks - 1) - len(self._free_blocks)
+        """Blocks referenced by live slots (cached-free excluded: they
+        are reclaimable, so they don't count against utilization)."""
+        return int((self.ref[1:] > 0).sum())
 
     def written_tokens(self) -> int:
+        """Logical tokens resident across slots (each slot counts its
+        full context, so shared prefixes count once *per sharer* — the
+        paged report divides this by physical reservation, and a ratio
+        above 1.0 is exactly the prefix cache's memory win)."""
         return int(self.pos[self.active | (self.pos > 0)].sum())
 
-    def _alloc_block(self) -> int:
-        if not self._free_blocks:
-            raise RuntimeError(
-                "KV block pool exhausted: all "
-                f"{self.num_blocks - 1} blocks in use (size the pool with "
-                "num_blocks, or lower max_batch/capacity)")
-        return self._free_blocks.pop()
+    def alloc_slot(self, prompt, max_new_tokens: int = 0,
+                   force_suffix: bool = False):
+        """Claim a free slot for ``prompt`` (token array, or bare length
+        to bypass prefix matching); cursor starts at the prompt length.
 
-    def alloc_slot(self, prompt_len: int, max_new_tokens: int = 0):
-        """Claim a free slot + its prefill blocks, committing the rest of
-        its token budget's blocks for later growth; cursor starts at the
-        prompt length.  Returns (slot, block_ids)."""
+        Matches the prompt against the prefix index: fully-matched blocks
+        enter the table shared (refcount + 1), the first divergent block
+        is claimed as a fresh private block to be copied-on-write from
+        ``cow_pair[0]``, and the remaining prompt blocks are fresh
+        private allocations.  Returns ``(slot, new_ids, cached_len,
+        cow_pair)``: ``new_ids`` are the blocks a *full* prefill must
+        write (all of them when ``cached_len == 0``), ``cow_pair`` is
+        ``(src, dst)`` or None.  ``force_suffix`` marks the row as
+        suffix-prefilled regardless of match (restores), so its indexed
+        blocks stay pending until the step folds."""
+        if isinstance(prompt, (int, np.integer)):
+            p = int(prompt)
+            shared, cow_src, cached_len = [], None, 0
+            indexable = False
+        else:
+            prompt = np.asarray(prompt, np.int32)
+            p = len(prompt)
+            shared, cow_src, cached_len = self.match_prefix(prompt)
+            indexable = True
         slot = self._free_slots.pop()
-        nb0 = -(-prompt_len // self.bs)
-        ids = [self._alloc_block() for _ in range(nb0)]
+        nb0 = -(-p // self.bs)
+        for b in shared:
+            self._ref_inc(b)
+        cow_pair = None
+        new_ids = []
+        row = list(shared)
+        if cow_src is not None:
+            if self.ref[cow_src] == 0:
+                # cached-free source: shield it from LRU eviction until
+                # the round's device copy has read it (clear_pending)
+                self._hold.add(cow_src)
+            dst = self._alloc_block()
+            cow_pair = (cow_src, dst)
+            row.append(dst)
+            self.stats["cow_copies"] += 1
+        while len(row) < nb0:
+            b = self._alloc_block()
+            new_ids.append(b)
+            row.append(b)
         self.tables[slot, :] = 0
-        self.tables[slot, :nb0] = ids
-        self.pos[slot] = prompt_len
+        self.tables[slot, :nb0] = row
+        self.pos[slot] = p
         self.n_blocks_of[slot] = nb0
-        self.need[slot] = self._need_blocks(prompt_len, max_new_tokens)
-        self.committed += max(0, int(self.need[slot]) - nb0)
         self.tables_version += 1
-        return slot, np.asarray(ids, np.int32)
+        if indexable:
+            self._index_prompt(slot, prompt, len(shared),
+                               via_suffix=force_suffix or cached_len > 0)
+            self.stats["hit_tokens"] += cached_len
+            self.stats["prompt_tokens"] += p
+        return slot, np.asarray(new_ids, np.int32), cached_len, cow_pair
 
     def grow_for_window(self, counts) -> None:
         """Before a decode window: every active slot must own every block
         its next ``counts[slot]`` token writes land in (the window may
         cross several block boundaries, so the whole window's blocks are
         reserved up front — the scan cannot call back into the allocator
-        mid-flight).  Growth draws down the slot's admission-time
-        commitment; write positions clamp at ``capacity - 1`` exactly like
-        the decode path, so a window running past capacity needs no block
-        beyond the last."""
+        mid-flight).  Write positions clamp at ``capacity - 1`` exactly
+        like the decode path, so a window running past capacity needs no
+        block beyond the last.  Raises :class:`PoolExhausted` when a
+        block cannot be produced — the engine's preemption trigger; the
+        call is resumable after a victim frees blocks (already-grown
+        slots are skipped on re-entry)."""
         for slot in np.nonzero(self.active)[0]:
             n = int(counts[slot])
             if n <= 0:
@@ -441,8 +729,6 @@ class KVBlockPool:
                 blk_i = int(self.n_blocks_of[slot])
                 self.tables[slot, blk_i] = self._alloc_block()
                 self.n_blocks_of[slot] = blk_i + 1
-                if blk_i < int(self.need[slot]):
-                    self.committed -= 1
                 self.tables_version += 1
 
     def grow_for_write(self) -> None:
@@ -450,19 +736,38 @@ class KVBlockPool:
         self.grow_for_window(self.active.astype(np.int32))
 
     def free_slot(self, slot: int) -> None:
-        """Retire a slot: return its blocks and its unused commitment,
-        zero its table row (trash)."""
+        """Retire (or preempt) a slot: decrement each referenced block,
+        zero its table row (trash).  A block reaching refcount zero
+        returns to the free list — or, when it is a prompt block in the
+        prefix index, parks cached-free so the next same-prefix request
+        restores it for free."""
         for j in range(int(self.n_blocks_of[slot])):
-            self._free_blocks.append(int(self.tables[slot, j]))
-        self.committed -= max(0, int(self.need[slot])
-                              - int(self.n_blocks_of[slot]))
+            b = int(self.tables[slot, j])
+            self.ref[b] -= 1
+            if self.ref[b] == 0:
+                if b in self._node:
+                    self._cached_free[b] = None       # LRU tail
+                else:
+                    self._free_blocks.append(b)
         self.tables[slot, :] = 0
         self.pos[slot] = 0
         self.active[slot] = False
         self.n_blocks_of[slot] = 0
-        self.need[slot] = 0
         self.tables_version += 1
+        self._fresh_nodes.pop(slot, None)   # prefill completed: nodes stay
         self._free_slots.append(slot)
+
+    def cancel_slot(self, slot: int) -> None:
+        """Undo an admission whose prefill never ran (join rollback):
+        the trie nodes this admission created point at blocks whose
+        device content was never written, so they must leave the index
+        before the blocks recirculate — a later match against them would
+        serve garbage KV.  Resurrected shared blocks (valid content from
+        an earlier prefill) stay indexed and simply return cached-free."""
+        for b in self._fresh_nodes.get(slot, ()):
+            if b in self._node:             # may already be unindexed
+                self._unindex(b)            # (recursion / LRU eviction)
+        self.free_slot(slot)
 
 
 @dataclasses.dataclass
@@ -487,9 +792,11 @@ class _SlotEngine:
 
     def __init__(self, backend, clone, kv: KVBlockPool, window: int = 1,
                  donate: bool = False):
+        self.backend = backend
         self.clone = clone
         self.kv = kv
         self.window = window
+        self.donate = donate
         # decode_slots (the per-token fn) is deliberately unused here: the
         # engine always dispatches windows (window=1 == one-step window);
         # benchmarks/decode_micro.py is the per-token fn's only caller
@@ -498,7 +805,10 @@ class _SlotEngine:
         self.slots: List[Optional[_Slot]] = [None] * kv.max_slots
         self.tok_host = np.zeros((kv.max_slots,), np.int32)
         self.joins: List[tuple] = []        # (slot, req, toks, blk_ids)
+        self.sfx_joins: List[tuple] = []    # (slot, req, sfx, pos0, restore)
+        self.cow_pairs: List[tuple] = []    # (slot, src, dst) this round
         self.submitted_joins: List[tuple] = []
+        self.submitted_sfx: List[tuple] = []
         self.decode_rows: Optional[np.ndarray] = None
         self.decode_counts: Optional[np.ndarray] = None
         self._tables_dev = None             # device tables cache
@@ -513,14 +823,52 @@ class _SlotEngine:
             self._tables_ver = self.kv.tables_version
         return self._tables_dev
 
-    def admit(self, req: ServeRequest, prompt_pad: int) -> None:
-        toks = np.zeros((1, prompt_pad), np.int32)
-        toks[0, :min(len(req.prompt), prompt_pad)] = req.prompt[:prompt_pad]
-        slot, blk_ids = self.kv.alloc_slot(prompt_pad, req.max_new_tokens)
-        self.joins.append((slot, req, jnp.asarray(toks), jnp.asarray(blk_ids)))
+    @staticmethod
+    def effective_prompt(req: ServeRequest, prompt_pad: int,
+                         capacity: int) -> np.ndarray:
+        """The token sequence a slot's prefill must make resident.
+
+        Fresh request: the prompt zero-padded to ``prompt_pad`` (padding
+        tokens are context, exactly like the batched prefill path).  A
+        preempted request restoring: padded prompt plus every generated
+        token *except the last* — the last emitted token's KV was never
+        written (it is the next decode input), so the restored cursor
+        lands exactly where the preempted one stood.  The trailing
+        ``[:capacity]`` clamp is a last resort for past-capacity victims
+        (their last-cell overwrite history cannot be replayed anyway);
+        ``_grow_or_preempt`` avoids choosing them while any in-capacity
+        victim exists."""
+        base = np.zeros((prompt_pad,), np.int32)
+        base[:min(len(req.prompt), prompt_pad)] = req.prompt[:prompt_pad]
+        if not req.generated:
+            return base
+        eff = np.concatenate(
+            [base, np.asarray(req.generated[:-1], np.int32)])
+        return eff[:capacity]
+
+    def admit(self, req: ServeRequest, prompt_pad: int) -> dict:
+        """Claim a slot + blocks; route the row to the batched full
+        prefill (no cached prefix) or the suffix scan (prefix hit or
+        preemption restore).  Returns admission stats for the handler."""
+        restore = bool(req.generated)
+        eff = self.effective_prompt(req, prompt_pad, self.kv.capacity)
+        slot, new_ids, cached_len, cow = self.kv.alloc_slot(
+            eff, req.max_new_tokens, force_suffix=restore)
+        if cow is not None:
+            self.cow_pairs.append((slot,) + cow)
+        if restore or cached_len > 0:
+            sfx = eff[cached_len:]
+            self.sfx_joins.append((slot, req, sfx, cached_len, restore))
+            return {"cached": cached_len, "suffix": len(sfx),
+                    "restore": restore, "prompt": len(eff)}
+        self.joins.append((slot, req, jnp.asarray(eff[None]),
+                           jnp.asarray(new_ids)))
+        return {"cached": 0, "suffix": 0, "restore": False,
+                "prompt": len(eff)}
 
     def alive(self) -> bool:
-        return any(s is not None for s in self.slots) or bool(self.joins)
+        return (any(s is not None for s in self.slots)
+                or bool(self.joins) or bool(self.sfx_joins))
 
 
 @dataclasses.dataclass
@@ -530,8 +878,14 @@ class ServeReport:
     ``kv_util`` is the time-averaged fraction of *reserved* KV memory that
     holds written tokens (sampled at every decode submission); contiguous
     cohorts reserve ``rows x capacity`` up front while the paged pool only
-    reserves allocated blocks, which is the whole point of paging.
-    ``kv_reserved_peak`` is the peak reservation in tokens.
+    reserves allocated blocks.  With prefix sharing every sharer counts
+    its full logical context, so ``kv_util`` above 1.0 means shared
+    blocks are serving more logical tokens than their physical size — the
+    prefix cache's memory win.  ``kv_reserved_peak`` is the peak physical
+    reservation in tokens.  ``prefix_hit_rate`` is cached prompt tokens /
+    total prompt tokens over all admissions (restores included);
+    ``preemptions`` counts slot evictions under pool pressure and
+    ``restored_tokens`` the tokens re-prefilled bringing victims back.
     """
 
     completions: List[ServeCompletion]
@@ -550,6 +904,9 @@ class ServeReport:
     kv_mode: str = "paged"
     kv_util: float = 0.0
     kv_reserved_peak: int = 0
+    prefix_hit_rate: float = 0.0
+    preemptions: int = 0
+    restored_tokens: int = 0
 
     def summary(self) -> str:
         """One-line digest (documented in docs/benchmarks.md)."""
@@ -558,6 +915,8 @@ class ServeReport:
                 f"ttft50={self.p50_ttft_s:.3f}s "
                 f"tok/s={self.tokens_per_s:.1f} "
                 f"kv={self.kv_mode} kv_util={self.kv_util:.0%} "
+                f"prefix_hits={self.prefix_hit_rate:.0%} "
+                f"preempt={self.preemptions} "
                 f"peak_secondaries={self.peak_secondaries}")
 
 
@@ -579,6 +938,7 @@ class ClientHandler:
                  provision_paused: bool = True,
                  kv: str = "paged", block_size: int = 8,
                  num_blocks: Optional[int] = None,
+                 prefix_cache: bool = True,
                  decode_window: int = 1, donate_kv: bool = False,
                  executor: Optional[Callable] = None,
                  pool: Optional[ClonePool] = None,
@@ -599,6 +959,7 @@ class ClientHandler:
         self.kv_mode = kv
         self.block_size = block_size
         self.num_blocks = num_blocks
+        self.prefix_cache = prefix_cache
         self.decode_window = decode_window
         self.donate_kv = donate_kv
         self.backend = backend
@@ -641,6 +1002,11 @@ class ClientHandler:
         self.ledger = SlotLedger()
         self.kv_samples: List[tuple] = []   # (written_tokens, reserved)
         self._kv_pools: Dict[int, KVBlockPool] = {}   # clone.cid -> pool
+        # prefix-cache / preemption economics (ADR-003)
+        self.preemptions = 0
+        self.restored_tokens = 0
+        self.prefix_hit_tokens = 0
+        self.prompt_tokens = 0
 
     # ---------------------------------------------------------------- clones
     def _free_clone(self):
@@ -723,43 +1089,139 @@ class ClientHandler:
     # ------------------------------------------------------------- slots
     def _start_engine(self, clone) -> _SlotEngine:
         """Engine for ``clone``; the clone's KV pool is allocated once and
-        reused (reset) across engine generations — no per-spawn zeros."""
+        reused (reset) across engine generations — no per-spawn zeros, and
+        the prefix index survives, so cached prompts keep paying off."""
         clone.busy = True
         kv = self._kv_pools.get(clone.cid)
         if kv is None:
             kv = KVBlockPool(self.backend, self.max_batch, self.block_size,
-                             self.num_blocks)
+                             self.num_blocks,
+                             prefix_cache=self.prefix_cache)
             self._kv_pools[clone.cid] = kv
         else:
             kv.reset()
         return _SlotEngine(self.backend, clone, kv, self.decode_window,
                            self.donate_kv)
 
+    def _admit(self, engine: _SlotEngine, req: ServeRequest) -> None:
+        """Admit through the engine, folding the admission's prefix-cache
+        economics into the handler's report counters."""
+        info = engine.admit(req, self.prompt_pad)
+        self.prefix_hit_tokens += info["cached"]
+        self.prompt_tokens += info["prompt"]
+        if info["restore"]:
+            self.restored_tokens += info["suffix"]
+
+    def _preempt_slot(self, engine: _SlotEngine, victim: int,
+                      counts: np.ndarray) -> None:
+        """Evict ``victim`` under pool pressure: carry its generated
+        tokens and TTFT stamp on the request, reclaim its blocks (shared
+        prompt blocks stay resident in the prefix index, so the restore
+        is prefix-accelerated), and requeue it at the queue head."""
+        s = engine.slots[victim]
+        req = s.req
+        req.generated = list(s.out)
+        req.first_token_t = s.first_token_t
+        req.preemptions += 1
+        engine.slots[victim] = None
+        engine.tok_host[victim] = 0
+        counts[victim] = 0
+        engine.kv.free_slot(victim)
+        self.queue.requeue(req)
+        self.preemptions += 1
+
+    def _cancel_join(self, engine: _SlotEngine) -> None:
+        """Roll back the newest not-yet-submitted join under pool
+        pressure: its prefill never ran, so nothing is lost — the slot
+        and blocks return to the pool and the request requeues at the
+        head.  Always preferred over preempting an *active* slot, whose
+        restore re-computes real work."""
+        if engine.sfx_joins:
+            slot, req, _, _, _ = engine.sfx_joins.pop()
+        else:
+            slot, req, _, _ = engine.joins.pop()
+        engine.cow_pairs = [p for p in engine.cow_pairs if p[0] != slot]
+        engine.kv.cancel_slot(slot)
+        self.queue.requeue(req)
+        self.preemptions += 1
+
+    def _grow_or_preempt(self, engine: _SlotEngine,
+                         counts: np.ndarray) -> None:
+        """Reserve the window's blocks, shedding load on exhaustion — the
+        replacement for the old hard ``RuntimeError``: first roll back
+        pending joins (free), then preempt active victims (restorable).
+        Each retry frees one slot's private blocks; the loop terminates
+        because either growth succeeds or the engine runs out of victims
+        (a single slot whose context cannot fit the pool is
+        unservable)."""
+        kv = engine.kv
+        while True:
+            try:
+                kv.grow_for_window(counts)
+                return
+            except PoolExhausted:
+                if engine.joins or engine.sfx_joins:
+                    self._cancel_join(engine)
+                    continue
+                cands = [(slot, s.req.priority, len(s.out))
+                         for slot, s in enumerate(engine.slots)
+                         if s is not None and kv.active[slot]]
+                if len(cands) <= 1:
+                    raise RuntimeError(
+                        "KV block pool cannot hold a single request's "
+                        f"context (num_blocks={kv.num_blocks}, "
+                        f"block_size={kv.bs}): preemption has no victim "
+                        "left — raise num_blocks or lower capacity")
+                # prefer victims whose restore context fits capacity: a
+                # slot decoding past capacity keeps overwriting the last
+                # cell, an overwrite history a re-prefill cannot replay,
+                # so evicting one forfeits restore token-identity — only
+                # done when no in-capacity victim remains
+                safe = [c for c in cands
+                        if self.prompt_pad + c[2] - 1
+                        <= self.backend.capacity]
+                self._preempt_slot(
+                    engine, self.ledger.pick_victim(safe or cands),
+                    counts)
+
     def _submit_engine_step(self, engine: _SlotEngine):
         """One dispatched unit of engine work: fold every pending join's
-        prefill into the step, then decode a multi-token *window* for all
+        prefill into the step — full batched prefill for cold prompts,
+        device block copies for CoW splits, a suffix scan for prefix-hit
+        and restored rows — then decode a multi-token *window* for all
         previously-active slots (one device dispatch for up to
         ``decode_window`` tokens per slot; rows at their budget park
-        mid-window writes in the trash block).
+        mid-window writes in the trash block).  In-closure order matters:
+        full prefills write the blocks the same round's CoW copies read,
+        and both precede the suffix scans that attend over them.
 
         The dispatched closure is *pure* over its bound arguments (the
         Venue executor re-runs it to stabilize timing), so all block/slot
-        bookkeeping happens here on the host before submission.
+        bookkeeping — including preemption — happens here on the host
+        before submission.
         """
-        joins, engine.joins = engine.joins, []
-        engine.submitted_joins = joins
         kv = engine.kv
+        # tokens each slot will emit this window: min(window, budget left)
+        counts = np.zeros((kv.max_slots,), np.int32)
+        for slot in np.nonzero(kv.active)[0]:
+            s = engine.slots[slot]
+            counts[slot] = min(engine.window,
+                               s.req.max_new_tokens - len(s.out))
+        if counts.any():
+            # whole window's blocks up front; exhaustion rolls back
+            # pending joins / preempts victims (zeroing their counts)
+            # instead of raising — must run before the join lists are
+            # taken, so rollback can still un-admit them
+            self._grow_or_preempt(engine, counts)
+        joins, engine.joins = engine.joins, []
+        sfx, engine.sfx_joins = engine.sfx_joins, []
+        cow, engine.cow_pairs = engine.cow_pairs, []
+        engine.submitted_joins = joins
+        engine.submitted_sfx = sfx
         rows = np.nonzero(kv.active)[0]
         do_decode = rows.size > 0
         engine.decode_rows = rows if do_decode else None
-        # tokens each slot will emit this window: min(window, budget left)
-        counts = np.zeros((kv.max_slots,), np.int32)
         if do_decode:
-            for slot in rows:
-                s = engine.slots[slot]
-                counts[slot] = min(engine.window,
-                                   s.req.max_new_tokens - len(s.out))
-            kv.grow_for_window(counts)       # whole window's blocks up front
             # written-token sample: writes past capacity pin to the last
             # cell (same clamp the host fold applies to kv.pos), so they
             # must not count as newly written either
@@ -795,17 +1257,57 @@ class ClientHandler:
                                 + [kv.max_slots] * (jpad - j), jnp.int32)
             join_batch = (toks, blks, slots)
             nbytes += int(toks.nbytes)
+        cow_batch = None
+        if cow:
+            # CoW splits as one fused device copy; (0, 0) pads are no-ops
+            cpad = 1 << (len(cow) - 1).bit_length()
+            src = jnp.asarray([s for _, s, _ in cow]
+                              + [0] * (cpad - len(cow)), jnp.int32)
+            dst = jnp.asarray([d for _, _, d in cow]
+                              + [0] * (cpad - len(cow)), jnp.int32)
+            cow_batch = (self.backend.copy_fn(self.donate_kv), src, dst)
+            nbytes += int(src.nbytes) * 2
+        sfx_batch = None
+        if sfx:
+            # prefix-hit / restore rows: suffix-only prefill as ONE
+            # teacher-forced scan, rows and steps padded to power-of-two
+            # buckets (pad rows carry n_tok=0 -> trash block)
+            j2 = len(sfx)
+            jpad2 = 1 << (j2 - 1).bit_length()
+            t_max = max(len(s_) for _, _, s_, _, _ in sfx)
+            tpad = 1 << (t_max - 1).bit_length()
+            stoks = np.zeros((jpad2, tpad), np.int32)
+            spos = np.zeros((jpad2,), np.int32)
+            sn = np.zeros((jpad2,), np.int32)
+            stabs = np.zeros((jpad2, kv.max_blk), np.int32)
+            for i, (slot, _, s_, pos0, _) in enumerate(sfx):
+                stoks[i, :len(s_)] = s_
+                spos[i] = pos0
+                sn[i] = len(s_)
+                stabs[i] = kv.tables[slot]
+            sfx_batch = (self.backend.prefill_window_fn(
+                kv.bs, tpad, self.donate_kv),
+                jnp.asarray(stoks), jnp.asarray(spos), jnp.asarray(sn),
+                jnp.asarray(stabs))
+            nbytes += int(stoks.nbytes)
 
         def step_fn(params, pool, tok, pos, steps_left, tables):
             firsts = None
             if join_batch is not None:
                 toks, blks, slots = join_batch
                 firsts, pool = prefill_into(params, toks, pool, blks, slots)
+            if cow_batch is not None:
+                copy_into, src, dst = cow_batch
+                pool = copy_into(pool, src, dst)
+            firsts_sfx = None
+            if sfx_batch is not None:
+                pw, stoks, spos, sn, stabs = sfx_batch
+                firsts_sfx, pool = pw(params, pool, stoks, spos, sn, stabs)
             nxt = None
             if do_decode:
                 nxt, pool = decode_window(params, pool, tok, pos,
                                           steps_left, tables)
-            return firsts, nxt, pool
+            return firsts, firsts_sfx, nxt, pool
 
         delay = (self.autoscaler.clone_ready_delay(engine.clone,
                                                    self.clock.now())
@@ -823,7 +1325,7 @@ class ClientHandler:
                           completions: List[ServeCompletion]) -> bool:
         """Fold a completed step back into host state.  True while alive."""
         now = self.clock.now()
-        firsts, nxt, pool = task.value
+        firsts, firsts_sfx, nxt, pool = task.value
         kv = engine.kv
         kv.pool = pool
         firsts = [] if firsts is None else np.asarray(firsts)
@@ -833,6 +1335,24 @@ class ClientHandler:
             engine.tok_host[slot] = t0
             kv.active[slot] = True
         engine.submitted_joins = []
+        firsts_sfx = [] if firsts_sfx is None else np.asarray(firsts_sfx)
+        for (slot, req, _, _, restore), ft in zip(engine.submitted_sfx,
+                                                  firsts_sfx):
+            if restore:
+                # resume where preemption stopped: generated tokens were
+                # already emitted (TTFT stamp preserved), the last one is
+                # the next decode input — the scan's final logits only
+                # re-derive it, so the stored token is authoritative
+                t0 = int(req.generated[-1])
+                engine.slots[slot] = _Slot(req, list(req.generated),
+                                           req.first_token_t)
+            else:
+                t0 = int(ft)
+                engine.slots[slot] = _Slot(req, [t0], now)
+            engine.tok_host[slot] = t0
+            kv.active[slot] = True
+        engine.submitted_sfx = []
+        kv.clear_pending()
         if engine.decode_rows is not None and nxt is not None:
             nxt = np.asarray(nxt)                       # (S, window)
             rows = engine.decode_rows
@@ -888,13 +1408,17 @@ class ClientHandler:
                 for key, eng in engines.items():
                     self.ledger.update(key, eng.kv.free_slots)
                 # admit via on_assign so each fits() check sees the block
-                # commitments of earlier assignments in the same round
+                # allocations of earlier assignments in the same round;
+                # fits() matches the effective prompt against the prefix
+                # index, so a shared-prefix request needs only its
+                # private blocks free
                 self.ledger.assign(
                     self.queue,
                     fits=lambda key, r: engines[key].kv.can_admit(
-                        self.prompt_pad, r.max_new_tokens),
-                    on_assign=lambda key, r: engines[key].admit(
-                        r, self.prompt_pad))
+                        _SlotEngine.effective_prompt(
+                            r, self.prompt_pad, self.backend.capacity),
+                        r.max_new_tokens),
+                    on_assign=lambda key, r: self._admit(engines[key], r))
             # demand in cohort units: queued requests coalesce into batches
             queued_cohorts = -(-self.queue.depth // self.max_batch)
             self.autoscaler.step(now, queued_cohorts, len(inflight))
@@ -908,14 +1432,17 @@ class ClientHandler:
                     n = 0
                     while (n < self.max_batch and self.queue.depth > 0
                            and engine.kv.can_admit(
-                               self.prompt_pad,
+                               _SlotEngine.effective_prompt(
+                                   self.queue.peek(), self.prompt_pad,
+                                   self.backend.capacity),
                                self.queue.peek().max_new_tokens)):
-                        engine.admit(self.queue.take(1)[0], self.prompt_pad)
+                        self._admit(engine, self.queue.take(1)[0])
                         n += 1
                     if n == 0:
                         raise RuntimeError(
-                            "KV block pool too small to admit one request "
-                            f"(num_blocks={engine.kv.num_blocks}, "
+                            "KV block pool too small to hold one request's "
+                            "prompt even when empty — preemption has no "
+                            f"victim (num_blocks={engine.kv.num_blocks}, "
                             f"prompt_pad={self.prompt_pad}, "
                             f"block_size={self.block_size})")
                     engines[id(engine)] = engine
@@ -987,7 +1514,11 @@ class ClientHandler:
             kv_mode=self.kv_mode,
             kv_util=float(np.mean(utils)) if utils else 0.0,
             kv_reserved_peak=max((r for _, r in self.kv_samples),
-                                 default=0))
+                                 default=0),
+            prefix_hit_rate=(self.prefix_hit_tokens
+                             / max(self.prompt_tokens, 1)),
+            preemptions=self.preemptions,
+            restored_tokens=self.restored_tokens)
 
 
 def main() -> None:

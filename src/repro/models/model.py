@@ -490,3 +490,53 @@ def decode_loop(cfg: ModelConfig, params: Dict, cache: Dict,
         step, (cache, tok0, pos.astype(jnp.int32)),
         jnp.arange(num_steps, dtype=jnp.int32))
     return jnp.swapaxes(toks, 0, 1), cache
+
+
+def prefill_loop(cfg: ModelConfig, params: Dict, cache: Dict,
+                 tokens: jax.Array, pos0: jax.Array, n_tokens: jax.Array,
+                 ctx: RunContext, *, block_tables: jax.Array,
+                 block_size: int, num_steps: int, capacity: int):
+    """Suffix prefill over a paged pool: teacher-forced decode scan.
+
+    The restore / prefix-hit path of the copy-on-write prefix cache
+    (docs/architecture.md ADR-003): a row whose prompt prefix is already
+    resident in cached KV blocks only needs its *uncached suffix* written —
+    starting from a per-row offset ``pos0[i]``, which a batched
+    ``forward(mode="prefill")`` cannot do (it always starts at position 0).
+    This runs the suffix through :func:`decode_step` under one ``lax.scan``
+    dispatch: step ``t`` feeds the given token ``tokens[i, t]`` (teacher
+    forcing — no sampling), writes its KV at position ``pos0[i] + t``
+    through the row's block table, and attends over the full context so
+    far — cached prefix blocks included.
+
+    tokens: (B, T) int32 suffix tokens, rows padded past ``n_tokens[i]``;
+    pos0: (B,) int32 first uncached position per row (the cached-prefix
+    length); n_tokens: (B,) int32 live suffix length per row (0 = inactive
+    pad row: its writes park in the trash block, like ``decode_loop``).
+
+    Returns (first_tokens (B,), new_cache): ``first_tokens[i]`` is the
+    greedy next token after row i's last suffix position — the row's first
+    generated token, exactly what a full prefill's final logits yield.
+    """
+    tables = block_tables.astype(jnp.int32)
+    n_tokens = n_tokens.astype(jnp.int32)
+    pos0 = pos0.astype(jnp.int32)
+    first0 = jnp.zeros((tokens.shape[0],), jnp.int32)
+
+    def step(carry, xs):
+        cache, first = carry
+        t, tok_t = xs
+        live = t < n_tokens
+        eff_tables = jnp.where(live[:, None], tables, 0)
+        eff_pos = jnp.where(live, jnp.minimum(pos0 + t, capacity - 1), 0)
+        logits, cache = decode_step(cfg, params, cache, tok_t[:, None],
+                                    eff_pos, ctx, block_tables=eff_tables,
+                                    block_size=block_size)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        first = jnp.where(t == n_tokens - 1, nxt, first)
+        return (cache, first), None
+
+    xs = (jnp.arange(num_steps, dtype=jnp.int32),
+          jnp.swapaxes(tokens.astype(jnp.int32), 0, 1))
+    (cache, first), _ = jax.lax.scan(step, (cache, first0), xs)
+    return first, cache

@@ -66,6 +66,28 @@ def test_tpu_energy_components():
 # --------------------------------------------------------------------------- #
 # clone pool (paper §5.3)
 # --------------------------------------------------------------------------- #
+def test_tpu_clone_types_cover_every_clone_type():
+    """Regression (ISSUE 4 satellite): the TPU fleet mapping is explicit
+    per CloneType — the old ``tpu-{cpus}`` lookup silently fell back to
+    the raw CPU count for x2large/x8large (no ``tpu-2``/``tpu-8`` entries)
+    and could never provision ``tpu-pod``/``tpu-2pod`` sub-meshes."""
+    from repro.core.clones import TPU_BY_CLONE_TYPE, TPU_CLONE_TYPES
+    assert set(TPU_BY_CLONE_TYPE) == set(CLONE_TYPES)
+    assert all(v in TPU_CLONE_TYPES for v in TPU_BY_CLONE_TYPE.values())
+    pool = ClonePool(tpu=True)
+    chips_by_type = {}
+    for name in CLONE_TYPES:
+        clone = pool.provision(name, 1)[0]
+        chips_by_type[name] = clone.spec.chips
+        assert clone.spec.name == TPU_BY_CLONE_TYPE[name]
+        assert clone.spec.chips == TPU_CLONE_TYPES[TPU_BY_CLONE_TYPE[name]]
+    # the escalation ladder (OOM handling) reaches the pod tiers
+    assert chips_by_type["x8large"] == 512     # was 8 under the cpus key
+    order = [chips_by_type[t.name]
+             for t in sorted(CLONE_TYPES.values(), key=lambda t: t.rank())]
+    assert order == sorted(order)              # chips grow with escalation
+
+
 def test_clone_pool_primary_always_running():
     pool = ClonePool()
     assert pool.primary.state is CloneState.RUNNING

@@ -214,66 +214,106 @@ def test_kv_block_pool_alloc_grow_free():
     from repro.launch.serve import KVBlockPool
     kv = KVBlockPool(FakeBackend(), max_slots=2, block_size=4)
     assert kv.max_blk == 16                     # capacity 64 / bs 4
-    slot, ids = kv.alloc_slot(6, max_new_tokens=6)   # 2 blocks for 6 tokens
+    slot, ids, cached, cow = kv.alloc_slot(6, max_new_tokens=6)
     assert len(ids) == 2 and 0 not in ids       # trash block never handed out
+    assert cached == 0 and cow is None          # bare length: no matching
     assert kv.pos[slot] == 6 and kv.used_blocks() == 2
-    assert kv.need[slot] == 3 and kv.committed == 1  # 12 tokens -> 3 blocks
+    assert all(kv.ref[i] == 1 for i in ids)     # private blocks: refcount 1
     kv.active[slot] = True
     kv.pos[slot] = 8                            # cursor hits block boundary
     kv.grow_for_write()                         # next write needs block 3
     assert kv.n_blocks_of[slot] == 3 and kv.used_blocks() == 3
-    assert kv.committed == 0                    # growth drew the commitment
     kv.free_slot(slot)
     assert kv.used_blocks() == 0 and kv.free_slots == 2
-    assert kv.committed == 0
+    assert not kv.ref.any()                     # every refcount back to zero
     assert not kv.tables.any()                  # table rows reset to trash
 
 
-def test_kv_block_pool_commitment_gates_admission():
-    """No overcommit: a slot's whole token budget is reserved up front, so
-    grow_for_write can never hit an empty free list mid-decode."""
+def test_kv_block_pool_prefix_sharing_refcounts_and_cow():
+    """Two prompts sharing a full token block map it at refcount 2; the
+    first divergent block is claimed fresh with a copy-on-write source;
+    freeing a sharer decrements, and the block only recirculates (via the
+    cached-free list) at refcount zero."""
     from repro.launch.serve import KVBlockPool
-    # 4 real blocks; each request needs 4 (prompt 4 + 12 new = 16 tok / 4)
-    kv = KVBlockPool(FakeBackend(), max_slots=4, block_size=4, num_blocks=5)
-    assert kv.can_admit(4, 12)
-    slot, _ = kv.alloc_slot(4, 12)              # allocates 1, commits 3
-    assert kv.committed == 3
-    assert not kv.can_admit(4, 0)               # 3 free but all committed
-    kv.free_slot(slot)
-    assert kv.committed == 0 and kv.can_admit(4, 12)   # commitment returned
+    kv = KVBlockPool(FakeBackend(), max_slots=3, block_size=4)
+    pa = np.array([7, 7, 7, 7, 1, 2, 3, 4, 9], np.int32)   # 2 full blocks
+    pb = np.array([7, 7, 7, 7, 1, 2, 3, 5, 9], np.int32)   # diverges in b1
+    sa, ids_a, ca, cow_a = kv.alloc_slot(pa, 4)
+    assert ca == 0 and cow_a is None and len(ids_a) == 3
+    sb, ids_b, cb, cow_b = kv.alloc_slot(pb, 4)
+    assert cb == 4 + 3                          # full block + CoW partial
+    assert kv.tables[sb, 0] == kv.tables[sa, 0]  # block 0 shared
+    assert kv.ref[kv.tables[sa, 0]] == 2
+    assert cow_b is not None
+    assert cow_b[0] == kv.tables[sa, 1]          # CoW source: a's block 1
+    assert cow_b[1] == kv.tables[sb, 1] != kv.tables[sa, 1]  # fresh copy
+    kv.free_slot(sa)
+    assert kv.ref[kv.tables[sb, 0]] == 1         # b still holds the share
+    kv.free_slot(sb)
+    assert not kv.ref.any()
+    # the indexed prompt blocks stay cached-free: a re-admission of the
+    # same prompt resurrects both full blocks and only allocates the
+    # partial tail block (position 8 — never indexed, not full)
+    free_before = kv.available_blocks()
+    sc, ids_c, cc, cow_c = kv.alloc_slot(pa, 4)
+    assert cc == 8 and len(ids_c) == 1 and cow_c is None
+    assert kv.ref[kv.tables[sc, 0]] == 1 and kv.ref[kv.tables[sc, 1]] == 1
+    # 2 resurrected from cached-free + 1 fresh: all now referenced
+    assert kv.available_blocks() == free_before - 3
 
 
-def test_kv_block_pool_exhaustion_raises():
+def test_kv_block_pool_cancel_unindexes_unwritten_blocks():
+    """A cancelled admission (join rollback) must remove the trie nodes
+    it created: their device content was never written, so matching them
+    later would serve garbage KV.  A normally-freed slot's nodes stay."""
     from repro.launch.serve import KVBlockPool
+    kv = KVBlockPool(FakeBackend(), max_slots=2, block_size=4)
+    pa = np.arange(9, dtype=np.int32)
+    s, _, c, _ = kv.alloc_slot(pa, 4)
+    assert c == 0
+    kv.cancel_slot(s)                           # prefill never ran
+    s2, _, c2, cow2 = kv.alloc_slot(pa, 4)
+    assert c2 == 0 and cow2 is None             # no garbage match
+    kv.free_slot(s2)                            # normal retire: nodes stay
+    _, _, c3, _ = kv.alloc_slot(pa, 4)
+    assert c3 == 8                              # both full blocks hit
+
+
+def test_kv_block_pool_optimistic_admission_and_exhaustion():
+    """Admission gates on *prompt* blocks only (growth preempts instead of
+    reserving worst case); a pool with every block referenced raises
+    PoolExhausted — the engine's preemption trigger — on direct misuse."""
+    from repro.launch.serve import KVBlockPool, PoolExhausted
     kv = KVBlockPool(FakeBackend(), max_slots=2, block_size=4, num_blocks=2)
-    assert not kv.can_admit(4, 60)              # needs 16 blocks, has 1
-    kv.alloc_slot(4)                            # takes the single real block
-    with pytest.raises(RuntimeError, match="exhausted"):
+    assert kv.can_admit(4, 60)                  # 1 prompt block fits
+    kv.alloc_slot(4, 60)                        # takes the single real block
+    assert not kv.can_admit(4, 0)               # no block left for a prompt
+    with pytest.raises(PoolExhausted, match="exhausted"):
         kv.alloc_slot(4)                        # direct misuse still raises
 
 
-def test_tight_block_pool_queues_instead_of_crashing():
-    """An under-provisioned pool (fewer blocks than worst case) must gate
-    admission on block commitments, serving requests in waves — not crash
-    mid-flight on an exhausted free list, even when decode growth spans
-    several blocks per request."""
+def test_tight_block_pool_preempts_instead_of_crashing():
+    """An under-provisioned pool (fewer blocks than the aggregate demand)
+    must complete every request by preempting victims when decode growth
+    exhausts the free list — not crash mid-flight, and not shed work."""
     h = _make_handler(max_batch=4, max_secondaries=0,
                       num_blocks=5, block_size=4,   # 4 real blocks
                       executor=lambda c, f, a: (f(*a), 0.1))
-    # prompt 4 + 9 new tokens = 13 -> 4 blocks each: one request at a time
+    # prompt 4 + 9 new tokens = 13 -> 4 blocks each vs 4 in the pool
     reqs = [ServeRequest(i, np.zeros(4, np.int32), 9, arrival_t=0.0)
             for i in range(6)]
     rep = h.run(reqs)
     assert len(rep.completions) == 6
     assert sorted(c.rid for c in rep.completions) == list(range(6))
     assert all(len(c.tokens) == 9 for c in rep.completions)
+    assert rep.preemptions > 0                  # the pool really squeezed
 
 
-def test_tight_pool_mid_flight_joins_respect_commitments():
+def test_tight_pool_mid_flight_joins_respect_allocations():
     """Regression: two late arrivals offered to the same in-flight engine
     in one round must be admission-checked against each other's block
-    commitments, not both against stale pre-round pool state (which
-    overcommitted and crashed grow_for_write mid-decode)."""
+    allocations (fits() re-runs after every on_assign), not both against
+    stale pre-round pool state."""
     h = _make_handler(max_batch=3, max_secondaries=0,
                       num_blocks=9, block_size=4,   # 8 real blocks
                       executor=lambda c, f, a: (f(*a), 0.5))
@@ -342,6 +382,17 @@ class FakeBackend:
             return out, pool
 
         return prefill_into, decode_slots, decode_window
+
+    def prefill_window_fn(self, block_size, num_steps, donate=False):
+        # suffix prefill (prefix hit / restore): first token matches the
+        # full-prefill convention (always 0), KV content is not modeled
+        def prefill_window(params, pool, toks, pos0, n_tok, tables):
+            return np.zeros(int(np.asarray(toks).shape[0]), np.int32), pool
+
+        return prefill_window
+
+    def copy_fn(self, donate=False):
+        return lambda pool, src, dst: pool
 
 
 def _make_handler(**kw):

@@ -249,3 +249,23 @@ def test_rwkv6_model_chunked_matches_sequential_oracle():
                                atol=2e-4, rtol=1e-3)
     np.testing.assert_allclose(np.asarray(sn), np.asarray(snr), atol=2e-4,
                                rtol=1e-3)
+
+
+# --------------------------------------------------------------------------- #
+# paged-KV block copy (the prefix cache's copy-on-write primitive)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("axis", [0, 2])
+def test_copy_blocks_copies_listed_rows_only(axis):
+    """copy_blocks must replicate exactly the src rows onto the dst rows
+    along the given axis — other rows untouched, sources unmodified, and
+    (0, 0) padding pairs must be no-ops."""
+    shape = [5, 3, 6, 2]
+    x = np.arange(np.prod(shape), dtype=np.float32).reshape(shape)
+    src = jnp.asarray([2, 4, 0], jnp.int32)     # last pair: (0, 0) pad
+    dst = jnp.asarray([1, 3, 0], jnp.int32)
+    got = np.asarray(ops.copy_blocks(jnp.asarray(x), src, dst, axis=axis))
+    want = x.copy()
+    mv = np.moveaxis(want, axis, 0)
+    mv[1] = np.moveaxis(x, axis, 0)[2]
+    mv[3] = np.moveaxis(x, axis, 0)[4]
+    np.testing.assert_array_equal(got, want)

@@ -254,6 +254,73 @@ def test_decode_loop_past_capacity_clamps_like_stepwise():
     np.testing.assert_array_equal(np.asarray(got), want)
 
 
+def test_prefill_loop_matches_stepwise_prompt_feed():
+    """The suffix-prefill scan (one dispatch) must write bitwise the KV a
+    host-driven per-token prompt feed writes, and return the same first
+    generated token — including a per-row *offset* start (the prefix-hit
+    path: only the uncached suffix is fed) and an inactive pad row."""
+    cfg = reduced_config(get_config("smollm-360m"))
+    ctx = RunContext()
+    params = model.init(cfg, KEY)
+    bs, cap = 4, 16
+    prompt_lens = [6, 9, 3]
+    # reference: prompts written via per-token decode steps (host loop)
+    cache_ref, tables, tok_ref, pos_ref = _paged_decode_state(
+        cfg, ctx, params, prompt_lens, block_size=bs, capacity=cap)
+    rng = np.random.default_rng(11)             # same stream -> same prompts
+    prompts = [rng.integers(0, cfg.vocab_size, ln).astype(np.int32)
+               for ln in prompt_lens]
+    # scan path: same prompts, same tables, fresh pool, plus a pad row
+    pool = model.init_paged_cache(cfg, 3, 3 * (cap // bs) + 1, bs)
+    tmax = max(prompt_lens)
+    toks = np.zeros((3, tmax), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, :len(p)] = p
+    firsts, pool = model.prefill_loop(
+        cfg, params, pool, jnp.asarray(toks),
+        jnp.asarray(np.zeros(3, np.int32)),
+        jnp.asarray(np.asarray(prompt_lens, np.int32)), ctx,
+        block_tables=jnp.asarray(tables), block_size=bs, num_steps=tmax,
+        capacity=cap)
+    np.testing.assert_array_equal(np.asarray(firsts), tok_ref[:, 0])
+    for a, b in zip(jax.tree.leaves(cache_ref), jax.tree.leaves(pool)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # offset restart: re-feed only the last 4 tokens of row 1's prompt
+    # into the same pool (positions 5..8) — KV must stay bitwise stable
+    # and the first token must reproduce (the restore-path invariant)
+    sfx = np.zeros((3, 4), np.int32)
+    sfx[1] = prompts[1][-4:]
+    n_tok = np.array([0, 4, 0], np.int32)
+    pos0 = np.array([0, prompt_lens[1] - 4, 0], np.int32)
+    f2, pool2 = model.prefill_loop(
+        cfg, params, pool, jnp.asarray(sfx), jnp.asarray(pos0),
+        jnp.asarray(n_tok), ctx, block_tables=jnp.asarray(tables),
+        block_size=bs, num_steps=4, capacity=cap)
+    assert int(np.asarray(f2)[1]) == int(tok_ref[1, 0])
+    for a, b in zip(jax.tree.leaves(cache_ref), jax.tree.leaves(pool2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_paged_cache_rejects_non_full_attention():
+    """Regression (ISSUE 4 satellite): paged KV requires full attention —
+    both guard sites must keep raising a clean NotImplementedError for a
+    windowed/recurrent config instead of silently mis-gathering."""
+    cfg = reduced_config(get_config("recurrentgemma-2b"))
+    assert cfg.window is not None               # local-attention config
+    with pytest.raises(NotImplementedError, match="full attention"):
+        model.init_paged_cache(cfg, 2, 9, 4)    # models/model.py guard
+    # models/blocks.py guard: a decode step handed block tables on a
+    # windowed config must refuse at trace time, whatever the cache is
+    params = model.init(cfg, KEY)
+    cache = model.init_cache(cfg, 2, 8)
+    with pytest.raises(NotImplementedError, match="full attention"):
+        model.decode_step(cfg, params, cache,
+                          jnp.zeros((2, 1), jnp.int32),
+                          jnp.zeros((2,), jnp.int32), RunContext(),
+                          block_tables=jnp.zeros((2, 2), jnp.int32),
+                          block_size=4)
+
+
 def test_cache_logical_axes_match_cache_structure():
     for arch in list_archs():
         cfg = reduced_config(get_config(arch))

@@ -98,6 +98,89 @@ def test_block_table_gather_matches_contiguous_cache(seed, bs, lens):
         np.testing.assert_allclose(got[i:i + 1], want, atol=2e-5, rtol=2e-5)
 
 
+class _AllocStubBackend:
+    """Minimal backend for host-side allocator properties (no device)."""
+
+    capacity = 32
+
+    def init_paged_pool(self, max_slots, num_blocks, block_size):
+        return {}
+
+
+def _alloc_invariants(kv):
+    """The refcounted-allocator safety net (ADR-003): every physical
+    block is in exactly one of {free, cached-free, referenced}; refcounts
+    equal the number of block-table references; the trash block and the
+    cached-free list stay clean."""
+    n = kv.num_blocks
+    refcalc = np.zeros(n, np.int64)
+    for s in range(kv.max_slots):
+        for j in range(int(kv.n_blocks_of[s])):
+            refcalc[int(kv.tables[s, j])] += 1
+    assert (refcalc == np.asarray(kv.ref, np.int64)).all(), \
+        "refcounts must equal the number of tables referencing each block"
+    free = set(kv._free_blocks)
+    cached = set(kv._cached_free)
+    refd = {b for b in range(1, n) if kv.ref[b] > 0}
+    assert len(kv._free_blocks) == len(free), "double-free: dup free list"
+    assert not free & cached and not free & refd and not cached & refd
+    assert free | cached | refd == set(range(1, n)), "leaked block"
+    assert 0 not in free and 0 not in cached and kv.ref[0] == 0
+    assert all(b in kv._node for b in cached), "cached-free must be indexed"
+
+
+@settings(deadline=None, max_examples=40)
+@given(st.integers(0, 2 ** 31 - 1),
+       st.lists(st.tuples(st.integers(0, 3), st.integers(0, 15)),
+                min_size=1, max_size=40))
+def test_refcounted_allocator_never_leaks_or_double_frees(seed, ops):
+    """For any interleaving of admit / decode-grow / free / preempt (and
+    the round-boundary pending clear), the refcounted prefix-cache
+    allocator never leaks a block, never double-frees, and every shared
+    block's refcount equals the number of tables referencing it — under
+    heavy prefix overlap, CoW splits, LRU eviction, and exhaustion."""
+    from repro.launch.serve import KVBlockPool, PoolExhausted
+    kv = KVBlockPool(_AllocStubBackend(), max_slots=3, block_size=4,
+                     num_blocks=12)
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, 7, 32).astype(np.int32)   # common ancestor
+    live = []
+    for kind, x in ops:
+        if kind == 0 and kv.free_slots:              # admit
+            pl = 1 + x % 14
+            prompt = base[:pl].copy()
+            if x % 3 == 0:                           # diverge the tail
+                prompt[-1] = 90 + x % 4
+            if kv.can_admit(prompt, x % 8):
+                slot, _, _, _ = kv.alloc_slot(prompt, x % 8,
+                                              force_suffix=x % 5 == 0)
+                kv.active[slot] = True
+                live.append(slot)
+        elif kind == 1 and live:                     # decode growth
+            counts = np.zeros((kv.max_slots,), np.int32)
+            for s in live:
+                counts[s] = 1 + x % 4
+            try:
+                kv.grow_for_window(counts)
+                kv.pos[live] = np.minimum(kv.pos[live] + counts[live],
+                                          kv.capacity)
+            except PoolExhausted:
+                pass                                 # engine would preempt
+        elif kind == 2 and live:                     # retire/preempt/cancel
+            slot = live.pop(x % len(live))
+            if x % 2:
+                kv.free_slot(slot)
+            else:
+                kv.cancel_slot(slot)
+        else:                                        # round boundary
+            kv.clear_pending()
+        _alloc_invariants(kv)
+    for slot in list(live):
+        kv.free_slot(slot)
+    _alloc_invariants(kv)
+    assert not np.asarray(kv.ref).any()              # all refs returned
+
+
 class _DecodeLoopRig:
     """Shared tiny model + paged decode state for the decode_loop property.
 

@@ -1,17 +1,31 @@
-"""Benchmark-artifact schema checks: BENCH_decode.json invariants.
+"""Benchmark-artifact schema checks: BENCH_decode/BENCH_serving invariants.
 
-Used by the CI ``docs`` job and runnable standalone:
+Used by the CI jobs and runnable standalone:
 
-    python tools/check_bench.py [path/to/BENCH_decode.json]
+    python tools/check_bench.py                       # both defaults
+    python tools/check_bench.py path/to/BENCH_decode.json
+    python tools/check_bench.py --serving BENCH_serving.json
 
-Beyond key/type presence, this asserts the two claims the artifact exists
-to document (ISSUE 3 acceptance):
+Beyond key/type presence, this asserts the claims the artifacts exist to
+document:
+
+ISSUE 3 acceptance (``BENCH_decode.json``):
 
 - the fused kernel stages each KV block once per GQA *group*: every kernel
   sweep row must show ``kv_fetches_unfused == group * kv_fetches_fused``;
 - the on-device decode window amortizes dispatch: every ``decode_loop``
   row must show ``dispatches_per_token <= 1/window`` (one device dispatch
   per T-token window) and token-identical output vs the per-token path.
+
+ISSUE 4 acceptance (``BENCH_serving.json``):
+
+- the shared-prefix sweep shows ``prefix_hit_rate > 0`` with the cache on
+  (and 0 for the un-shared baseline), every request served, and TTFT no
+  worse than the baseline (the sweep is deterministic: fixed-cost
+  executor on the virtual clock);
+- the tight-pool sweep completes **every** request via preemption — zero
+  RuntimeErrors, ``preemptions > 0`` — where worst-case-reservation
+  admission would refuse the concurrency.
 """
 from __future__ import annotations
 
@@ -21,6 +35,7 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 DEFAULT = REPO / "BENCH_decode.json"
+DEFAULT_SERVING = REPO / "BENCH_serving.json"
 
 _TOP_KEYS = ("benchmark", "arch", "interpret", "kernel_sweep", "decode_loop")
 _SWEEP_KEYS = ("b", "hq", "hkv", "group", "block_size", "num_blocks",
@@ -83,12 +98,98 @@ def check(path: Path) -> list:
     return bad
 
 
+_SERVING_ROW_KEYS = ("rate_rps", "kv", "decode_window", "served", "shed",
+                     "p50_latency_s", "p99_latency_s", "p50_ttft_s",
+                     "tokens_per_s", "kv_util", "kv_reserved_peak_tokens",
+                     "prefix_hit_rate", "preemptions", "restored_tokens",
+                     "peak_secondaries", "busy_energy_j")
+_PREFIX_KEYS = ("prefix_cache", "prefix_len", "prefix_share", "served",
+                "offered", "p50_ttft_s", "p99_latency_s",
+                "prefix_hit_rate", "preemptions", "restored_tokens")
+_TIGHT_KEYS = ("num_blocks", "offered", "served", "runtime_errors",
+               "preemptions", "restored_tokens", "prefix_hit_rate")
+
+
+def check_serving(path: Path) -> list:
+    """BENCH_serving.json violations (empty == pass)."""
+    bad = []
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable ({e})"]
+    for k in ("benchmark", "arch", "seed", "rows", "prefix_sweep",
+              "tight_pool"):
+        if k not in doc:
+            bad.append(f"missing top-level key {k!r}")
+    if bad:
+        return bad
+    if doc["benchmark"] != "serving_load":
+        bad.append(f"benchmark != serving_load: {doc['benchmark']!r}")
+    if not doc["rows"]:
+        bad.append("rows is empty")
+    for i, row in enumerate(doc["rows"]):
+        missing = [k for k in _SERVING_ROW_KEYS if k not in row]
+        if missing:
+            bad.append(f"rows[{i}]: missing {missing}")
+    sweep = doc["prefix_sweep"]
+    if sweep:                       # optional: --prefix-len 0 disables
+        if len(sweep) != 2:
+            return bad + [f"prefix_sweep must hold [baseline, shared]: "
+                          f"{len(sweep)} rows"]
+        for i, row in enumerate(sweep):
+            missing = [k for k in _PREFIX_KEYS if k not in row]
+            if missing:
+                return bad + [f"prefix_sweep[{i}]: missing {missing}"]
+        base, shared = sweep
+        if base["prefix_cache"] or not shared["prefix_cache"]:
+            bad.append("prefix_sweep rows must be [cache off, cache on]")
+        if shared["prefix_hit_rate"] <= 0:
+            bad.append("shared-prefix sweep shows no prefix hits — the "
+                       "cache is not matching the common prompt")
+        if base["prefix_hit_rate"] != 0:
+            bad.append("un-shared baseline reported prefix hits")
+        for name, row in (("baseline", base), ("shared", shared)):
+            if row["served"] != row["offered"]:
+                bad.append(f"prefix_sweep {name}: served {row['served']} "
+                           f"!= offered {row['offered']}")
+        if shared["p50_ttft_s"] > base["p50_ttft_s"] + 1e-9:
+            bad.append(
+                f"prefix sharing raised TTFT: {shared['p50_ttft_s']} vs "
+                f"baseline {base['p50_ttft_s']} — the deterministic sweep "
+                "must show admission getting cheaper, not dearer")
+    tight = doc["tight_pool"]
+    if tight:                       # optional: --tight-blocks 0 disables
+        missing = [k for k in _TIGHT_KEYS if k not in tight]
+        if missing:
+            return bad + [f"tight_pool: missing {missing}"]
+        if tight["served"] != tight["offered"]:
+            bad.append(f"tight pool lost requests: {tight['served']}/"
+                       f"{tight['offered']} — preemption must complete "
+                       "every request")
+        if tight["runtime_errors"] != 0:
+            bad.append("tight pool hit RuntimeErrors — exhaustion must "
+                       "preempt, never crash")
+        if tight["preemptions"] <= 0:
+            bad.append("tight pool never preempted — the sweep is not "
+                       "actually exercising pool pressure")
+    return bad
+
+
 def main(argv: list) -> int:
-    path = Path(argv[0]) if argv else DEFAULT
-    bad = check(path)
-    for b in bad:
-        print(f"BENCH SCHEMA  {b}")
-    print(f"checked {path.name}: {len(bad)} violations")
+    bad = []
+    if argv and argv[0] == "--serving":
+        paths = [(Path(argv[1]) if len(argv) > 1 else DEFAULT_SERVING,
+                  check_serving)]
+    elif argv:
+        paths = [(Path(argv[0]), check)]
+    else:
+        paths = [(DEFAULT, check), (DEFAULT_SERVING, check_serving)]
+    for path, fn in paths:
+        errs = fn(path)
+        for b in errs:
+            print(f"BENCH SCHEMA  {b}")
+        print(f"checked {path.name}: {len(errs)} violations")
+        bad += errs
     return 1 if bad else 0
 
 
