@@ -23,6 +23,18 @@ Two dedicated sweeps measure the ADR-003 refactor directly:
   via preemption + prefix-accelerated restore (zero RuntimeError), where
   worst-case-reservation admission would refuse or serialize.
 
+A third dedicated sweep measures the ADR-004 heterogeneous fleet:
+
+- **fleet sweep** (``--fleet``, ``--clone-type``): cost-vs-latency Pareto
+  points from runs *pinned* at each tier (fixed per-tier step costs:
+  bigger sub-meshes decode faster but bill dearer), then one **mixed**
+  run — short-prompt bulk + long-context KV-hungry + a high-priority
+  tenant — where the placement engine must use at least three distinct
+  clone types, escalate the KV-hungry requests up the ladder
+  (token-identical to the pinned-large run), and power off long-idle
+  secondaries during the drain.  Deterministic (fixed-cost executor), so
+  ``tools/check_bench.py`` hard-asserts all of it in CI.
+
     PYTHONPATH=src python benchmarks/serving_load.py
     PYTHONPATH=src python benchmarks/serving_load.py --rates 1 4 16
     PYTHONPATH=src python benchmarks/serving_load.py --kv paged --seed 3
@@ -40,17 +52,23 @@ import json
 import os
 import sys
 
+import numpy as np
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import get_config, reduced_config            # noqa: E402
-from repro.core.clones import PAUSE_IDLE_TTL                    # noqa: E402
-from repro.core.scheduler import poisson_arrivals               # noqa: E402
+from repro.core.clones import (CLONE_TYPES, OFF_IDLE_TTL,       # noqa: E402
+                               PAUSE_IDLE_TTL, USD_PER_HOUR, CloneState)
+from repro.core.policy import Policy                            # noqa: E402
+from repro.core.scheduler import (ServeRequest,                 # noqa: E402
+                                  poisson_arrivals)
 from repro.launch.serve import ClientHandler, LMBackend         # noqa: E402
 
 HEADER = (f"{'rate_rps':>8s} {'kv':>10s} {'served':>6s} {'shed':>5s} "
           f"{'p50_s':>8s} {'p99_s':>8s} {'ttft50_s':>8s} "
           f"{'tok/s':>7s} {'kv_util':>7s} {'peak_2nd':>8s} "
-          f"{'resumes':>7s} {'pauses':>6s} {'busy_J':>9s}")
+          f"{'resumes':>7s} {'pauses':>6s} {'busy_J':>9s} "
+          f"{'cost_usd':>9s}")
 
 
 def run_sweep(arch: str = "smollm-360m", rates=(0.5, 4.0, 32.0),
@@ -58,7 +76,7 @@ def run_sweep(arch: str = "smollm-360m", rates=(0.5, 4.0, 32.0),
               max_secondaries: int = 6, new_tokens: int = 6,
               prompt_len: int = 6, seed: int = 0,
               kv_modes=("paged", "contiguous"), block_size: int = 8,
-              decode_window: int = 1):
+              decode_window: int = 1, clone_type: str = "main"):
     """Returns (table_lines, rows) with one row dict per (rate, kv mode)."""
     cfg = reduced_config(get_config(arch))
     backend = LMBackend(cfg, capacity=32)
@@ -73,6 +91,7 @@ def run_sweep(arch: str = "smollm-360m", rates=(0.5, 4.0, 32.0),
                                     max_secondaries=max_secondaries,
                                     prompt_pad=prompt_len, kv=kv,
                                     block_size=block_size,
+                                    clone_type=clone_type,
                                     decode_window=window)
             reqs = poisson_arrivals(rate, n_requests, seed=seed,
                                     prompt_len=prompt_len,
@@ -88,7 +107,8 @@ def run_sweep(arch: str = "smollm-360m", rates=(0.5, 4.0, 32.0),
                 f"{report.peak_secondaries:>8d} "
                 f"{report.pool_stats['resumes']:>7d} "
                 f"{report.pool_stats['pauses']:>6d} "
-                f"{report.busy_energy_j:>9.2f}")
+                f"{report.busy_energy_j:>9.2f} "
+                f"{report.cost_usd:>9.6f}")
             rows.append({
                 "rate_rps": rate,
                 "kv": kv,
@@ -109,6 +129,9 @@ def run_sweep(arch: str = "smollm-360m", rates=(0.5, 4.0, 32.0),
                 "boots": report.pool_stats["boots"],
                 "pauses": report.pool_stats["pauses"],
                 "busy_energy_j": report.busy_energy_j,
+                "cost_usd": report.cost_usd,
+                "escalations": report.escalations,
+                "power_offs": report.power_offs,
                 "makespan_s": report.makespan_s,
                 "secondaries_after_drain": still_running,
                 "report": report,
@@ -215,6 +238,135 @@ def run_tight_pool_sweep(backend, *, n_requests: int = 12,
     }
 
 
+FLEET_DEFAULT = ("basic", "large", "x2large")
+
+# Deterministic per-tier venue seconds per dispatch: a bigger sub-mesh
+# decodes a step faster but bills at a dearer $-rate (USD_PER_HOUR) —
+# fixed, not host-measured, so CI can hard-assert the Pareto shape.
+TIER_STEP_S = {"basic": 0.32, "main": 0.16, "large": 0.08,
+               "x2large": 0.04, "x4large": 0.02, "x8large": 0.01}
+
+
+def fleet_trace(vocab: int, *, prompt_len: int = 8, seed: int = 0):
+    """Mixed workload (deterministic per seed): a high-priority tenant,
+    short-prompt bulk, and long-context KV-hungry research requests."""
+    rng = np.random.default_rng(seed)
+
+    def prompt():
+        return rng.integers(0, vocab, size=prompt_len, dtype=np.int32)
+
+    reqs, rid = [], 0
+    for i in range(2):            # premium tenant: urgent, short
+        reqs.append(ServeRequest(rid, prompt(), 4, arrival_t=0.05 * i,
+                                 priority=2, tenant="premium"))
+        rid += 1
+    for i in range(9):            # bulk tenant: short prompts, few tokens
+        reqs.append(ServeRequest(rid, prompt(), 4, arrival_t=0.1 + 0.2 * i,
+                                 tenant="bulk"))
+        rid += 1
+    for i in range(2):            # research tenant: KV-hungry long decodes
+        reqs.append(ServeRequest(rid, prompt(), 24, arrival_t=0.2 + 0.3 * i,
+                                 tenant="research"))
+        rid += 1
+    return reqs
+
+
+def run_fleet_sweep(backend, *, fleet=FLEET_DEFAULT, seed: int = 0,
+                    max_batch: int = 4, prompt_len: int = 8,
+                    block_size: int = 4, num_blocks: int = 4,
+                    max_secondaries: int = 6):
+    """Heterogeneous fleet sweep (ADR-004).
+
+    Pinned rows: the same trace served entirely on each tier (roomy KV)
+    — the cost-vs-latency Pareto points.  Mixed row: the placement
+    engine serves the trace across the fleet — bulk on the cheapest
+    tier ($-policy), the high-priority tenant on the warm premium spare
+    (latency-first), and the KV-hungry requests *escalated* up the
+    ladder from a base-tier pool sized at ``num_blocks`` blocks; their
+    tokens must be identical to the pinned-``large`` run.  The mixed
+    drain runs past OFF_IDLE_TTL so the TTL power-off stage is visible
+    as ``power_offs``."""
+    def executor(clone, fn, args):
+        return fn(*args), TIER_STEP_S[clone.ctype.name]
+
+    def run(clone_type, fleet_types=None, premium_spare=None, nb=None,
+            drain=PAUSE_IDLE_TTL + 5.0):
+        handler = ClientHandler(
+            backend, clone_type=clone_type,
+            fleet=list(fleet_types) if fleet_types else None,
+            placement_policy=Policy.NONE,   # $-aware bulk placement
+            max_batch=max_batch, prompt_pad=prompt_len,
+            block_size=block_size, num_blocks=nb,
+            max_secondaries=max_secondaries, use_primary=False,
+            executor=executor)
+        if premium_spare:                   # warm hot-spare premium clone
+            handler.pool.provision(premium_spare, 1,
+                                   state=CloneState.RUNNING)
+        reqs = fleet_trace(backend.cfg.vocab_size, prompt_len=prompt_len,
+                           seed=seed)
+        errors, rep = 0, None
+        try:
+            rep = handler.run(reqs, drain_idle_s=drain)
+        except RuntimeError:
+            errors = 1                      # recorded; CI fails on it
+        return rep, errors, len(reqs)
+
+    tiers = sorted(set(fleet) | {"large"},
+                   key=lambda n: CLONE_TYPES[n].rank())
+    pinned = {}
+    rows_pinned = []
+    for t in tiers:
+        rep, errors, offered = run(t)
+        pinned[t] = rep
+        rows_pinned.append({
+            "clone_type": t,
+            "usd_per_hour": USD_PER_HOUR[t],
+            "tier_step_s": TIER_STEP_S[t],
+            "served": len(rep.completions) if rep else 0,
+            "offered": offered,
+            "runtime_errors": errors,
+            "p50_latency_s": rep.p50_latency_s if rep else 0.0,
+            "p99_latency_s": rep.p99_latency_s if rep else 0.0,
+            "p50_ttft_s": rep.p50_ttft_s if rep else 0.0,
+            "busy_energy_j": rep.busy_energy_j if rep else 0.0,
+            "cost_usd": rep.cost_usd if rep else 0.0,
+            "clone_seconds_by_type": rep.clone_seconds_by_type if rep
+            else {},
+        })
+
+    base, premium = min(fleet, key=lambda n: CLONE_TYPES[n].rank()), \
+        max(fleet, key=lambda n: CLONE_TYPES[n].rank())
+    rep, errors, offered = run(base, fleet_types=fleet,
+                               premium_spare=premium, nb=num_blocks,
+                               drain=PAUSE_IDLE_TTL + OFF_IDLE_TTL + 40.0)
+    ref = {c.rid: c.tokens for c in pinned["large"].completions} \
+        if pinned["large"] else {}
+    got = {c.rid: c.tokens for c in rep.completions} if rep else {}
+    mixed = {
+        "fleet": sorted(set(fleet), key=lambda n: CLONE_TYPES[n].rank()),
+        "base_type": base,
+        "premium_type": premium,
+        "num_blocks": num_blocks,
+        "served": len(got),
+        "offered": offered,
+        "runtime_errors": errors,
+        "escalations": rep.escalations if rep else 0,
+        "fleet_mix": rep.fleet_mix if rep else {},
+        "distinct_types": len([t for t, n in (rep.fleet_mix if rep
+                                              else {}).items() if n > 0]),
+        "preemptions": rep.preemptions if rep else 0,
+        "p50_latency_s": rep.p50_latency_s if rep else 0.0,
+        "p99_latency_s": rep.p99_latency_s if rep else 0.0,
+        "p50_ttft_s": rep.p50_ttft_s if rep else 0.0,
+        "cost_usd": rep.cost_usd if rep else 0.0,
+        "energy_j_by_type": rep.energy_j_by_type if rep else {},
+        "clone_seconds_by_type": rep.clone_seconds_by_type if rep else {},
+        "power_offs": rep.power_offs if rep else 0,
+        "tokens_identical_to_pinned_large": bool(got) and got == ref,
+    }
+    return rows_pinned, mixed
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -240,6 +392,14 @@ def main() -> None:
     ap.add_argument("--tight-blocks", type=int, default=8,
                     help="pool size for the tight-pool preemption sweep "
                          "(0 disables the sweep)")
+    ap.add_argument("--clone-type", default="main",
+                    choices=sorted(CLONE_TYPES),
+                    help="clone type the rate sweep's handler is pinned at")
+    ap.add_argument("--fleet", nargs="*", default=None,
+                    metavar="TYPE", choices=sorted(CLONE_TYPES),
+                    help="clone types for the heterogeneous fleet sweep "
+                         f"(default: {' '.join(FLEET_DEFAULT)}; pass an "
+                         "empty list to disable the sweep)")
     ap.add_argument("--json", default="BENCH_serving.json",
                     help="machine-readable output path ('' to skip)")
     args = ap.parse_args()
@@ -249,7 +409,8 @@ def main() -> None:
                             args.batch, args.secondaries, args.new_tokens,
                             seed=args.seed, kv_modes=modes,
                             block_size=args.block_size,
-                            decode_window=args.window)
+                            decode_window=args.window,
+                            clone_type=args.clone_type)
     print("\n".join(lines))
 
     # highest offered rate regardless of CLI order; among its modes take
@@ -334,6 +495,41 @@ def main() -> None:
         assert tight_row["preemptions"] > 0, \
             "tight-pool sweep never preempted: pool not actually tight"
 
+    # --- ADR-004 sweep: heterogeneous fleet placement + escalation ------
+    fleet = FLEET_DEFAULT if args.fleet is None else tuple(args.fleet)
+    fleet_payload = None
+    if fleet:
+        rows_pinned, mixed = run_fleet_sweep(sweep_backend, fleet=fleet,
+                                             seed=args.seed)
+        fleet_payload = {"pinned": rows_pinned, "mixed": mixed}
+        print("\nfleet Pareto (pinned tiers, fixed-cost executor):")
+        for r in rows_pinned:
+            print(f"  {r['clone_type']:>8s} ${r['usd_per_hour']:.3f}/h "
+                  f"p50={r['p50_latency_s']:.3f}s "
+                  f"p99={r['p99_latency_s']:.3f}s "
+                  f"cost=${r['cost_usd']:.6f} "
+                  f"busy={r['busy_energy_j']:.0f}J")
+        mix_str = " ".join(f"{t}:{n}" for t, n in
+                           sorted(mixed["fleet_mix"].items()))
+        print(f"mixed fleet run: served {mixed['served']}/"
+              f"{mixed['offered']} across [{mix_str}] with "
+              f"{mixed['escalations']} escalations, "
+              f"cost=${mixed['cost_usd']:.6f}, "
+              f"{mixed['power_offs']} TTL power-offs, tokens identical to "
+              f"pinned-large: {mixed['tokens_identical_to_pinned_large']}")
+        assert mixed["runtime_errors"] == 0, \
+            "mixed fleet run raised — escalation must absorb KV pressure"
+        assert mixed["served"] == mixed["offered"], \
+            "mixed fleet run shed or lost requests"
+        assert mixed["distinct_types"] >= 3, \
+            "placement engine used fewer than three clone types"
+        assert mixed["escalations"] >= 1, \
+            "no KV-hungry request was escalated up the ladder"
+        assert mixed["tokens_identical_to_pinned_large"], \
+            "escalated serving diverged from the pinned-large run"
+        assert mixed["power_offs"] >= 1, \
+            "OFF_IDLE_TTL never powered off an idle secondary in the drain"
+
     if args.json:
         payload = {
             "benchmark": "serving_load",
@@ -345,10 +541,12 @@ def main() -> None:
             "new_tokens": args.new_tokens,
             "block_size": args.block_size,
             "decode_window": args.window,
+            "clone_type": args.clone_type,
             "rows": [{k: v for k, v in r.items() if k != "report"}
                      for r in rows],
             "prefix_sweep": prefix_rows,
             "tight_pool": tight_row,
+            "fleet_sweep": fleet_payload,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

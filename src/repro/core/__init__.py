@@ -1,8 +1,10 @@
 """ThinkAir core: profile-driven computation offloading for JAX workloads."""
 from repro.core.clock import (BaseClock, Event, FunctionClock, SystemClock,
                               VirtualClock, ensure_clock)
-from repro.core.clones import (CLONE_TYPES, Clone, ClonePool, CloneState,
-                               resume_time)
+from repro.core.clones import (CLONE_TYPES, KV_SCALE_BY_CLONE_TYPE,
+                               TPU_BY_CLONE_TYPE, TPU_CLONE_TYPES, Clone,
+                               ClonePool, CloneState, chips_for, resume_time,
+                               usd_per_second)
 from repro.core.controller import ExecutionController, ExecutionResult
 from repro.core.dispatch import CloneTask, Dispatcher
 from repro.core.energy import (PhoneState, PowerTutorModel, TpuCoeffs,
@@ -10,28 +12,32 @@ from repro.core.energy import (PhoneState, PowerTutorModel, TpuCoeffs,
 from repro.core.faults import FaultPlan, ReconnectManager, VenueFailure
 from repro.core.parallel import (ParallelResult, Parallelizer, split_batch,
                                  split_range)
-from repro.core.policy import Policy, Prediction, should_offload
+from repro.core.policy import (Policy, Prediction, placement_key,
+                               should_offload)
 from repro.core.profilers import (DeviceProfiler, NetworkProfiler,
                                   ProgramProfiler, size_bucket)
 from repro.core.remoteable import (REGISTRY, RemoteableMethod, remote,
                                    set_default_controller)
-from repro.core.scheduler import (AdmissionQueue, QueueAutoscaler,
-                                  ServeCompletion, ServeRequest,
-                                  poisson_arrivals)
+from repro.core.scheduler import (AdmissionQueue, FleetAutoscaler,
+                                  PlacementEngine, ServeCompletion,
+                                  ServeRequest, poisson_arrivals)
 from repro.core.venues import (LINKS, Venue, VenueSpec, pytree_bytes,
                                transfer_time)
 
 __all__ = [
     "BaseClock", "Event", "FunctionClock", "SystemClock", "VirtualClock",
     "ensure_clock",
-    "CLONE_TYPES", "Clone", "ClonePool", "CloneState", "resume_time",
+    "CLONE_TYPES", "KV_SCALE_BY_CLONE_TYPE", "TPU_BY_CLONE_TYPE",
+    "TPU_CLONE_TYPES", "Clone", "ClonePool", "CloneState", "chips_for",
+    "resume_time", "usd_per_second",
     "ExecutionController", "ExecutionResult", "CloneTask", "Dispatcher",
     "PhoneState", "PowerTutorModel", "TpuCoeffs", "TpuEnergyModel",
     "FaultPlan", "ReconnectManager", "VenueFailure", "ParallelResult",
     "Parallelizer", "split_batch", "split_range", "Policy", "Prediction",
-    "should_offload", "DeviceProfiler", "NetworkProfiler", "ProgramProfiler",
+    "placement_key", "should_offload",
+    "DeviceProfiler", "NetworkProfiler", "ProgramProfiler",
     "size_bucket", "REGISTRY", "RemoteableMethod", "remote",
-    "set_default_controller", "AdmissionQueue", "QueueAutoscaler",
-    "ServeCompletion", "ServeRequest", "poisson_arrivals",
+    "set_default_controller", "AdmissionQueue", "FleetAutoscaler",
+    "PlacementEngine", "ServeCompletion", "ServeRequest", "poisson_arrivals",
     "LINKS", "Venue", "VenueSpec", "pytree_bytes", "transfer_time",
 ]

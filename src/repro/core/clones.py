@@ -70,6 +70,42 @@ TPU_BY_CLONE_TYPE: Dict[str, str] = {
     "x8large": "tpu-2pod",
 }
 
+# Fleet adaptation: on-demand $ price per clone type (per hour, EC2-2011-era
+# ladder — the paper ran on Amazon EC2).  The placement engine (ADR-004)
+# trades these rates against provisioning latency and energy.
+USD_PER_HOUR: Dict[str, float] = {
+    "basic": 0.02,
+    "main": 0.085,
+    "large": 0.17,
+    "x2large": 0.34,
+    "x4large": 0.68,
+    "x8large": 1.36,
+}
+
+
+def usd_per_second(type_name: str) -> float:
+    """On-demand $ per clone-second for a clone type."""
+    return USD_PER_HOUR[type_name] / 3600.0
+
+
+def chips_for(type_name: str, tpu: bool = False) -> int:
+    """Per-type chip count: TPU sub-mesh chips for tpu pools, CPU count
+    for the paper's cloud-VM pools — the quantity the chips-aware energy
+    model bills (``TpuEnergyModel.energy_j(chips=...)``)."""
+    if tpu:
+        return TPU_CLONE_TYPES[TPU_BY_CLONE_TYPE[type_name]]
+    return CLONE_TYPES[type_name].cpus
+
+
+# Serving-layer KV capacity multiplier per clone type (ADR-004).  The
+# escalation ladder must strictly widen the KV block pool at every step,
+# which the paper's RAM column cannot express (flat at 1024 MB above
+# ``large``); the TPU sub-mesh ladder (chips -> HBM) is the fleet's
+# memory ladder, so it scales the per-type block budget for VM pools too.
+KV_SCALE_BY_CLONE_TYPE: Dict[str, int] = {
+    t: TPU_CLONE_TYPES[TPU_BY_CLONE_TYPE[t]] for t in CLONE_TYPES
+}
+
 # Transition-cost model, calibrated to the paper's §5.3 measurements.
 RESUME_SECONDS = 0.300            # paused -> running
 BOOT_SECONDS = 32.0               # powered_off -> running (VM boot / XLA jit)
@@ -94,6 +130,10 @@ class Clone:
     last_used: float = 0.0
     busy: bool = False
     executable_cache: dict = dataclasses.field(default_factory=dict)
+    # $-accounting (ADR-004): clone-seconds accrue while RUNNING — an idle
+    # running clone still bills, which is what makes TTL pausing worth $
+    running_since: Optional[float] = None
+    running_seconds: float = 0.0
 
     @property
     def warm(self) -> bool:
@@ -119,6 +159,7 @@ class ClonePool:
         # the primary server is always online (paper: "main server")
         self.primary = self._new_clone("main", primary=True)
         self.primary.state = CloneState.RUNNING
+        self.primary.running_since = self.clock()
 
     # ---------------------------------------------------------------- utils
     def _make_spec(self, ctype: CloneType) -> VenueSpec:
@@ -139,14 +180,50 @@ class ClonePool:
     def running(self) -> List[Clone]:
         return [c for c in self.clones if c.state is CloneState.RUNNING]
 
+    # ------------------------------------------------------- $-accounting
+    def _mark_running(self, clone: Clone, now: float) -> None:
+        """Open a billing interval (idempotent for already-running clones)."""
+        if clone.running_since is None:
+            clone.running_since = now
+
+    def _mark_stopped(self, clone: Clone, now: float) -> None:
+        """Close the billing interval on pause / power-off."""
+        if clone.running_since is not None:
+            clone.running_seconds += now - clone.running_since
+            clone.running_since = None
+
+    def clone_seconds_by_type(self, now: Optional[float] = None
+                              ) -> Dict[str, float]:
+        """RUNNING clone-seconds accrued so far, per clone type (live
+        intervals included up to ``now``) — the quantity the $-cost model
+        bills (primary included: the always-on main server is a standing
+        cost the fleet pays whether or not it serves)."""
+        now = self.clock() if now is None else now
+        out: Dict[str, float] = {}
+        for c in self.clones:
+            s = c.running_seconds
+            if c.running_since is not None:
+                s += now - c.running_since
+            if s > 0.0:
+                out[c.ctype.name] = out.get(c.ctype.name, 0.0) + s
+        return out
+
+    def cost_usd(self, now: Optional[float] = None) -> float:
+        """Total on-demand $ cost of the fleet's running time so far."""
+        return sum(usd_per_second(t) * s
+                   for t, s in self.clone_seconds_by_type(now).items())
+
     def provision(self, type_name: str, n: int,
                   state: CloneState = CloneState.PAUSED) -> List[Clone]:
         """Pre-create secondaries (paper: 'secondary clones are kept in
         pause state to minimize the resources allocated')."""
         out = []
+        now = self.clock()
         for _ in range(n):
             c = self._new_clone(type_name)
             c.state = state
+            if state is CloneState.RUNNING:
+                self._mark_running(c, now)
             out.append(c)
         return out
 
@@ -192,6 +269,7 @@ class ClonePool:
         out = ready + to_resume + to_boot
         for c in out:
             c.state = CloneState.RUNNING
+            self._mark_running(c, now)
             c.busy = True
             c.last_used = now
         return out, cost
@@ -205,12 +283,14 @@ class ClonePool:
     def pause(self, clone: Clone) -> None:
         if clone.is_primary or clone.state is not CloneState.RUNNING:
             return
+        self._mark_stopped(clone, self.clock())
         clone.state = CloneState.PAUSED
         self.stats["pauses"] += 1
 
     def power_off(self, clone: Clone) -> None:
         if clone.is_primary:
             return
+        self._mark_stopped(clone, self.clock())
         clone.state = CloneState.POWERED_OFF
         clone.executable_cache.clear()
         self.stats["offs"] += 1
@@ -273,6 +353,7 @@ class ClonePool:
         out = to_resume + to_boot
         for c in out:
             c.state = CloneState.RUNNING
+            self._mark_running(c, now)
             c.last_used = now
         return out, costs
 

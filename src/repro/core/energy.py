@@ -122,3 +122,12 @@ class TpuEnergyModel:
 
     def total_j(self, **kw) -> float:
         return sum(self.energy_j(**kw).values())
+
+    def busy_j(self, chips: int, seconds: float, util: float = 1.0) -> float:
+        """Chips-aware busy energy of one venue dispatch (ADR-004).
+
+        The serving layer bills every task through this instead of the old
+        flat ``venue_seconds x power_peak``, so a clone type's *chip count*
+        scales its bill — an x8large tier burning 8 chips is no longer
+        charged like a 1-chip ``basic`` clone."""
+        return self.total_j(chips=chips, seconds=seconds, util=util)

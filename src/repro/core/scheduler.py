@@ -13,12 +13,22 @@ is built from:
     Deterministic (seeded) open-loop arrival process for load generation on
     the virtual timeline.
 
-``QueueAutoscaler``
-    Queue-depth-driven elasticity: grows the RUNNING secondary set through
-    :meth:`ClonePool.ensure_secondaries` when demand outruns capacity, and
-    lets the pool's idle TTLs (:meth:`ClonePool.reap_idle`) pause/power-off
-    surplus clones — exactly the paper's "secondary clones are kept in pause
-    state to minimize the resources allocated" policy, now measurable.
+``PlacementEngine``
+    Cost/energy-aware tier selection (ADR-004): for one demand bucket it
+    ranks the eligible clone-type tiers by a :func:`~repro.core.policy.
+    placement_key` over (provisioning latency, $-rate, chips-aware energy
+    rate), and walks :meth:`ClonePool.escalate_type` to find the smallest
+    tier whose KV block pool can hold a request — the serving-layer
+    analogue of the paper's OutOfMemoryError -> bigger-VM flow (§5.4).
+
+``FleetAutoscaler``
+    Heterogeneous elasticity: demand arrives as *buckets* per (required
+    tier, urgency) — the Client Handler derives them per tenant/priority
+    class and per KV-footprint — each bucket is placed onto a tier by the
+    ``PlacementEngine``, and per-type targets grow the RUNNING secondary
+    set through :meth:`ClonePool.ensure_secondaries` under one global
+    cap; shrink stays TTL-driven (:meth:`ClonePool.reap_idle`) — the
+    paper's "secondary clones are kept in pause state" policy.
 
 Provisioning latency is *not* hidden: newly activated clones carry a
 ``ready_at`` timestamp and the handler must not start work on them before
@@ -27,13 +37,17 @@ it (resume ~300 ms, boot ~32 s on the shared timeline).
 from __future__ import annotations
 
 import dataclasses
-import math
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.clones import ClonePool
+from repro.core.clones import (BOOT_SECONDS, CLONE_TYPES, ClonePool,
+                               CloneState, chips_for, resume_time,
+                               usd_per_second)
+from repro.core.energy import TpuEnergyModel
+from repro.core.policy import (PLACEMENT_HORIZON_S, Policy, Prediction,
+                               placement_key)
 
 
 @dataclasses.dataclass
@@ -58,6 +72,7 @@ class ServeRequest:
     generated: List[int] = dataclasses.field(default_factory=list)
     first_token_t: Optional[float] = None
     preemptions: int = 0
+    tenant: Optional[str] = None     # multi-tenant demand bucketing
 
 
 @dataclasses.dataclass
@@ -125,6 +140,26 @@ class AdmissionQueue:
     def peek(self) -> Optional[ServeRequest]:
         """The request ``take`` would pop next, without popping it."""
         return self._q[0] if self._q else None
+
+    def snapshot(self) -> List[ServeRequest]:
+        """The queued requests in FIFO order (read-only view for demand
+        bucketing and placement — never mutate the returned requests'
+        queue membership directly)."""
+        return list(self._q)
+
+    def take_where(self, pred: Callable[["ServeRequest"], bool]
+                   ) -> Optional[ServeRequest]:
+        """Pop the *first* queued request satisfying ``pred`` (FIFO scan).
+
+        The heterogeneous spawn path uses this so a head request whose
+        required tier is still provisioning (e.g. a long-context request
+        waiting for a ``large`` boot) does not head-of-line-block the
+        short-prompt bulk behind it."""
+        for i, r in enumerate(self._q):
+            if pred(r):
+                del self._q[i]
+                return r
+        return None
 
     @property
     def depth(self) -> int:
@@ -237,52 +272,203 @@ class SlotLedger:
         return out
 
 
-class QueueAutoscaler:
-    """Queue-depth-driven elastic sizing of the RUNNING secondary set.
 
-    Target size = ceil(demand / work_per_clone) where demand counts queued
-    requests plus in-flight work units; clamped to [min_secondaries,
-    max_secondaries].  Growth provisions through the pool (resume preferred
-    over boot — costs land on the shared timeline via ``ready_at``);
-    shrink is delegated to the pool's idle TTLs via ``reap_idle``.
+
+class PlacementEngine:
+    """Cost/energy-aware clone-type selection for one demand bucket.
+
+    Two decisions live here (ADR-004):
+
+    ``required_type`` — the KV floor: walk the paper's escalation ladder
+    (:meth:`ClonePool.escalate_type`, the §5.4 OutOfMemoryError flow) from
+    the base tier until a tier's block pool can hold the request's
+    prompt+window KV demand; a request that outgrows every tier degrades
+    gracefully to the biggest fleet tier (preemption absorbs the squeeze)
+    instead of raising.
+
+    ``choose_type`` — among the tiers at or above the floor, rank by the
+    policy's :func:`~repro.core.policy.placement_key` over a
+    :class:`~repro.core.policy.Prediction` of (provisioning latency,
+    chips-aware energy over the horizon, $ over the horizon); ties break
+    to the smallest tier.  Urgent buckets (high-priority tenants) always
+    rank by ``EXEC_TIME`` — a warm big clone beats booting a cheap one.
     """
 
-    def __init__(self, pool: ClonePool, clone_type: str = "main",
-                 work_per_clone: int = 1, min_secondaries: int = 0,
-                 max_secondaries: int = 8):
+    def __init__(self, pool: ClonePool, fleet: Optional[Sequence[str]] = None,
+                 policy: Policy = Policy.EXEC_TIME_AND_ENERGY,
+                 energy: Optional[TpuEnergyModel] = None):
         self.pool = pool
-        self.clone_type = clone_type
+        self.policy = policy
+        self.energy = energy or TpuEnergyModel()
+        names = list(fleet) if fleet is not None else list(CLONE_TYPES)
+        unknown = [n for n in names if n not in CLONE_TYPES]
+        if unknown:
+            raise ValueError(f"unknown clone types in fleet: {unknown}")
+        self.fleet = sorted(set(names), key=lambda n: CLONE_TYPES[n].rank())
+        # type -> demand buckets actually placed on it (recorded by the
+        # FleetAutoscaler, not by speculative choose_type evaluations)
+        self.decisions: Dict[str, int] = {}
+        # cid -> usable-from time, shared by the FleetAutoscaler so a
+        # clone resumed *this tick* is not mistaken for a warm one
+        self.ready_at: Dict[int, float] = {}
+
+    def chips(self, type_name: str) -> int:
+        return chips_for(type_name, self.pool.tpu)
+
+    def provision_pred(self, type_name: str) -> Prediction:
+        """Marginal cost of putting one more work unit on this tier now.
+
+        Time is the tier's provisioning latency given the pool's current
+        inventory: an idle RUNNING secondary is available at its
+        ``ready_at`` residue (0 when warm — a clone resumed this tick
+        still carries its resume), a PAUSED one costs a resume, otherwise
+        a cold boot.  Energy and $ are the tier's burn rates over the
+        placement horizon (chips-aware)."""
+        now = self.pool.clock()
+        idle = [max(0.0, self.ready_at.get(c.cid, 0.0) - now)
+                for c in self.pool.running_secondaries(type_name)
+                if not c.busy]
+        paused = any(c.state is CloneState.PAUSED
+                     and c.ctype.name == type_name and not c.is_primary
+                     for c in self.pool.clones)
+        t = (min(idle) if idle
+             else resume_time(1) if paused else BOOT_SECONDS)
+        e = self.energy.busy_j(chips=self.chips(type_name),
+                               seconds=PLACEMENT_HORIZON_S)
+        usd = usd_per_second(type_name) * PLACEMENT_HORIZON_S
+        return Prediction(time_s=t, energy_j=e, cost_usd=usd)
+
+    def eligible(self, required_type: str) -> List[str]:
+        """Fleet tiers at or above the required tier's rank."""
+        rmin = CLONE_TYPES[required_type].rank()
+        return [t for t in self.fleet if CLONE_TYPES[t].rank() >= rmin]
+
+    def choose_type(self, required_type: str, *,
+                    urgent: bool = False) -> Optional[str]:
+        """The tier this bucket's capacity should be provisioned on."""
+        cands = self.eligible(required_type)
+        if not cands:
+            return None
+        policy = Policy.EXEC_TIME if urgent else self.policy
+        return min(cands,
+                   key=lambda t: (placement_key(policy,
+                                                self.provision_pred(t)),
+                                  CLONE_TYPES[t].rank()))
+
+    def required_type(self, base_type: str, blocks_needed: int,
+                      real_blocks_of: Callable[[str], int]) -> str:
+        """Smallest fleet tier (walking ``escalate_type`` from the base)
+        whose block pool holds ``blocks_needed``; the biggest fleet tier
+        when even the top of the ladder cannot (``escalate_type`` returns
+        None — the caller degrades gracefully, ADR-004)."""
+        fleet = set(self.fleet)
+        t: Optional[str] = base_type
+        last_fleet = base_type
+        while t is not None:
+            if t in fleet:
+                last_fleet = t
+                if real_blocks_of(t) >= blocks_needed:
+                    return t
+            t = self.pool.escalate_type(t)
+        return last_fleet
+
+
+class FleetAutoscaler:
+    """Placement-driven elastic sizing of a heterogeneous secondary fleet.
+
+    Demand arrives as buckets ``(required_type, urgent, work_units)`` —
+    the Client Handler derives them per tenant/priority class and per
+    KV-footprint tier.  Each bucket is placed on a tier by the
+    :class:`PlacementEngine` (urgent buckets place first, then cheaper
+    tiers), per-type targets are ``ceil(units / work_per_clone)`` under
+    one global ``max_secondaries`` budget, and growth provisions through
+    the pool (resume preferred over boot — costs land on the shared
+    timeline via ``ready_at``).  Shrink is delegated to the pool's idle
+    TTLs via ``reap_idle``: pause after ``PAUSE_IDLE_TTL``, power-off
+    after ``OFF_IDLE_TTL``.
+    """
+
+    def __init__(self, pool: ClonePool, placement: PlacementEngine,
+                 base_type: str = "main", work_per_clone: int = 1,
+                 min_secondaries: int = 0, max_secondaries: int = 8):
+        self.pool = pool
+        self.placement = placement
+        self.base_type = base_type
         self.work_per_clone = max(1, work_per_clone)
         self.min_secondaries = min_secondaries
         self.max_secondaries = max_secondaries
-        self.ready_at: Dict[int, float] = {}     # cid -> usable-from time
+        # cid -> usable-from time; the dict is *shared* with the placement
+        # engine so tier availability accounts for in-flight provisioning
+        self.ready_at: Dict[int, float] = placement.ready_at
         self.peak_secondaries = 0
         self.scale_ups = 0
         self.samples: List[tuple] = []           # (t, running_secondaries)
+        self.targets: Dict[str, int] = {}        # last tick's per-type target
 
     def clone_ready_delay(self, clone, now: float) -> float:
         """Seconds until ``clone`` is actually usable (0 if warm)."""
         return max(0.0, self.ready_at.get(clone.cid, 0.0) - now)
 
-    def step(self, now: float, queue_depth: int, in_flight: int) -> int:
-        """One control-loop tick; returns the current target size."""
-        demand = queue_depth + in_flight
-        target = min(self.max_secondaries,
-                     max(self.min_secondaries,
-                         math.ceil(demand / self.work_per_clone)))
-        running = len(self.pool.running_secondaries(self.clone_type))
-        if target > running:
-            fresh, costs = self.pool.ensure_secondaries(self.clone_type,
-                                                        target)
-            for c, cost in zip(fresh, costs):
-                self.ready_at[c.cid] = now + cost
-            if fresh:
-                self.scale_ups += 1
-        elif running > self.max_secondaries:      # cap shrank under us
-            self.pool.pause_surplus(self.max_secondaries, self.clone_type)
+    def step(self, now: float, buckets: Sequence[tuple],
+             in_flight: Optional[Dict[str, int]] = None) -> Dict[str, int]:
+        """One control-loop tick; returns the per-type target sizes.
+
+        ``buckets``: iterable of ``(required_type, urgent, work_units)``
+        for the queued demand.  ``in_flight``: work units currently being
+        served, per clone type — they hold their tier's capacity."""
+        demand: Dict[str, int] = {}
+        order: List[str] = []                    # budget-allocation order
+        for rtype, urgent, units in sorted(
+                buckets, key=lambda b: (not b[1], CLONE_TYPES[b[0]].rank())):
+            t = self.placement.choose_type(rtype, urgent=urgent) or rtype
+            self.placement.decisions[t] = \
+                self.placement.decisions.get(t, 0) + 1
+            demand[t] = demand.get(t, 0) + units
+            if t not in order:
+                order.append(t)
+        for t, n in (in_flight or {}).items():
+            demand[t] = demand.get(t, 0) + n
+            if t not in order:
+                order.append(t)
+        if self.base_type not in order:
+            order.append(self.base_type)
+            demand.setdefault(self.base_type, 0)
+        budget = self.max_secondaries
+        self.targets = {}
+        if self.min_secondaries > 0:     # warm base floor reserved FIRST,
+            grant = min(self.min_secondaries, budget)   # never starved by
+            self.targets[self.base_type] = grant        # other tiers
+            budget -= grant
+        for t in order:
+            want = -(-demand[t] // self.work_per_clone)
+            have = self.targets.get(t, 0)
+            grant = max(0, min(want - have, budget))
+            self.targets[t] = have + grant
+            budget -= grant
+        for t, target in self.targets.items():
+            if target > len(self.pool.running_secondaries(t)):
+                fresh, costs = self.pool.ensure_secondaries(t, target)
+                for c, cost in zip(fresh, costs):
+                    self.ready_at[c.cid] = now + cost
+                if fresh:
+                    self.scale_ups += 1
+        total = len(self.pool.running_secondaries())
+        if total > self.max_secondaries:
+            # over cap (demand shifted tiers): pause idle surplus *per
+            # type, over-target tiers first* — an untyped sweep would
+            # pause the just-provisioned target tier and keep the stale
+            # one, livelocking the shift until the idle TTL reaped it
+            running_types = sorted(
+                {c.ctype.name for c in self.pool.running_secondaries()},
+                key=lambda t: (self.targets.get(t, 0),
+                               CLONE_TYPES[t].rank()))
+            for t in running_types:
+                if total <= self.max_secondaries:
+                    break
+                total -= self.pool.pause_surplus(self.targets.get(t, 0), t)
         # shrink: TTL-driven (paper: idle secondaries are paused, then off)
         self.pool.reap_idle()
-        running = len(self.pool.running_secondaries(self.clone_type))
+        running = len(self.pool.running_secondaries())
         self.peak_secondaries = max(self.peak_secondaries, running)
         self.samples.append((now, running))
-        return target
+        return dict(self.targets)

@@ -20,11 +20,25 @@ on one clone, so cohorts on different clones genuinely overlap on the
 timeline.  Requests **leave** their cohort at decode-step granularity the
 moment they hit their token budget (the cohort's KV cache shrinks in
 place), and new arrivals **enter** service at the next step boundary on any
-free clone — they never wait for a whole batch to drain.  A queue-depth
-driven :class:`~repro.core.scheduler.QueueAutoscaler` provisions and
-TTL-pauses secondaries through the ClonePool lifecycle, which makes the
-paper's elasticity claim measurable as p50/p99 latency and tokens/s under
-Poisson offered load (see ``benchmarks/serving_load.py``).
+free clone — they never wait for a whole batch to drain.  A
+:class:`~repro.core.scheduler.FleetAutoscaler` provisions and TTL-pauses
+secondaries through the ClonePool lifecycle, which makes the paper's
+elasticity claim measurable as p50/p99 latency and tokens/s under Poisson
+offered load (see ``benchmarks/serving_load.py``).
+
+The fleet is **heterogeneous** (ADR-004): ``ClientHandler(fleet=[...])``
+serves across several paper-Table-1 clone types at once.  Demand is
+bucketed per tenant/priority class and per KV footprint; a
+:class:`~repro.core.scheduler.PlacementEngine` places each bucket on a
+tier by cost/energy/latency (``placement_policy``), and a request whose
+prompt+window KV demand exceeds its tier's block pool is *escalated* up
+the :meth:`~repro.core.clones.ClonePool.escalate_type` ladder — the
+serving-layer analogue of the paper's OutOfMemoryError -> bigger-VM flow
+(§5.4).  Per-type block pools scale with the tier's memory ladder, busy
+energy is billed chips-aware through
+:meth:`~repro.core.energy.TpuEnergyModel.busy_j`, and the
+:class:`ServeReport` carries the fleet economics (per-type clone-seconds,
+$-cost, per-type energy, the served fleet mix).
 
 KV cache modes: the default ``kv="paged"`` path batches at *slot*
 granularity — each clone runs a :class:`_SlotEngine` whose requests each
@@ -60,12 +74,14 @@ import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.core import (ClonePool, ExecutionController, Policy,
-                        RemoteableMethod)
+                        RemoteableMethod, TpuEnergyModel)
 from repro.core.clock import VirtualClock
+from repro.core.clones import (CLONE_TYPES, KV_SCALE_BY_CLONE_TYPE,
+                               PAUSE_IDLE_TTL)
 from repro.core.dispatch import Dispatcher
-from repro.core.scheduler import (AdmissionQueue, QueueAutoscaler,
-                                  ServeCompletion, ServeRequest, SlotLedger,
-                                  poisson_arrivals)
+from repro.core.scheduler import (AdmissionQueue, FleetAutoscaler,
+                                  PlacementEngine, ServeCompletion,
+                                  ServeRequest, SlotLedger, poisson_arrivals)
 from repro.core.venues import Venue, pytree_bytes, transfer_time
 from repro.launch import steps as S
 from repro.models import model
@@ -886,6 +902,14 @@ class ServeReport:
     total prompt tokens over all admissions (restores included);
     ``preemptions`` counts slot evictions under pool pressure and
     ``restored_tokens`` the tokens re-prefilled bringing victims back.
+
+    Fleet economics (ADR-004): ``fleet_mix`` counts completions per clone
+    type, ``escalations`` the requests whose KV demand forced a bigger
+    tier, ``clone_seconds_by_type`` the RUNNING clone-seconds billed per
+    tier (idle-but-running time included — that is what TTL pausing
+    saves), ``cost_usd`` their on-demand $ total, ``energy_j_by_type``
+    the chips-aware busy energy per tier, and ``power_offs`` the clones
+    the OFF_IDLE_TTL actually powered off.
     """
 
     completions: List[ServeCompletion]
@@ -907,6 +931,14 @@ class ServeReport:
     prefix_hit_rate: float = 0.0
     preemptions: int = 0
     restored_tokens: int = 0
+    fleet_mix: Dict[str, int] = dataclasses.field(default_factory=dict)
+    escalations: int = 0
+    clone_seconds_by_type: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    cost_usd: float = 0.0
+    energy_j_by_type: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    power_offs: int = 0
 
     def summary(self) -> str:
         """One-line digest (documented in docs/benchmarks.md)."""
@@ -940,6 +972,10 @@ class ClientHandler:
                  num_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
                  decode_window: int = 1, donate_kv: bool = False,
+                 fleet: Optional[List[str]] = None,
+                 placement_policy: Policy = Policy.EXEC_TIME_AND_ENERGY,
+                 energy_model: Optional[TpuEnergyModel] = None,
+                 provision: Optional[Dict[str, int]] = None,
                  executor: Optional[Callable] = None,
                  pool: Optional[ClonePool] = None,
                  clock: Optional[VirtualClock] = None):
@@ -980,11 +1016,24 @@ class ClientHandler:
                                   max_clones=max_secondaries + 8)
         self.dispatcher = Dispatcher(self.pool, self.clock)
         self.queue = AdmissionQueue(queue_depth)
-        self.autoscaler = QueueAutoscaler(
-            self.pool, clone_type=clone_type, work_per_clone=work_per_clone,
+        # heterogeneous fleet (ADR-004): allowed tiers, rank-ascending;
+        # the base clone_type is always a member, so fleet=None keeps the
+        # exact homogeneous behaviour
+        names = set(fleet or []) | {clone_type}
+        self.fleet = sorted(names, key=lambda n: CLONE_TYPES[n].rank())
+        self._fleet_set = set(self.fleet)
+        self.energy = energy_model or TpuEnergyModel()
+        self.placement = PlacementEngine(self.pool, fleet=self.fleet,
+                                         policy=placement_policy,
+                                         energy=self.energy)
+        self.autoscaler = FleetAutoscaler(
+            self.pool, self.placement, base_type=clone_type,
+            work_per_clone=work_per_clone,
             min_secondaries=min_secondaries, max_secondaries=max_secondaries)
         if provision_paused:     # paper §5.3: secondaries pre-created paused
             self.pool.provision(clone_type, max_secondaries)
+        for tname, n in (provision or {}).items():   # extra paused tiers
+            self.pool.provision(tname, n)
         self.clone_type = clone_type
         self.max_batch = max_batch
         self.prompt_pad = prompt_pad
@@ -1007,22 +1056,177 @@ class ClientHandler:
         self.restored_tokens = 0
         self.prefix_hit_tokens = 0
         self.prompt_tokens = 0
+        # fleet economics (ADR-004)
+        self.energy_j_by_type: Dict[str, float] = {}
+        self.busy_seconds_by_type: Dict[str, float] = {}
+        self.fleet_mix: Dict[str, int] = {}        # completions per type
+        self._escalated: set = set()               # rids forced up a tier
+        # peak queued demand per (tenant, priority, required tier) class
+        self.demand_by_class: Dict[tuple, int] = {}
+        # rid -> (lo, hi) placement band, valid for one scheduler round
+        # (invalidated whenever pool inventory changes — engine spawns)
+        self._band_cache: Dict[int, tuple] = {}
 
     # ---------------------------------------------------------------- clones
-    def _free_clone(self):
-        """Cheapest usable clone: warm first, then provisioning ones."""
+    def _free_clone(self, lo_rank: Optional[int] = None,
+                    hi_rank: Optional[int] = None):
+        """Best usable clone inside the ``[lo_rank, hi_rank]`` band:
+        soonest-ready first (a free clone must never lose to one still
+        booting), then the smallest tier, then cid.  Cost discipline
+        lives in the band itself — a request's ``hi`` is the tier the
+        placement policy chose for it, so a dearer tier is simply not a
+        candidate.  The primary is exempt from the band's *upper* bound:
+        it is standing capacity billed whether or not it serves, so using
+        it can never squat paid-for premium."""
+        def in_band(rank, primary=False):
+            return ((lo_rank is None or rank >= lo_rank)
+                    and (primary or hi_rank is None or rank <= hi_rank))
+
         now = self.clock.now()
         cands = []
-        if self.use_primary and not self.pool.primary.busy:
-            cands.append((0.0, 0, self.pool.primary))
-        for c in self.pool.running_secondaries(self.clone_type):
-            if not c.busy:
-                cands.append((self.autoscaler.clone_ready_delay(c, now),
-                              c.cid, c))
-        return min(cands)[2] if cands else None
+        p = self.pool.primary
+        if self.use_primary and not p.busy and in_band(p.ctype.rank(),
+                                                       primary=True):
+            cands.append((0.0, p.ctype.rank(), 0, p))
+        for c in self.pool.running_secondaries():
+            if c.busy or c.ctype.name not in self._fleet_set:
+                continue
+            if not in_band(c.ctype.rank()):
+                continue
+            cands.append((self.autoscaler.clone_ready_delay(c, now),
+                          c.ctype.rank(), c.cid, c))
+        return min(cands)[3] if cands else None
 
     def _net_s(self, nbytes: int) -> float:
         return transfer_time(nbytes, self.pool.link)
+
+    # ------------------------------------------------------------- placement
+    def _charge(self, clone, venue_seconds: float) -> None:
+        """Bill one dispatch's busy energy, chips-aware (ADR-004): the
+        venue's chip count scales the bill through the TPU energy model
+        instead of the old flat ``venue_seconds x power_peak``."""
+        e = self.energy.busy_j(chips=clone.spec.chips, seconds=venue_seconds)
+        self.busy_energy_j += e
+        t = clone.ctype.name
+        self.energy_j_by_type[t] = self.energy_j_by_type.get(t, 0.0) + e
+        self.busy_seconds_by_type[t] = (
+            self.busy_seconds_by_type.get(t, 0.0) + venue_seconds)
+
+    def _blocks_for_type(self, type_name: str) -> int:
+        """KV block-pool size for an engine on this clone type: the base
+        tier gets exactly ``num_blocks``, bigger tiers scale with the
+        fleet memory ladder (``KV_SCALE_BY_CLONE_TYPE``), all capped at
+        the worst case every slot could ever write."""
+        max_blk = -(-self.backend.capacity // self.block_size)
+        worst = self.max_batch * max_blk + 1
+        if self.num_blocks is None:
+            return worst
+        if len(self.fleet) == 1:     # homogeneous: exact pre-fleet sizing
+            return self.num_blocks
+        scale = (KV_SCALE_BY_CLONE_TYPE[type_name]
+                 / KV_SCALE_BY_CLONE_TYPE[self.clone_type])
+        return min(worst, max(2, int(self.num_blocks * scale)))
+
+    def _request_blocks(self, req: ServeRequest) -> int:
+        """Worst-case KV blocks this request's slot can come to hold
+        (prompt+window demand — mirrors ``KVBlockPool._need_blocks`` over
+        the effective restore-aware prompt length)."""
+        p = self.prompt_pad
+        if req.generated:
+            p = min(p + len(req.generated) - 1, self.backend.capacity)
+        total = min(p + req.max_new_tokens, self.backend.capacity)
+        max_blk = -(-self.backend.capacity // self.block_size)
+        return min(-(-max(total, p) // self.block_size), max_blk)
+
+    def _required_type(self, req: ServeRequest) -> str:
+        """The smallest fleet tier whose block pool holds this request —
+        the live admission analogue of the paper's OutOfMemoryError ->
+        bigger-VM escalation.  Homogeneous fleets (and the contiguous
+        cohort path, which has no block pool) short-circuit to the base
+        type; a request no tier can hold degrades to the top tier, where
+        preemption absorbs the squeeze."""
+        if len(self.fleet) == 1 or self.kv_mode != "paged":
+            return self.clone_type
+        t = self.placement.required_type(
+            self.clone_type, self._request_blocks(req),
+            lambda n: self._blocks_for_type(n) - 1)   # -1: trash block
+        if t != self.clone_type:
+            self._escalated.add(req.rid)
+        return t
+
+    def _placement_band(self, req: ServeRequest) -> tuple:
+        """Rank band ``(lo, hi)`` of clone types this request may run on.
+
+        ``lo`` is the escalation floor (KV demand); ``hi`` the tier the
+        placement engine would provision for it *now* — so bulk does not
+        squat on premium engines' free slots just because their rank is
+        adequate, and the fleet's $-policy governs joins as well as
+        spawns.  Urgent requests rank by latency, so their band widens to
+        whatever tier is warm.  Homogeneous fleets are unconstrained
+        (``(None, None)`` — exact pre-fleet behaviour: the single
+        secondary type plus the always-on primary).  Bands are cached per
+        scheduler round (``_band_cache``) — they depend only on the
+        request and pool inventory, not on which engine asks."""
+        cached = self._band_cache.get(req.rid)
+        if cached is not None:
+            return cached
+        if len(self.fleet) == 1:
+            band = (None, None)
+        else:
+            rt = self._required_type(req)
+            lo = CLONE_TYPES[rt].rank()
+            ct = self.placement.choose_type(rt,
+                                            urgent=req.priority > 0) or rt
+            band = (lo, max(lo, CLONE_TYPES[ct].rank()))
+        self._band_cache[req.rid] = band
+        return band
+
+    def _in_band(self, req: ServeRequest, clone) -> bool:
+        """Is ``clone`` inside the request's placement band?  The primary
+        is exempt from the upper bound (standing capacity — see
+        ``_free_clone``)."""
+        lo, hi = self._placement_band(req)
+        rank = clone.ctype.rank()
+        if lo is not None and rank < lo:
+            return False
+        return clone.is_primary or hi is None or rank <= hi
+
+    def _fits_slot(self, engine: "_SlotEngine", req: ServeRequest) -> bool:
+        """May ``req`` take a free slot of this engine right now?  Tier
+        must sit in the request's placement band and the engine's block
+        pool must admit the effective prompt (prefix matching applies)."""
+        return (self._in_band(req, engine.clone)
+                and engine.kv.can_admit(
+                    _SlotEngine.effective_prompt(
+                        req, self.prompt_pad, self.backend.capacity),
+                    req.max_new_tokens))
+
+    def _demand_buckets(self) -> List[tuple]:
+        """Queued demand as ``(required_type, urgent, cohort_units)``
+        buckets for the autoscaler, tracked per tenant/priority class and
+        per KV-footprint tier (``demand_by_class`` keeps the per-class
+        peaks for telemetry)."""
+        counts: Dict[tuple, int] = {}
+        for r in self.queue.snapshot():
+            key = (self._required_type(r), r.priority > 0, r.tenant)
+            counts[key] = counts.get(key, 0) + 1
+        agg: Dict[tuple, int] = {}
+        for (t, urgent, _tenant), n in counts.items():
+            agg[(t, urgent)] = agg.get((t, urgent), 0) + n
+        for key, n in counts.items():
+            self.demand_by_class[key] = max(self.demand_by_class.get(key, 0),
+                                            n)
+        return [(t, urgent, -(-n // self.max_batch))
+                for (t, urgent), n in agg.items()]
+
+    @staticmethod
+    def _in_flight_by_type(inflight: Dict) -> Dict[str, int]:
+        """In-flight work units per clone type (engines and cohorts)."""
+        out: Dict[str, int] = {}
+        for unit in inflight.values():
+            t = unit.clone.ctype.name
+            out[t] = out.get(t, 0) + 1
+        return out
 
     # ---------------------------------------------------------------- cohort
     def _start_cohort(self, batch: List[ServeRequest], clone):
@@ -1040,7 +1244,7 @@ class ClientHandler:
             clone, self.backend.prefill, (self.backend.params,
                                           jnp.asarray(toks)),
             executor=self.executor, extra_delay=delay, label="prefill")
-        self.busy_energy_j += task.venue_seconds * clone.spec.power_peak
+        self._charge(clone, task.venue_seconds)
         return task, cohort
 
     def _submit_decode(self, cohort: _Cohort):
@@ -1055,7 +1259,7 @@ class ClientHandler:
             (self.backend.params, cohort.cache, cohort.tok, pos),
             executor=self.executor,
             extra_delay=self._net_s(len(cohort.reqs) * 8), label="decode")
-        self.busy_energy_j += task.venue_seconds * cohort.clone.spec.power_peak
+        self._charge(cohort.clone, task.venue_seconds)
         return task
 
     def _retire(self, cohort: _Cohort, completions: List[ServeCompletion]
@@ -1073,6 +1277,8 @@ class ClientHandler:
                 completions.append(ServeCompletion(
                     r.rid, cohort.outs[i], r.arrival_t,
                     cohort.first_token_t[i], now, cohort.clone.spec.name))
+                t = cohort.clone.ctype.name
+                self.fleet_mix[t] = self.fleet_mix.get(t, 0) + 1
             else:
                 keep.append(i)
         if not keep:
@@ -1095,7 +1301,7 @@ class ClientHandler:
         kv = self._kv_pools.get(clone.cid)
         if kv is None:
             kv = KVBlockPool(self.backend, self.max_batch, self.block_size,
-                             self.num_blocks,
+                             self._blocks_for_type(clone.ctype.name),
                              prefix_cache=self.prefix_cache)
             self._kv_pools[clone.cid] = kv
         else:
@@ -1317,8 +1523,7 @@ class ClientHandler:
             (self.backend.params, kv.pool, tok, pos, steps_left, tables),
             executor=self.executor, extra_delay=delay,
             label="step" if do_decode else "prefill")
-        self.busy_energy_j += (task.venue_seconds
-                               * engine.clone.spec.power_peak)
+        self._charge(engine.clone, task.venue_seconds)
         return task
 
     def _engine_step_done(self, engine: _SlotEngine, task,
@@ -1372,6 +1577,8 @@ class ClientHandler:
                 completions.append(ServeCompletion(
                     s.req.rid, s.out, s.req.arrival_t, s.first_token_t,
                     now, engine.clone.spec.name))
+                t = engine.clone.ctype.name
+                self.fleet_mix[t] = self.fleet_mix.get(t, 0) + 1
                 engine.slots[slot] = None
                 kv.free_slot(slot)
         return engine.alive()
@@ -1398,6 +1605,7 @@ class ClientHandler:
 
         while True:
             now = self.clock.now()
+            self._band_cache.clear()        # fresh round, fresh inventory
             while i < len(reqs) and reqs[i].arrival_t <= now + 1e-12:
                 self.queue.offer(reqs[i], now)
                 i += 1
@@ -1411,32 +1619,52 @@ class ClientHandler:
                 # allocations of earlier assignments in the same round;
                 # fits() matches the effective prompt against the prefix
                 # index, so a shared-prefix request needs only its
-                # private blocks free
+                # private blocks free — and vetoes engines outside the
+                # request's placement band (ADR-004)
                 self.ledger.assign(
                     self.queue,
-                    fits=lambda key, r: engines[key].kv.can_admit(
-                        _SlotEngine.effective_prompt(
-                            r, self.prompt_pad, self.backend.capacity),
-                        r.max_new_tokens),
+                    fits=lambda key, r: self._fits_slot(engines[key], r),
                     on_assign=lambda key, r: self._admit(engines[key], r))
-            # demand in cohort units: queued requests coalesce into batches
-            queued_cohorts = -(-self.queue.depth // self.max_batch)
-            self.autoscaler.step(now, queued_cohorts, len(inflight))
-            # spawn engines/cohorts while a clone is free
+            # demand bucketed per tenant/priority class and KV tier; the
+            # placement engine turns buckets into per-type targets
+            self.autoscaler.step(now, self._demand_buckets(),
+                                 self._in_flight_by_type(inflight))
+            # spawn engines/cohorts while an adequate clone is free
             while self.queue.depth > 0:
-                clone = self._free_clone()
+                # first queued request some free clone can serve: a head
+                # whose tier is still provisioning (a booting ``large``)
+                # must not head-of-line-block the bulk behind it
+                picked = clone = None
+                for r in self.queue.snapshot():
+                    lo, hi = self._placement_band(r)
+                    clone = self._free_clone(lo, hi)
+                    if clone is not None:
+                        picked = r
+                        break
                 if clone is None:
                     break
                 if paged:
                     engine = self._start_engine(clone)
+
+                    # the picked request bypasses the band re-check: the
+                    # clone was chosen *for it*, and starting the engine
+                    # marks the clone busy, which already shifts the
+                    # inventory-dependent placement band
+                    def fill(r, picked=picked, engine=engine):
+                        if r is picked:
+                            return engine.kv.can_admit(
+                                _SlotEngine.effective_prompt(
+                                    r, self.prompt_pad,
+                                    self.backend.capacity),
+                                r.max_new_tokens)
+                        return self._fits_slot(engine, r)
+
                     n = 0
-                    while (n < self.max_batch and self.queue.depth > 0
-                           and engine.kv.can_admit(
-                               _SlotEngine.effective_prompt(
-                                   self.queue.peek(), self.prompt_pad,
-                                   self.backend.capacity),
-                               self.queue.peek().max_new_tokens)):
-                        self._admit(engine, self.queue.take(1)[0])
+                    while n < self.max_batch and self.queue.depth > 0:
+                        req = self.queue.take_where(fill)
+                        if req is None:
+                            break
+                        self._admit(engine, req)
                         n += 1
                     if n == 0:
                         raise RuntimeError(
@@ -1449,9 +1677,23 @@ class ClientHandler:
                     self.ledger.update(id(engine), engine.kv.free_slots)
                     inflight[self._submit_engine_step(engine)] = engine
                 else:
-                    task, cohort = self._start_cohort(
-                        self.queue.take(self.max_batch), clone)
+                    # the cohort seeds with the *picked* request (the
+                    # clone was banded for it — never the possibly
+                    # band-blocked FIFO head) and fills with band-
+                    # compatible requests in FIFO order
+                    batch = []
+                    while len(batch) < self.max_batch:
+                        req = self.queue.take_where(
+                            lambda r: r is picked or self._in_band(r,
+                                                                   clone))
+                        if req is None:
+                            break
+                        batch.append(req)
+                    task, cohort = self._start_cohort(batch, clone)
                     inflight[task] = cohort
+                # spawning changed the pool inventory (clone now busy):
+                # placement bands must be re-derived next evaluation
+                self._band_cache.clear()
 
             if inflight:
                 # bound the wait so due arrivals are admitted on time
@@ -1488,8 +1730,16 @@ class ClientHandler:
                 break
 
         if drain_idle_s > 0.0:       # let idle TTLs pause the secondaries
-            self.clock.advance(drain_idle_s)
-            self.autoscaler.step(self.clock.now(), 0, 0)
+            # step the drain in PAUSE_IDLE_TTL chunks so the *second* TTL
+            # stage fires too: a clone pauses once idle > PAUSE_IDLE_TTL
+            # and powers off only on a later reap with idle > OFF_IDLE_TTL
+            # — one big advance would pause but never power off
+            end = self.clock.now() + drain_idle_s
+            while self.clock.now() < end - 1e-9:
+                self.clock.advance(min(PAUSE_IDLE_TTL,
+                                       end - self.clock.now()))
+                self.pool.reap_idle()
+            self.autoscaler.step(self.clock.now(), [], {})
 
         lat = np.array([c.latency_s for c in completions]) \
             if completions else np.zeros(1)
@@ -1497,6 +1747,7 @@ class ClientHandler:
             if completions else np.zeros(1)
         makespan = self.clock.now() - t_start - drain_idle_s
         utils = [w / r for w, r in self.kv_samples if r > 0]
+        cs_by_type = self.pool.clone_seconds_by_type(self.clock.now())
         return ServeReport(
             completions=completions,
             accepted=self.queue.accepted,
@@ -1518,7 +1769,13 @@ class ClientHandler:
             prefix_hit_rate=(self.prefix_hit_tokens
                              / max(self.prompt_tokens, 1)),
             preemptions=self.preemptions,
-            restored_tokens=self.restored_tokens)
+            restored_tokens=self.restored_tokens,
+            fleet_mix=dict(self.fleet_mix),
+            escalations=len(self._escalated),
+            clone_seconds_by_type=cs_by_type,
+            cost_usd=self.pool.cost_usd(self.clock.now()),
+            energy_j_by_type=dict(self.energy_j_by_type),
+            power_offs=self.pool.stats["offs"])
 
 
 def main() -> None:

@@ -29,6 +29,27 @@ def test_policy_semantics():
                               fast_dear)
 
 
+def test_placement_key_orders_candidates_by_policy():
+    """The fleet placement scorer (ADR-004): NONE ranks by $, EXEC_TIME by
+    provisioning latency, ENERGY by energy rate, BOTH by the energy-delay
+    product — each a total order (ties broken by the other quantities)."""
+    from repro.core import placement_key
+    cheap_slow = Prediction(time_s=32.0, energy_j=600.0, cost_usd=0.01)
+    dear_fast = Prediction(time_s=0.3, energy_j=2350.0, cost_usd=0.10)
+    pk = placement_key
+    assert pk(Policy.NONE, cheap_slow) < pk(Policy.NONE, dear_fast)
+    assert pk(Policy.EXEC_TIME, dear_fast) < pk(Policy.EXEC_TIME, cheap_slow)
+    assert pk(Policy.ENERGY, cheap_slow) < pk(Policy.ENERGY, dear_fast)
+    # energy-delay: the horizon-inclusive delay keeps a *warm* power-hungry
+    # tier from degenerating to a free win (0 x anything) — a paused cheap
+    # tier still beats it for bulk
+    warm_dear = Prediction(time_s=0.0, energy_j=2350.0, cost_usd=0.10)
+    paused_cheap = Prediction(time_s=0.3, energy_j=600.0, cost_usd=0.01)
+    both = Policy.EXEC_TIME_AND_ENERGY
+    assert pk(both, paused_cheap) < pk(both, warm_dear)
+    assert pk(both, warm_dear) < pk(both, Prediction(0.3, 2350.0, 0.10))
+
+
 # --------------------------------------------------------------------------- #
 # energy models
 # --------------------------------------------------------------------------- #
@@ -140,6 +161,59 @@ def test_escalation_chain_reaches_most_powerful():
         chain.append(nxt)
     assert chain[-1] == "x8large"
     assert len(chain) == len(CLONE_TYPES)
+
+
+def test_escalate_type_top_tier_returns_none():
+    """ISSUE 5 satellite: the ladder ends explicitly — the top tier has no
+    successor and callers must degrade gracefully, not walk off the end."""
+    pool = ClonePool()
+    assert pool.escalate_type("x8large") is None
+
+
+def test_clone_type_rank_total_order():
+    """ISSUE 5 satellite: ``CloneType.rank`` totally orders all six paper
+    types — every rank distinct, and sorting by rank reproduces the
+    paper's escalation ladder exactly."""
+    ranks = {name: t.rank() for name, t in CLONE_TYPES.items()}
+    assert len(set(ranks.values())) == len(CLONE_TYPES)   # total order
+    ladder = sorted(CLONE_TYPES, key=lambda n: CLONE_TYPES[n].rank())
+    assert ladder == ["basic", "main", "large", "x2large", "x4large",
+                      "x8large"]
+    assert all(a < b for a, b in
+               zip([ranks[n] for n in ladder], [ranks[n] for n in ladder][1:]))
+
+
+def test_usd_pricing_and_kv_scale_follow_the_ladder():
+    """$-rates and KV capacity multipliers grow strictly with escalation
+    rank, so 'bigger tier' always means 'dearer and roomier'."""
+    from repro.core.clones import (KV_SCALE_BY_CLONE_TYPE, usd_per_second)
+    ladder = sorted(CLONE_TYPES, key=lambda n: CLONE_TYPES[n].rank())
+    usd = [usd_per_second(n) for n in ladder]
+    kv = [KV_SCALE_BY_CLONE_TYPE[n] for n in ladder]
+    assert all(a < b for a, b in zip(usd, usd[1:]))
+    assert all(a < b for a, b in zip(kv, kv[1:]))
+
+
+def test_clone_running_seconds_accrue_and_stop_on_pause():
+    """$-accounting (ADR-004): clone-seconds accrue while RUNNING (idle
+    included) and stop on pause/power-off; ``cost_usd`` bills them at the
+    per-type rate (primary's standing cost included)."""
+    from repro.core.clones import usd_per_second
+    t = [0.0]
+    pool = ClonePool(clock=lambda: t[0])
+    clones, _ = pool.acquire("large", n=1, exclude_primary=True)
+    t[0] = 10.0
+    pool.release(clones)
+    by_type = pool.clone_seconds_by_type()
+    assert by_type["large"] == pytest.approx(10.0)   # live interval
+    assert by_type["main"] == pytest.approx(10.0)    # always-on primary
+    pool.pause(clones[0])
+    t[0] = 25.0
+    by_type = pool.clone_seconds_by_type()
+    assert by_type["large"] == pytest.approx(10.0)   # stopped at pause
+    assert by_type["main"] == pytest.approx(25.0)
+    assert pool.cost_usd() == pytest.approx(
+        10.0 * usd_per_second("large") + 25.0 * usd_per_second("main"))
 
 
 # --------------------------------------------------------------------------- #

@@ -613,3 +613,232 @@ def test_handler_admission_control_sheds_load():
     assert report.rejected > 0
     assert report.accepted + report.rejected == 10
     assert len(report.completions) == report.accepted
+
+
+# --------------------------------------------------------------------------- #
+# heterogeneous fleet: placement engine, fleet autoscaler, escalation,
+# chips-aware energy, TTL power-off (ADR-004)
+# --------------------------------------------------------------------------- #
+def test_placement_engine_cost_vs_urgency():
+    """$-policy places bulk on the cheapest adequate tier; urgent demand
+    ranks by provisioning latency, so a warm premium clone beats a paused
+    cheap one beats a cold boot."""
+    import pytest as _pytest
+    from repro.core import ClonePool, Policy
+    from repro.core.clones import BOOT_SECONDS, CloneState, resume_time
+    from repro.core.scheduler import PlacementEngine
+    pool = ClonePool(clock=lambda: 0.0)
+    pool.provision("x2large", 1, state=CloneState.RUNNING)   # warm premium
+    pool.provision("basic", 1)                               # paused cheap
+    pe = PlacementEngine(pool, fleet=["basic", "main", "x2large"],
+                         policy=Policy.NONE)
+    assert pe.choose_type("basic") == "basic"                # cheapest $
+    assert pe.choose_type("basic", urgent=True) == "x2large"  # fastest
+    assert pe.choose_type("main") == "main"                  # floor holds
+    preds = {t: pe.provision_pred(t)
+             for t in ("basic", "main", "x2large")}
+    assert preds["x2large"].time_s == 0.0
+    assert preds["basic"].time_s == _pytest.approx(resume_time(1))
+    assert preds["main"].time_s == BOOT_SECONDS
+    assert preds["basic"].cost_usd < preds["main"].cost_usd \
+        < preds["x2large"].cost_usd
+    assert preds["basic"].energy_j < preds["x2large"].energy_j
+
+
+def test_placement_required_type_escalates_and_degrades_at_top():
+    """ISSUE 5 satellite: the KV floor walks ``ClonePool.escalate_type``
+    (skipping non-fleet tiers); at the ladder's top (escalate_type ->
+    None) the caller degrades gracefully to the biggest fleet tier —
+    never an exception."""
+    from repro.core import ClonePool
+    from repro.core.scheduler import PlacementEngine
+    pe = PlacementEngine(ClonePool(clock=lambda: 0.0),
+                         fleet=["basic", "main"])
+    real = {"basic": 3, "main": 7}
+    assert pe.required_type("basic", 2, real.__getitem__) == "basic"
+    assert pe.required_type("basic", 5, real.__getitem__) == "main"
+    assert pe.required_type("basic", 99, real.__getitem__) == "main"
+
+
+def test_fleet_autoscaler_provisions_per_type_under_budget():
+    """Demand buckets land on their placed tiers (resume cheap, boot the
+    escalated tier) and the global secondary budget caps the total."""
+    from repro.core import ClonePool, Policy
+    from repro.core.scheduler import FleetAutoscaler, PlacementEngine
+    pool = ClonePool(clock=lambda: 0.0)
+    pool.provision("basic", 2)                               # paused
+    pe = PlacementEngine(pool, fleet=["basic", "main", "large"],
+                         policy=Policy.NONE)
+    fa = FleetAutoscaler(pool, pe, base_type="basic", max_secondaries=4)
+    targets = fa.step(0.0, [("basic", False, 2), ("large", False, 1)], {})
+    assert targets["basic"] == 2 and targets["large"] == 1
+    assert len(pool.running_secondaries("basic")) == 2
+    assert len(pool.running_secondaries("large")) == 1
+    assert pool.stats["resumes"] == 2 and pool.stats["boots"] == 1
+    # budget: 10 more bulk units cannot exceed the global cap
+    targets = fa.step(1.0, [("basic", False, 10)], {"large": 1})
+    assert targets["basic"] + targets.get("large", 0) <= 4
+    assert len(pool.running_secondaries()) <= 4
+
+
+def test_fleet_autoscaler_tier_shift_pauses_stale_type_first():
+    """Regression: when demand shifts tiers under a tight cap, the
+    surplus pause must hit the *stale* (zero-target) tier — an untyped
+    sweep paused the freshly booted target tier and livelocked the
+    shift until the idle TTL reaped the stale clones."""
+    from repro.core import ClonePool, Policy
+    from repro.core.scheduler import FleetAutoscaler, PlacementEngine
+    pool = ClonePool(clock=lambda: 0.0)
+    pe = PlacementEngine(pool, fleet=["basic", "large"], policy=Policy.NONE)
+    fa = FleetAutoscaler(pool, pe, base_type="basic", max_secondaries=2)
+    fa.step(0.0, [("basic", False, 2)], {})
+    assert len(pool.running_secondaries("basic")) == 2
+    fa.step(1.0, [("large", False, 2)], {})
+    assert len(pool.running_secondaries("large")) == 2   # target met NOW
+    assert len(pool.running_secondaries("basic")) == 0   # stale tier paused
+
+
+def test_min_secondaries_floor_survives_other_tier_demand():
+    """Regression: the base tier's warm floor is reserved before any
+    other tier's demand can consume the budget."""
+    from repro.core import ClonePool, Policy
+    from repro.core.scheduler import FleetAutoscaler, PlacementEngine
+    pool = ClonePool(clock=lambda: 0.0)
+    pe = PlacementEngine(pool, fleet=["basic", "large"], policy=Policy.NONE)
+    fa = FleetAutoscaler(pool, pe, base_type="basic", min_secondaries=2,
+                         max_secondaries=4)
+    targets = fa.step(0.0, [("large", False, 4)], {})
+    assert targets["basic"] == 2          # floor reserved first
+    assert targets["large"] == 2          # remaining budget only
+
+
+def test_free_primary_beats_booting_secondary():
+    """Regression: a ready clone (the always-on primary) must never lose
+    to one still paying its 32 s boot — readiness dominates tier rank in
+    clone selection."""
+    h = _make_handler(clone_type="basic", max_batch=1, max_secondaries=1,
+                      use_primary=True, provision_paused=False,
+                      executor=lambda c, f, a: (f(*a), 0.2))
+    rep = h.run([ServeRequest(0, np.zeros(4, np.int32), 3, arrival_t=0.0)])
+    assert rep.fleet_mix == {"main": 1}   # served on the idle primary
+    assert rep.completions[0].ttft_s < 1.0   # not the secondary's boot
+
+
+def test_fleet_handler_escalates_kv_hungry_requests():
+    """A request whose prompt+window KV demand exceeds the base tier's
+    block pool is escalated up the ladder and completes there; bulk stays
+    on the cheap tier; the report carries the fleet economics."""
+    h = _make_handler(clone_type="basic", fleet=["basic", "main"],
+                      max_batch=2, max_secondaries=3, use_primary=False,
+                      block_size=8, num_blocks=4,
+                      executor=lambda c, f, a: (f(*a), 0.2))
+    # rid 0 needs ceil(min(4+40, 64)/8) = 6 blocks > basic's 3 real
+    reqs = [ServeRequest(0, np.zeros(4, np.int32), 40, arrival_t=0.0),
+            ServeRequest(1, np.zeros(4, np.int32), 4, arrival_t=0.0),
+            ServeRequest(2, np.zeros(4, np.int32), 4, arrival_t=0.0)]
+    rep = h.run(reqs)
+    by = {c.rid: c for c in rep.completions}
+    assert sorted(by) == [0, 1, 2]
+    assert len(by[0].tokens) == 40
+    assert rep.escalations == 1
+    assert rep.fleet_mix.get("main", 0) >= 1      # the escalated request
+    assert rep.fleet_mix.get("basic", 0) >= 1     # the bulk
+    assert rep.cost_usd > 0.0
+    assert set(rep.energy_j_by_type) == {"basic", "main"}
+    assert rep.clone_seconds_by_type["main"] > 0.0
+
+
+def test_urgent_priority_lands_on_warm_premium_tier():
+    """A high-priority request is placed latency-first: it takes the warm
+    premium clone while the bulk behind it waits for the cheap tier's
+    resume — and never the other way around."""
+    from repro.core.clones import CloneState
+    h = _make_handler(clone_type="basic", fleet=["basic", "x2large"],
+                      max_batch=1, max_secondaries=2, use_primary=False,
+                      executor=lambda c, f, a: (f(*a), 0.2))
+    h.pool.provision("x2large", 1, state=CloneState.RUNNING)  # hot spare
+    reqs = [ServeRequest(0, np.zeros(4, np.int32), 3, arrival_t=0.0,
+                         priority=2, tenant="premium"),
+            ServeRequest(1, np.zeros(4, np.int32), 3, arrival_t=0.0,
+                         tenant="bulk")]
+    rep = h.run(reqs)
+    by = {c.rid: c for c in rep.completions}
+    assert by[0].venue == "x2large"               # urgent took the spare
+    assert by[1].venue == "basic"                 # bulk stayed cheap
+    assert rep.fleet_mix == {"x2large": 1, "basic": 1}
+    assert by[0].ttft_s < by[1].ttft_s            # no resume on its path
+    # demand was tracked per tenant/priority class
+    assert ("basic", True, "premium") in h.demand_by_class
+    assert ("basic", False, "bulk") in h.demand_by_class
+
+
+def test_primary_serves_homogeneous_non_main_clone_type():
+    """Regression: a homogeneous handler pinned at a non-'main' type with
+    no secondaries must still serve on the always-on primary (whose type
+    is 'main') — the placement band must not band the standing primary
+    out, in either direction of the rank ladder."""
+    for ctype in ("basic", "x8large"):
+        h = _make_handler(clone_type=ctype, max_batch=2, max_secondaries=0,
+                          use_primary=True, provision_paused=False)
+        rep = h.run([ServeRequest(0, np.zeros(4, np.int32), 3,
+                                  arrival_t=0.0)])
+        assert [c.tokens for c in rep.completions] == [[0, 1, 2]]
+        assert rep.fleet_mix == {"main": 1}       # served on the primary
+
+
+def test_contiguous_fleet_respects_placement_band():
+    """The contiguous cohort path must seed with the request its clone
+    was banded for — a band-blocked FIFO head must neither ride a
+    premium clone nor displace the urgent request behind it."""
+    from repro.core.clones import CloneState
+    h = _make_handler(clone_type="basic", fleet=["basic", "x2large"],
+                      kv="contiguous", max_batch=2, max_secondaries=1,
+                      use_primary=False,
+                      executor=lambda c, f, a: (f(*a), 0.2))
+    h.pool.provision("x2large", 1, state=CloneState.RUNNING)
+    reqs = [ServeRequest(0, np.zeros(4, np.int32), 3, arrival_t=0.0,
+                         tenant="bulk"),
+            ServeRequest(1, np.zeros(4, np.int32), 3, arrival_t=0.0,
+                         priority=2, tenant="premium")]
+    rep = h.run(reqs)
+    by = {c.rid: c for c in rep.completions}
+    assert by[1].venue == "x2large"               # urgent took the spare
+    assert by[0].venue == "basic"                 # bulk waited for cheap
+
+
+def test_busy_energy_is_chips_aware_x8large_vs_basic():
+    """ISSUE 5 satellite: energy bills through TpuEnergyModel with the
+    venue's chip count — an x8large step costs exactly
+    (8*chip + host)/(1*chip + host) times a basic step, not the same."""
+    from repro.core.energy import TpuCoeffs
+
+    def run(ctype):
+        h = _make_handler(clone_type=ctype, max_batch=1, max_secondaries=1,
+                          use_primary=False,
+                          executor=lambda c, f, a: (f(*a), 0.5))
+        rep = h.run([ServeRequest(0, np.zeros(4, np.int32), 4,
+                                  arrival_t=0.0)])
+        return rep
+
+    rep8, rep1 = run("x8large"), run("basic")
+    c = TpuCoeffs()
+    expect = (8 * c.chip_peak_w + c.host_w) / (1 * c.chip_peak_w + c.host_w)
+    assert rep8.busy_energy_j / rep1.busy_energy_j == pytest.approx(expect)
+    assert set(rep8.energy_j_by_type) == {"x8large"}
+    assert rep8.energy_j_by_type["x8large"] == pytest.approx(
+        rep8.busy_energy_j)
+
+
+def test_drain_powers_off_long_idle_secondaries():
+    """ISSUE 5 satellite: the drain loop steps the idle TTLs, so paused
+    secondaries idle past OFF_IDLE_TTL actually power off and the report
+    surfaces ``power_offs``."""
+    from repro.core.clones import OFF_IDLE_TTL, PAUSE_IDLE_TTL, CloneState
+    h = _make_handler(max_batch=1, max_secondaries=2, use_primary=False)
+    reqs = [ServeRequest(i, np.zeros(4, np.int32), 2, arrival_t=0.0)
+            for i in range(4)]
+    rep = h.run(reqs, drain_idle_s=PAUSE_IDLE_TTL + OFF_IDLE_TTL + 40.0)
+    assert rep.power_offs >= 1
+    assert rep.power_offs == rep.pool_stats["offs"]
+    assert all(c.state is CloneState.POWERED_OFF
+               for c in h.pool.clones if not c.is_primary)

@@ -326,6 +326,47 @@ def test_preemption_restores_token_identical():
     assert len(t) == 3 and t == r               # identical under pressure
 
 
+def test_fleet_escalation_token_identical_to_pinned_large():
+    """Acceptance (ISSUE 5): a KV-hungry request escalated live to a
+    bigger clone type completes token-identical to the same trace pinned
+    at the large tier, while the bulk stays on the cheap tier —
+    heterogeneity is an economics decision, never a correctness one.
+    Deterministic: VirtualClock + fixed 0.2 s venue cost."""
+    from repro.core.scheduler import ServeRequest
+    from repro.launch.serve import ClientHandler, LMBackend
+
+    cfg = reduced_config(get_config("smollm-360m"))
+    backend = LMBackend(cfg, capacity=32)
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(0, cfg.vocab_size, 6, dtype=np.int32)
+               for _ in range(3)]
+    ex = lambda c, f, a: (f(*a), 0.2)           # noqa: E731
+
+    def trace():
+        # rid 0 needs ceil(min(6+24, 32)/4) = 8 blocks > basic's 3 real
+        return [ServeRequest(0, prompts[0], 24, arrival_t=0.0),
+                ServeRequest(1, prompts[1], 4, arrival_t=0.0),
+                ServeRequest(2, prompts[2], 4, arrival_t=0.1)]
+
+    h = ClientHandler(backend, clone_type="basic", fleet=["basic", "large"],
+                      max_batch=2, prompt_pad=6, block_size=4, num_blocks=4,
+                      use_primary=False, max_secondaries=3, executor=ex)
+    rep = h.run(trace())
+    pinned = ClientHandler(backend, clone_type="large", max_batch=2,
+                           prompt_pad=6, block_size=4,
+                           use_primary=False, max_secondaries=3, executor=ex)
+    rep_l = pinned.run(trace())
+    got = {c.rid: c.tokens for c in rep.completions}
+    ref = {c.rid: c.tokens for c in rep_l.completions}
+    assert len(got) == len(ref) == 3
+    assert rep.escalations >= 1
+    assert got == ref                           # escalation is transparent
+    assert rep.fleet_mix.get("large", 0) >= 1   # the escalated request
+    assert rep.fleet_mix.get("basic", 0) >= 1   # the bulk
+    # the pinned-large fleet bills every clone-second at the dear tier
+    assert set(rep_l.clone_seconds_by_type) == {"large", "main"}
+
+
 def test_serving_engine_stats_aggregate_decode_steps():
     """offloaded/escalations must reflect every step in the batch, not just
     the prefill result."""

@@ -26,6 +26,18 @@ ISSUE 4 acceptance (``BENCH_serving.json``):
 - the tight-pool sweep completes **every** request via preemption — zero
   RuntimeErrors, ``preemptions > 0`` — where worst-case-reservation
   admission would refuse the concurrency.
+
+ISSUE 5 acceptance (``BENCH_serving.json`` ``fleet_sweep``):
+
+- pinned tiers form a cost-vs-latency Pareto ladder: walking up the
+  ranks, p50 latency never rises while $-cost strictly rises, and every
+  pinned run serves every request;
+- the mixed run uses **>= 3 distinct clone types**, escalates >= 1
+  KV-hungry request up the ladder with output token-identical to the
+  pinned-``large`` run, completes everything with zero RuntimeErrors
+  (escalation absorbs KV pressure — no ``PoolExhausted`` crash), bills
+  per-type clone-seconds / chips-aware energy / $-cost for every type it
+  used, and powers off >= 1 long-idle secondary during the drain.
 """
 from __future__ import annotations
 
@@ -102,12 +114,86 @@ _SERVING_ROW_KEYS = ("rate_rps", "kv", "decode_window", "served", "shed",
                      "p50_latency_s", "p99_latency_s", "p50_ttft_s",
                      "tokens_per_s", "kv_util", "kv_reserved_peak_tokens",
                      "prefix_hit_rate", "preemptions", "restored_tokens",
-                     "peak_secondaries", "busy_energy_j")
+                     "peak_secondaries", "busy_energy_j", "cost_usd",
+                     "escalations", "power_offs")
 _PREFIX_KEYS = ("prefix_cache", "prefix_len", "prefix_share", "served",
                 "offered", "p50_ttft_s", "p99_latency_s",
                 "prefix_hit_rate", "preemptions", "restored_tokens")
 _TIGHT_KEYS = ("num_blocks", "offered", "served", "runtime_errors",
                "preemptions", "restored_tokens", "prefix_hit_rate")
+_FLEET_PIN_KEYS = ("clone_type", "usd_per_hour", "tier_step_s", "served",
+                   "offered", "runtime_errors", "p50_latency_s",
+                   "p99_latency_s", "p50_ttft_s", "busy_energy_j",
+                   "cost_usd", "clone_seconds_by_type")
+_FLEET_MIX_KEYS = ("fleet", "base_type", "premium_type", "num_blocks",
+                   "served", "offered", "runtime_errors", "escalations",
+                   "fleet_mix", "distinct_types", "p50_latency_s",
+                   "p99_latency_s", "cost_usd", "energy_j_by_type",
+                   "clone_seconds_by_type", "power_offs",
+                   "tokens_identical_to_pinned_large")
+
+
+def _check_fleet(doc: dict) -> list:
+    """``fleet_sweep`` violations (ISSUE 5 acceptance)."""
+    bad = []
+    sweep = doc.get("fleet_sweep")
+    if not sweep:                   # optional: --fleet '' disables
+        return bad
+    for k in ("pinned", "mixed"):
+        if k not in sweep:
+            return [f"fleet_sweep: missing {k!r}"]
+    if len(sweep["pinned"]) < 2:
+        bad.append("fleet_sweep.pinned needs >= 2 tiers for a Pareto")
+    for i, row in enumerate(sweep["pinned"]):
+        missing = [k for k in _FLEET_PIN_KEYS if k not in row]
+        if missing:
+            return bad + [f"fleet_sweep.pinned[{i}]: missing {missing}"]
+        if row["runtime_errors"] != 0 or row["served"] != row["offered"]:
+            bad.append(f"fleet_sweep.pinned[{i}] ({row['clone_type']}): "
+                       f"served {row['served']}/{row['offered']} with "
+                       f"{row['runtime_errors']} errors")
+        if row["cost_usd"] <= 0:
+            bad.append(f"fleet_sweep.pinned[{i}]: no $-cost billed")
+    for a, b in zip(sweep["pinned"], sweep["pinned"][1:]):
+        if b["p50_latency_s"] > a["p50_latency_s"] + 1e-9:
+            bad.append(f"fleet Pareto broken: {b['clone_type']} is dearer "
+                       f"AND slower than {a['clone_type']} "
+                       f"({b['p50_latency_s']} > {a['p50_latency_s']})")
+        if b["cost_usd"] <= a["cost_usd"]:
+            bad.append(f"fleet Pareto degenerate: {b['clone_type']} not "
+                       f"dearer than {a['clone_type']} — tier pricing "
+                       "is not differentiating the ladder")
+    mixed = sweep["mixed"]
+    missing = [k for k in _FLEET_MIX_KEYS if k not in mixed]
+    if missing:
+        return bad + [f"fleet_sweep.mixed: missing {missing}"]
+    if mixed["runtime_errors"] != 0:
+        bad.append("mixed fleet run raised — escalated long-context "
+                   "requests must complete without PoolExhausted/"
+                   "RuntimeError")
+    if mixed["served"] != mixed["offered"]:
+        bad.append(f"mixed fleet run lost requests: {mixed['served']}/"
+                   f"{mixed['offered']}")
+    used = [t for t, n in mixed["fleet_mix"].items() if n > 0]
+    if len(used) < 3 or mixed["distinct_types"] != len(used):
+        bad.append(f"placement engine must serve across >= 3 distinct "
+                   f"clone types, used {sorted(used)}")
+    if mixed["escalations"] < 1:
+        bad.append("no live type escalation in the mixed fleet run")
+    if not mixed["tokens_identical_to_pinned_large"]:
+        bad.append("escalated serving is not token-identical to the "
+                   "pinned-large run")
+    for t in used:
+        if mixed["energy_j_by_type"].get(t, 0) <= 0:
+            bad.append(f"no chips-aware energy billed for used type {t!r}")
+        if mixed["clone_seconds_by_type"].get(t, 0) <= 0:
+            bad.append(f"no clone-seconds billed for used type {t!r}")
+    if mixed["cost_usd"] <= 0:
+        bad.append("mixed fleet run billed no $-cost")
+    if mixed["power_offs"] < 1:
+        bad.append("OFF_IDLE_TTL never powered off an idle secondary "
+                   "during the mixed run's drain")
+    return bad
 
 
 def check_serving(path: Path) -> list:
@@ -172,6 +258,7 @@ def check_serving(path: Path) -> list:
         if tight["preemptions"] <= 0:
             bad.append("tight pool never preempted — the sweep is not "
                        "actually exercising pool pressure")
+    bad += _check_fleet(doc)
     return bad
 
 
