@@ -17,6 +17,15 @@ of through the virtual-clock serving simulation:
    verifies token-identical output (the equivalence the serving layer
    relies on).
 
+3. **Prefill loop** — chunked ``model.prefill_chunks`` (ADR-005: C suffix
+   tokens per sequential step through the paged chunk kernel) vs the
+   stepwise ``model.prefill_loop`` scan (one token per step) on the same
+   staged prefix.  Reports sequential steps per suffix token, prefill
+   tokens/s, and verifies token identity: bitwise-equal first tokens *and*
+   a bitwise-equal decode-window continuation on both result pools (the
+   continuation reads every block the prefill wrote, so it catches any
+   KV-scatter divergence, not just logit agreement at the last position).
+
     PYTHONPATH=src python benchmarks/decode_micro.py
     PYTHONPATH=src python benchmarks/decode_micro.py --smoke   # CI: tiny
 
@@ -212,6 +221,88 @@ def decode_loop_bench(arch: str, *, slots: int, window: int, prompt_len: int,
     return row
 
 
+# --------------------------------------------------------------------------- #
+# 3. prefill loop: C tokens per chunk step vs one token per stepwise step
+# --------------------------------------------------------------------------- #
+def prefill_bench(arch: str, *, rows: int, prefix_len: int, suffix_len: int,
+                  chunk: int, reps: int):
+    """Chunked vs stepwise paged suffix prefill over a staged prefix.
+
+    Both paths consume the identical suffix batch on the identical pool
+    (prefix already resident), so the A/B isolates the scan granularity:
+    ``suffix_len`` sequential steps (stepwise) vs ``ceil(suffix_len/chunk)``
+    (chunked).  ``dispatches_per_token`` counts those sequential kernel
+    steps per emitted suffix token — the hardware-independent claim; wall
+    time on this CPU container measures interpret-mode dispatch overhead.
+    """
+    assert prefix_len % BLOCK_SIZE == 0, "staged prefix must be block-aligned"
+    cfg = reduced_config(get_config(arch))
+    backend = LMBackend(cfg, capacity=64)
+    rng = np.random.default_rng(1)
+    total = prefix_len + suffix_len
+    cont = 4                                  # decode continuation window
+
+    # stage the prefix: claim slots for the full prompt, prefill the prefix
+    # blocks only — the suffix blocks are allocated but still unwritten
+    kv = KVBlockPool(backend, rows, BLOCK_SIZE)
+    prefill_into = backend.paged_fns(kv.bs)[0]
+    joins = [kv.alloc_slot(total, 1) for _ in range(rows)]
+    slot_ids = np.asarray([s for s, _, _, _ in joins], np.int32)
+    nb_pre = prefix_len // BLOCK_SIZE
+    pre = rng.integers(0, cfg.vocab_size, (rows, prefix_len), dtype=np.int32)
+    blks = jnp.stack([jnp.asarray(b_[:nb_pre]) for _, b_, _, _ in joins])
+    _, kv.pool = prefill_into(backend.params, jnp.asarray(pre), kv.pool,
+                              blks, jnp.asarray(slot_ids))
+    kv.active[slot_ids] = True
+    kv.grow_for_window(np.full(kv.max_slots, cont, np.int32))
+    tables = jnp.asarray(kv.tables[slot_ids])
+
+    sfx = rng.integers(0, cfg.vocab_size, (rows, suffix_len), dtype=np.int32)
+    args = (jnp.asarray(sfx), jnp.full((rows,), prefix_len, jnp.int32),
+            jnp.full((rows,), suffix_len, jnp.int32), tables)
+    step_fn = backend.prefill_window_fn(kv.bs, suffix_len)
+    chunk_fn = backend.prefill_window_fn(kv.bs, suffix_len, chunk=chunk)
+
+    f_step, pool_step = step_fn(backend.params, kv.pool, *args)
+    f_chunk, pool_chunk = chunk_fn(backend.params, kv.pool, *args)
+
+    # decode continuation on both result pools: reads back the suffix KV
+    decode_window = backend.paged_fns(kv.bs, window=cont)[2]
+    pos_after = jnp.full((rows,), total, jnp.int32)
+    steps = jnp.full((rows,), cont, jnp.int32)
+    out_s, _ = decode_window(backend.params, pool_step, f_step[:, None],
+                             pos_after, steps, tables)
+    out_c, _ = decode_window(backend.params, pool_chunk, f_chunk[:, None],
+                             pos_after, steps, tables)
+    tokens_match = bool((np.asarray(f_step) == np.asarray(f_chunk)).all()
+                        and (np.asarray(out_s) == np.asarray(out_c)).all())
+
+    us_step = _time_call(lambda: step_fn(backend.params, kv.pool, *args),
+                         reps)
+    us_chunk = _time_call(lambda: chunk_fn(backend.params, kv.pool, *args),
+                          reps)
+    tokens_total = rows * suffix_len
+    n_chunks = -(-suffix_len // chunk)
+    row = {
+        "rows": rows,
+        "prefix_len": prefix_len,
+        "suffix_len": suffix_len,
+        "chunk": chunk,
+        "tokens_total": tokens_total,
+        "dispatches_per_token": n_chunks / tokens_total,
+        "dispatches_per_token_stepwise": suffix_len / tokens_total,
+        "tokens_per_s": tokens_total * 1e6 / us_chunk,
+        "tokens_per_s_stepwise": tokens_total * 1e6 / us_step,
+        "tokens_match": tokens_match,
+    }
+    print(f"  prefill C={chunk} sfx={suffix_len} rows={rows}: "
+          f"{n_chunks} vs {suffix_len} seq steps "
+          f"({suffix_len / n_chunks:.1f}x), "
+          f"{row['tokens_per_s']:.0f} vs {row['tokens_per_s_stepwise']:.0f} "
+          f"tok/s, match={tokens_match}")
+    return row
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -229,11 +320,13 @@ def main() -> int:
         cases = [(2, 1, 8), (4, 2, 8)]
         b, ctx_blocks, d = 2, 2, 16
         loop_cfgs = [(2, 4)]
+        pf_cfgs = [(2, 8, 16, 8)]              # (rows, prefix, suffix, chunk)
     else:
         cases = [(2, 2, 8), (4, 2, 8), (4, 1, 8), (8, 2, 8),
                  (8, 2, 16), (4, 1, 16)]
         b, ctx_blocks, d = 4, 4, 32
         loop_cfgs = [(4, 4), (4, 8)]
+        pf_cfgs = [(2, 8, 16, 8), (4, 8, 24, 8), (4, 16, 16, 4)]
 
     print("kernel sweep (fused vs per-head paged attention):")
     sweep = kernel_sweep(cases, b=b, ctx_blocks=ctx_blocks, d=d, reps=reps,
@@ -248,6 +341,13 @@ def main() -> int:
     slots, window = loop_cfgs[-1]
     loops.append(decode_loop_bench(args.arch, slots=slots, window=window,
                                    prompt_len=6, reps=reps, donate=True))
+    print("prefill loop (chunked vs stepwise suffix prefill):")
+    prefills = []
+    for rows, prefix_len, suffix_len, chunk in pf_cfgs:
+        prefills.append(prefill_bench(args.arch, rows=rows,
+                                      prefix_len=prefix_len,
+                                      suffix_len=suffix_len, chunk=chunk,
+                                      reps=reps))
 
     doc = {
         "benchmark": "decode_micro",
@@ -256,13 +356,14 @@ def main() -> int:
         "smoke": args.smoke,
         "kernel_sweep": sweep,
         "decode_loop": loops,
+        "prefill_loop": prefills,
     }
     if args.json:
         path = os.path.join(os.path.dirname(__file__), "..", args.json)
         with open(path, "w") as f:
             json.dump(doc, f, indent=2)
         print(f"wrote {os.path.normpath(path)}")
-    ok = all(r["tokens_match"] for r in loops)
+    ok = all(r["tokens_match"] for r in loops + prefills)
     return 0 if ok else 1
 
 

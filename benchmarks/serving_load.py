@@ -23,6 +23,17 @@ Two dedicated sweeps measure the ADR-003 refactor directly:
   via preemption + prefix-accelerated restore (zero RuntimeError), where
   worst-case-reservation admission would refuse or serialize.
 
+A fourth sweep measures the ADR-005 unified mixed prefill/decode dispatch:
+
+- **mixed-dispatch sweep** (``--mixed-joins``): a decode cohort joined
+  mid-stream by shared-prefix arrivals, served three ways on one trace —
+  no joins at all (baseline), serial stepwise prefill-then-decode, and
+  chunked prefill fused into the decode window.  The executor charges
+  venue time per *sequential scan step* (``seq_steps``), so the serial
+  path's prefill stall is visible in the decode cohort's p99 TPOT while
+  the fused path must hold TPOT at the no-join baseline,
+  token-identically.
+
 A third dedicated sweep measures the ADR-004 heterogeneous fleet:
 
 - **fleet sweep** (``--fleet``, ``--clone-type``): cost-vs-latency Pareto
@@ -139,6 +150,13 @@ def run_sweep(arch: str = "smollm-360m", rates=(0.5, 4.0, 32.0),
     return lines, rows
 
 
+def _p99_tpot(completions) -> float:
+    """p99 time-per-output-token: decode-phase latency per token interval."""
+    tpots = [(c.latency_s - c.ttft_s) / max(len(c.tokens) - 1, 1)
+             for c in completions]
+    return float(np.percentile(tpots, 99)) if tpots else 0.0
+
+
 def run_prefix_sweep(backend, *, rate: float = 8.0, n_requests: int = 24,
                      prompt_len: int = 24, prefix_len: int = 16,
                      prefix_share: float = 0.75, new_tokens: int = 6,
@@ -181,6 +199,7 @@ def run_prefix_sweep(backend, *, rate: float = 8.0, n_requests: int = 24,
             "p50_ttft_s": report.p50_ttft_s,
             "p50_latency_s": report.p50_latency_s,
             "p99_latency_s": report.p99_latency_s,
+            "p99_tpot_s": _p99_tpot(report.completions),
             "tokens_per_s": report.tokens_per_s,
             "prefix_hit_rate": report.prefix_hit_rate,
             "preemptions": report.preemptions,
@@ -236,6 +255,85 @@ def run_tight_pool_sweep(backend, *, n_requests: int = 12,
         "p99_latency_s": report.p99_latency_s if report else 0.0,
         "kv_util": report.kv_util if report else 0.0,
     }
+
+
+def mixed_trace(vocab: int, *, n_cohort: int, n_join: int, prefix_len: int,
+                tail_len: int, new_tokens: int, join_at, seed: int = 0):
+    """Decode cohort at t=0 plus mid-stream shared-prefix joiners.
+
+    Every prompt shares the block-aligned system prefix; each tail's
+    first token is the request id, so a join diverges exactly at the
+    block boundary — full prefix reuse, no copy-on-write block, which
+    keeps the three serving modes' per-step cost accounting comparable.
+    """
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, size=prefix_len, dtype=np.int32)
+    reqs = []
+    for i in range(n_cohort + n_join):
+        tail = rng.integers(0, vocab, size=tail_len, dtype=np.int32)
+        tail[0] = i % vocab
+        arrival = 0.0 if i < n_cohort else join_at[i - n_cohort]
+        reqs.append(ServeRequest(i, np.concatenate([prefix, tail]),
+                                 new_tokens, arrival_t=arrival))
+    return reqs
+
+
+def run_mixed_dispatch_sweep(backend, *, n_cohort: int = 4, n_join: int = 2,
+                             prefix_len: int = 16, tail_len: int = 8,
+                             new_tokens: int = 16, window: int = 4,
+                             chunk: int = 8, max_batch: int = 8,
+                             block_size: int = 4, seed: int = 0):
+    """Mid-stream joins vs the decode cohort's p99 TPOT (ADR-005).
+
+    One trace, three runs: **nojoin** (cohort only, fused config — the
+    TPOT floor), **serial** (joins served by a stepwise suffix-prefill
+    dispatch before the decode window), **mixed** (suffix chunks fused
+    into the decode window's scan).  The executor bills venue time per
+    *sequential scan step* of the submitted function (``seq_steps``, set
+    by the engine per dispatch), so a serial join round costs
+    ``suffix_steps + window`` while a fused round costs
+    ``max(window, ceil(suffix/chunk))`` — with ``suffix <= chunk *
+    window`` the fused round is exactly a plain decode window, which is
+    the no-stall claim ``tools/check_bench.py`` hard-asserts."""
+    def executor(clone, fn, args):
+        return fn(*args), 0.05 * getattr(fn, "seq_steps", 1)
+
+    join_at = [0.45 + 0.3 * i for i in range(n_join)]
+
+    def run(with_joins: bool, prefill_chunk: int, mixed: bool):
+        handler = ClientHandler(backend, max_batch=max_batch,
+                                prompt_pad=prefix_len + tail_len,
+                                block_size=block_size,
+                                max_secondaries=0,
+                                decode_window=window,
+                                prefill_chunk=prefill_chunk,
+                                mixed_dispatch=mixed,
+                                executor=executor)
+        reqs = mixed_trace(backend.cfg.vocab_size, n_cohort=n_cohort,
+                           n_join=n_join if with_joins else 0,
+                           prefix_len=prefix_len, tail_len=tail_len,
+                           new_tokens=new_tokens, join_at=join_at,
+                           seed=seed)
+        report = handler.run(reqs, drain_idle_s=PAUSE_IDLE_TTL + 5.0)
+        cohort = [c for c in report.completions if c.rid < n_cohort]
+        row = {
+            "prefill_chunk": prefill_chunk,
+            "mixed_dispatch": mixed,
+            "decode_window": window,
+            "offered": len(reqs),
+            "served": len(report.completions),
+            "p50_ttft_s": report.p50_ttft_s,
+            "p99_tpot_s": _p99_tpot(cohort),
+            "prefix_hit_rate": report.prefix_hit_rate,
+        }
+        return row, {c.rid: list(map(int, c.tokens))
+                     for c in report.completions}
+
+    nojoin, _ = run(False, chunk, True)
+    serial, toks_serial = run(True, 0, False)
+    mixed, toks_mixed = run(True, chunk, True)
+    mixed["tokens_identical_to_serial"] = toks_mixed == toks_serial
+    return {"nojoin": nojoin, "serial": serial, "mixed": mixed}
 
 
 FLEET_DEFAULT = ("basic", "large", "x2large")
@@ -392,6 +490,9 @@ def main() -> None:
     ap.add_argument("--tight-blocks", type=int, default=8,
                     help="pool size for the tight-pool preemption sweep "
                          "(0 disables the sweep)")
+    ap.add_argument("--mixed-joins", type=int, default=2,
+                    help="mid-stream joiners for the mixed-dispatch sweep "
+                         "(0 disables the sweep)")
     ap.add_argument("--clone-type", default="main",
                     choices=sorted(CLONE_TYPES),
                     help="clone type the rate sweep's handler is pinned at")
@@ -495,6 +596,35 @@ def main() -> None:
         assert tight_row["preemptions"] > 0, \
             "tight-pool sweep never preempted: pool not actually tight"
 
+    # --- ADR-005 sweep: mixed prefill/decode dispatch under joins -------
+    mixed_payload = None
+    if args.mixed_joins > 0:
+        # roomy capacity: the sweep decodes past the rate-sweep backend's
+        # 32-token ceiling (24-token prompts + 16 new tokens)
+        mixed_payload = run_mixed_dispatch_sweep(
+            LMBackend(cfg, capacity=64), n_join=args.mixed_joins,
+            seed=args.seed)
+        nj, se, mx = (mixed_payload[k] for k in ("nojoin", "serial",
+                                                 "mixed"))
+        print(f"\nmixed dispatch ({args.mixed_joins} mid-stream joins): "
+              f"cohort p99 TPOT {mx['p99_tpot_s']:.3f}s fused vs "
+              f"{se['p99_tpot_s']:.3f}s serial "
+              f"(no-join baseline {nj['p99_tpot_s']:.3f}s), served "
+              f"{mx['served']}/{mx['offered']}, tokens identical to "
+              f"serial: {mx['tokens_identical_to_serial']}")
+        for name, row in mixed_payload.items():
+            assert row["served"] == row["offered"], \
+                f"mixed-dispatch sweep ({name}) shed or lost requests"
+        # epsilon: a join re-uploads the grown block table, whose modeled
+        # transfer time (~1e-5 s) the no-join baseline never pays; the
+        # serial stall it must discriminate is one scan step (0.05 s)
+        assert mx["p99_tpot_s"] <= nj["p99_tpot_s"] + 1e-4, \
+            "mid-stream joins stalled the decode cohort under mixed dispatch"
+        assert se["p99_tpot_s"] > nj["p99_tpot_s"] + 1e-4, \
+            "serial prefill-then-decode shows no stall: sweep not binding"
+        assert mx["tokens_identical_to_serial"], \
+            "mixed dispatch diverged from the serial path"
+
     # --- ADR-004 sweep: heterogeneous fleet placement + escalation ------
     fleet = FLEET_DEFAULT if args.fleet is None else tuple(args.fleet)
     fleet_payload = None
@@ -547,6 +677,7 @@ def main() -> None:
             "prefix_sweep": prefix_rows,
             "tight_pool": tight_row,
             "fleet_sweep": fleet_payload,
+            "mixed_dispatch": mixed_payload,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

@@ -135,6 +135,132 @@ def _paged_decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref,
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _paged_chunk_kernel(tbl_ref, p0_ref, nl_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, scale: float,
+                        softcap: Optional[float], bs: int, g: int, c: int,
+                        nblk: int):
+    """One (slot, head-group, kv-block) step of chunked-prefill attention.
+
+    The chunked-prefill sibling of :func:`_paged_decode_kernel`: instead of
+    one query token per slot, each grid step owns a whole C-token chunk of
+    the slot's uncached suffix — all ``g = Hq/Hkv`` query heads of the GQA
+    group for all C chunk positions flattened into one (C*g, d) query tile,
+    so each KV block is still staged HBM->VMEM exactly once per group and
+    the score matmul is a real (C*g, d) x (d, bs) MXU tile.
+
+    Query row ``r`` is chunk position ``r // g`` at absolute position
+    ``p0 + r // g``; causal masking admits key position ``k_pos`` when
+    ``k_pos <= p0 + r // g``, which covers both the previously resident
+    prefix blocks and intra-chunk causality in one predicate.  Rows past
+    the chunk's live length (``r // g >= nl``) are forced to zero in the
+    finalize step, matching the ref oracle's post-softmax re-mask.  Blocks
+    entirely beyond the chunk's reach are predicated off with ``pl.when``;
+    they are exact no-ops for live rows because block j=0 always computes
+    and column 0 is always unmasked (m is finite before any skipped block).
+    """
+    del tbl_ref                                   # consumed by the index maps
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    p0 = p0_ref[b]
+    nl = nl_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    row = jax.lax.iota(jnp.int32, c * g)
+    q_chunk = row // g                            # chunk position per q row
+
+    @pl.when((nl > 0) & (j * bs < p0 + nl))       # block reachable by chunk
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (c*g, d)
+        k = k_ref[0, :, 0].astype(jnp.float32)               # (bs, d)
+        v = v_ref[0, :, 0].astype(jnp.float32)               # (bs, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = j * bs + jax.lax.iota(jnp.int32, bs)
+        ok = (q_chunk < nl)[:, None] & \
+            (k_pos[None, :] <= (p0 + q_chunk)[:, None])
+        s = jnp.where(ok, s, _NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nblk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        live = (q_chunk < nl).astype(jnp.float32)
+        o_ref[0, 0] = ((acc_ref[...] / l[:, None])
+                       * live[:, None]).astype(o_ref.dtype)
+
+
+def paged_prefill_bhsd(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                       block_tables: jax.Array, pos0: jax.Array,
+                       n_live: jax.Array, *,
+                       softcap: Optional[float] = None,
+                       interpret: bool = False) -> jax.Array:
+    """Chunked-prefill paged attention over a block-table KV pool.
+
+    q: (B, Hq, C, D) — one C-token suffix chunk per slot (the chunk's KV
+    must already be scattered into the pool);
+    k_pool, v_pool: (N, bs, Hkv, D) — the shared physical block pool;
+    block_tables: (B, M) int32 — per-slot physical block ids, logical order;
+    pos0: (B,) int32 — absolute position of each chunk's first token;
+    n_live: (B,) int32 — live tokens in the chunk (0..C; 0 = dead row).
+    Returns (B, Hq, C, D); rows at chunk positions >= n_live are exact 0.
+
+    Always the GQA-fused grid (B, Hkv, M): q regrouped so one grid step owns
+    a whole group's (C*g, d) tile — the chunked generalization of the C=1
+    flash-decoding grid, sharing its scalar-prefetch block-table gather.
+    """
+    b, hq, c, d = q.shape
+    _, bs, hkv, _ = k_pool.shape
+    m = block_tables.shape[1]
+    g = hq // hkv
+    # (B, Hq, C, D) -> (B, Hkv, C*g, D): row r = chunk pos r // g, head r % g
+    qg = q.reshape(b, hkv, g, c, d).swapaxes(2, 3).reshape(b, hkv, c * g, d)
+
+    def kv_map(b_, h, j, tbl, p0, nl):
+        return (tbl[b_, j], 0, h, 0)
+
+    kern = functools.partial(_paged_chunk_kernel, scale=d ** -0.5,
+                             softcap=softcap, bs=bs, g=g, c=c, nblk=m)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hkv, m),
+        in_specs=[
+            pl.BlockSpec((1, 1, c * g, d), lambda b_, h, j, tbl, p0, nl:
+                         (b_, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d), kv_map),
+            pl.BlockSpec((1, bs, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, c * g, d), lambda b_, h, j, tbl, p0, nl:
+                               (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((c * g,), jnp.float32),
+            pltpu.VMEM((c * g,), jnp.float32),
+            pltpu.VMEM((c * g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, c * g, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, pos0, n_live, qg, k_pool, v_pool)
+    return out.reshape(b, hkv, c, g, d).swapaxes(2, 3).reshape(b, hq, c, d)
+
+
 def paged_kv_fetches(b: int, hq: int, hkv: int, m: int, *,
                      fused: bool = True) -> int:
     """KV blocks staged HBM->VMEM per decode step, per pool tensor.

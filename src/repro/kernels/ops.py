@@ -81,6 +81,33 @@ def paged_attention(q, k_pool, v_pool, block_tables, context_lens, *,
     return jnp.swapaxes(out, 1, 2)
 
 
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_prefill(q, k_pool, v_pool, block_tables, pos0, n_live, *,
+                  softcap: Optional[float] = None,
+                  interpret: Optional[bool] = None):
+    """Chunked-prefill paged attention, model layout.
+
+    q: (B, C, Hq, D) — one C-token suffix chunk per slot (the chunk's KV
+    must already be scattered into the pool);
+    k_pool, v_pool: (N, bs, Hkv, D) physical KV block pool;
+    block_tables: (B, M) int32; pos0, n_live: (B,) int32 (chunk start
+    position / live token count per slot).  Returns (B, C, Hq, D) with
+    rows at chunk positions >= n_live exactly zero.
+
+    The chunked generalization of :func:`paged_attention`: one dispatch
+    covers C suffix tokens per slot instead of one, attending over all
+    previously resident blocks plus the chunk itself (causal), via the
+    same GQA-fused scalar-prefetch block-table gather.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    qt = jnp.swapaxes(q, 1, 2)                   # (B, Hq, C, D)
+    out = _fa.paged_prefill_bhsd(
+        qt, k_pool, v_pool, block_tables.astype(jnp.int32),
+        pos0.astype(jnp.int32), n_live.astype(jnp.int32),
+        softcap=softcap, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)
+
+
 @functools.partial(jax.jit, static_argnames=("axis",))
 def copy_blocks(leaf, src, dst, *, axis: int = 0):
     """Device-side KV block copy: ``leaf[dst] = leaf[src]`` along ``axis``.

@@ -75,6 +75,41 @@ def paged_attention_ref(q, k_pool, v_pool, block_tables, context_lens, *,
     return out.astype(q.dtype)
 
 
+def paged_prefill_ref(q, k_pool, v_pool, block_tables, pos0, n_live, *,
+                      softcap: Optional[float] = None):
+    """Chunked-prefill paged attention oracle (block-table gather).
+
+    q: (B, Hq, C, D) one C-token suffix chunk per slot; k_pool, v_pool:
+    (N, bs, Hkv, D) the shared KV block pool (the chunk's own KV already
+    scattered in); block_tables: (B, M) int32; pos0: (B,) int32 absolute
+    position of each chunk's first token; n_live: (B,) int32 live tokens
+    per chunk (0..C).  Returns (B, Hq, C, D).  Chunk position t attends to
+    key positions <= pos0 + t (resident prefix + intra-chunk causal); rows
+    with t >= n_live — including every row of an n_live==0 slot — are
+    re-masked to exact zero after the softmax, matching the kernel's
+    zeroed accumulator for dead rows.
+    """
+    b, hq, c, d = q.shape
+    _, bs, hkv, _ = k_pool.shape
+    g = hq // hkv
+    k = k_pool[block_tables].reshape(b, -1, hkv, d)      # (B, M*bs, Hkv, D)
+    v = v_pool[block_tables].reshape(b, -1, hkv, d)
+    kk = jnp.repeat(jnp.swapaxes(k, 1, 2), g, axis=1)    # (B, Hq, M*bs, D)
+    vv = jnp.repeat(jnp.swapaxes(v, 1, 2), g, axis=1)
+    scores = jnp.einsum("bhcd,bhkd->bhck", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * (d ** -0.5)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    q_pos = pos0[:, None] + jnp.arange(c)[None, :]               # (B, C)
+    k_pos = jnp.arange(k.shape[1])                               # (M*bs,)
+    ok = (jnp.arange(c)[None, :] < n_live[:, None])[:, :, None] \
+        & (k_pos[None, None, :] <= q_pos[:, :, None])            # (B, C, K)
+    scores = jnp.where(ok[:, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1) * ok[:, None]
+    out = jnp.einsum("bhck,bhkd->bhcd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def rglru_scan_ref(a, b, h0):
     """Sequential linear recurrence. a, b: (B,S,R); h0: (B,R) fp32."""
     def step(h, ab):

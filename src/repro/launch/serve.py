@@ -87,6 +87,18 @@ from repro.launch import steps as S
 from repro.models import model
 
 
+def pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n (n >= 1): the dispatch bucket size.
+
+    Every variable-size batched dispatch (join prefill rows, CoW pairs,
+    suffix rows and steps, prefill chunk steps) pads to one of these so
+    each jitted graph only ever compiles O(log) shape variants.
+    """
+    if n < 1:
+        raise ValueError(f"bucket size needs n >= 1: {n}")
+    return 1 << (n - 1).bit_length()
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -134,8 +146,14 @@ class LMBackend:
         self._batch_axis, self._cap_axis = model.cache_axes(cfg)
         self._paged_fns: Dict[tuple, tuple] = {}      # (bs, donate)
         self._paged_win_fns: Dict[tuple, object] = {}  # (bs, window, donate)
-        self._paged_sfx_fns: Dict[tuple, object] = {}  # (bs, T, donate)
+        self._paged_sfx_fns: Dict[tuple, object] = {}  # (bs, T, C, donate)
+        self._paged_mix_fns: Dict[tuple, object] = {}  # (bs, C, T, donate)
         self._copy_fns: Dict[bool, object] = {}        # donate -> fn
+
+    @property
+    def supports_chunked(self) -> bool:
+        """Whether chunked prefill / mixed dispatch cover this config."""
+        return model.supports_chunked_prefill(self.cfg)
 
     def cache_mem_bytes(self, batch: int) -> int:
         return pytree_bytes(model.abstract_cache(self.cfg, batch,
@@ -244,7 +262,7 @@ class LMBackend:
         return self._paged_fns[base_key] + (self._paged_win_fns[win_key],)
 
     def prefill_window_fn(self, block_size: int, num_steps: int,
-                          donate: bool = False):
+                          donate: bool = False, chunk: int = 0):
         """Jitted suffix prefill for prefix-hit / restored rows.
 
         ``fn(params, pool, toks (J,T), pos0 (J,), n_tok (J,), tables
@@ -253,23 +271,78 @@ class LMBackend:
         suffix tokens from position ``pos0[i]`` through its block table
         and returns the greedy token after its last suffix position.
         Rows with ``n_tok == 0`` (bucket padding) park in the trash
-        block.  Cached per (block_size, num_steps, donate), so suffix
-        batches bucketed to powers of two compile O(log) variants."""
-        key = (block_size, num_steps, donate)
+        block.
+
+        ``chunk > 0`` switches to the chunked-prefill path
+        (:func:`model.prefill_chunks`, ADR-005): the scan advances
+        ``chunk`` tokens per step through the paged chunk kernel, so the
+        same ``num_steps``-token suffix costs ⌈num_steps/chunk⌉
+        sequential steps — token-identical to the stepwise scan.  Cached
+        per (block_size, num_steps, chunk, donate), so suffix batches
+        bucketed to powers of two compile O(log) variants."""
+        key = (block_size, num_steps, chunk, donate)
         fn = self._paged_sfx_fns.get(key)
         if fn is not None:
             return fn
         cfg, ctx, capacity = self.cfg, self.ctx, self.capacity
 
-        def prefill_window(params, pool, toks, pos0, n_tok, tables):
-            return model.prefill_loop(
-                cfg, params, pool, toks, pos0, n_tok, ctx,
-                block_tables=tables, block_size=block_size,
-                num_steps=num_steps, capacity=capacity)
+        if chunk > 0:
+            if not self.supports_chunked:
+                raise ValueError("chunked prefill requires all-attention "
+                                 "windowless layers (see "
+                                 "model.supports_chunked_prefill)")
+            n_chunks = -(-num_steps // chunk)
+
+            def prefill_window(params, pool, toks, pos0, n_tok, tables):
+                return model.prefill_chunks(
+                    cfg, params, pool, toks, pos0, n_tok, ctx,
+                    block_tables=tables, block_size=block_size,
+                    chunk=chunk, num_steps=n_chunks, capacity=capacity)
+        else:
+            def prefill_window(params, pool, toks, pos0, n_tok, tables):
+                return model.prefill_loop(
+                    cfg, params, pool, toks, pos0, n_tok, ctx,
+                    block_tables=tables, block_size=block_size,
+                    num_steps=num_steps, capacity=capacity)
 
         fn = jax.jit(prefill_window,
                      donate_argnums=(1,) if donate else ())
         self._paged_sfx_fns[key] = fn
+        return fn
+
+    def mixed_fn(self, block_size: int, chunk: int, num_steps: int,
+                 donate: bool = False):
+        """Jitted unified mixed prefill/decode engine step (ADR-005).
+
+        ``fn(params, pool, tok (S,1), pos (S,), steps_left (S,), tables
+        (S,M), stoks (J,T), spos (J,), sn (J,), stabs (J,M)) ->
+        (tokens (S, num_steps), first_tokens (J,), new_pool)`` — one
+        :func:`model.mixed_loop` scan fusing the decode cohort's window
+        with the joining rows' chunked suffix prefill, so a join or
+        restore never stalls decode behind a separate dispatch.
+        ``num_steps`` scan steps cover the longer tile (decode window vs
+        ⌈suffix/chunk⌉ chunk steps); the shorter tile runs dead past its
+        end.  Cached per (block_size, chunk, num_steps, donate)."""
+        key = (block_size, chunk, num_steps, donate)
+        fn = self._paged_mix_fns.get(key)
+        if fn is not None:
+            return fn
+        if not self.supports_chunked:
+            raise ValueError("mixed dispatch requires all-attention "
+                             "windowless layers (see "
+                             "model.supports_chunked_prefill)")
+        cfg, ctx, capacity = self.cfg, self.ctx, self.capacity
+
+        def mixed(params, pool, tok, pos, steps_left, tables,
+                  stoks, spos, sn, stabs):
+            return model.mixed_loop(
+                cfg, params, pool, tok, pos, steps_left,
+                stoks, spos, sn, ctx, block_tables=tables,
+                sfx_tables=stabs, block_size=block_size, chunk=chunk,
+                num_steps=num_steps, capacity=capacity)
+
+        fn = jax.jit(mixed, donate_argnums=(1,) if donate else ())
+        self._paged_mix_fns[key] = fn
         return fn
 
     def copy_fn(self, donate: bool = False):
@@ -807,12 +880,17 @@ class _SlotEngine:
     """
 
     def __init__(self, backend, clone, kv: KVBlockPool, window: int = 1,
-                 donate: bool = False):
+                 donate: bool = False, chunk: int = 0, mixed: bool = False):
         self.backend = backend
         self.clone = clone
         self.kv = kv
         self.window = window
         self.donate = donate
+        # chunked suffix prefill: C tokens per scan step (0 = stepwise);
+        # mixed: fold the suffix scan INTO the decode window's scan so a
+        # join/restore never stalls the decode cohort (ADR-005)
+        self.chunk = chunk
+        self.mixed = mixed
         # decode_slots (the per-token fn) is deliberately unused here: the
         # engine always dispatches windows (window=1 == one-step window);
         # benchmarks/decode_micro.py is the per-token fn's only caller
@@ -972,6 +1050,8 @@ class ClientHandler:
                  num_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
                  decode_window: int = 1, donate_kv: bool = False,
+                 prefill_chunk: Optional[int] = None,
+                 mixed_dispatch: Optional[bool] = None,
                  fleet: Optional[List[str]] = None,
                  placement_policy: Policy = Policy.EXEC_TIME_AND_ENERGY,
                  energy_model: Optional[TpuEnergyModel] = None,
@@ -992,6 +1072,28 @@ class ClientHandler:
             raise ValueError("donate_kv needs an executor that runs each "
                              "dispatch exactly once (the default venue "
                              "executor re-times cheap calls)")
+        # chunked prefill / mixed dispatch (ADR-005): default ON whenever
+        # the backend supports it (all-attention, windowless) and the KV
+        # mode is paged; backends without the capability flag (test stubs)
+        # keep the legacy stepwise path
+        chunk_ok = kv == "paged" and bool(getattr(backend,
+                                                  "supports_chunked", False))
+        if prefill_chunk is None:
+            prefill_chunk = 8 if chunk_ok else 0
+        elif prefill_chunk < 0:
+            raise ValueError(f"prefill_chunk must be >= 0: {prefill_chunk}")
+        elif prefill_chunk > 0 and not chunk_ok:
+            raise ValueError("prefill_chunk > 0 requires kv='paged' and a "
+                             "backend with chunked-prefill support "
+                             "(all-attention, windowless layers)")
+        if mixed_dispatch is None:
+            mixed_dispatch = prefill_chunk > 0
+        elif mixed_dispatch and prefill_chunk == 0:
+            raise ValueError("mixed_dispatch requires prefill_chunk > 0 "
+                             "(the fused step advances chunk tokens per "
+                             "scan step)")
+        self.prefill_chunk = prefill_chunk
+        self.mixed_dispatch = mixed_dispatch
         self.kv_mode = kv
         self.block_size = block_size
         self.num_blocks = num_blocks
@@ -1307,7 +1409,8 @@ class ClientHandler:
         else:
             kv.reset()
         return _SlotEngine(self.backend, clone, kv, self.decode_window,
-                           self.donate_kv)
+                           self.donate_kv, self.prefill_chunk,
+                           self.mixed_dispatch)
 
     def _admit(self, engine: _SlotEngine, req: ServeRequest) -> None:
         """Admit through the engine, folding the admission's prefix-cache
@@ -1450,7 +1553,7 @@ class ClientHandler:
             # scatter nowhere: slot id ``max_slots`` is out of range
             # (state-row update dropped) and block id 0 is the trash block.
             j = len(joins)
-            jpad = 1 << (j - 1).bit_length()
+            jpad = pow2_bucket(j)
             toks = jnp.concatenate(
                 [t for _, _, t, _ in joins]
                 + [jnp.zeros((jpad - j,) + joins[0][2].shape[1:],
@@ -1466,7 +1569,7 @@ class ClientHandler:
         cow_batch = None
         if cow:
             # CoW splits as one fused device copy; (0, 0) pads are no-ops
-            cpad = 1 << (len(cow) - 1).bit_length()
+            cpad = pow2_bucket(len(cow))
             src = jnp.asarray([s for _, s, _ in cow]
                               + [0] * (cpad - len(cow)), jnp.int32)
             dst = jnp.asarray([d for _, _, d in cow]
@@ -1474,14 +1577,17 @@ class ClientHandler:
             cow_batch = (self.backend.copy_fn(self.donate_kv), src, dst)
             nbytes += int(src.nbytes) * 2
         sfx_batch = None
+        mixed_batch = None
+        sfx_steps = 0
+        mix_steps = 0
         if sfx:
             # prefix-hit / restore rows: suffix-only prefill as ONE
             # teacher-forced scan, rows and steps padded to power-of-two
             # buckets (pad rows carry n_tok=0 -> trash block)
             j2 = len(sfx)
-            jpad2 = 1 << (j2 - 1).bit_length()
+            jpad2 = pow2_bucket(j2)
             t_max = max(len(s_) for _, _, s_, _, _ in sfx)
-            tpad = 1 << (t_max - 1).bit_length()
+            tpad = pow2_bucket(t_max)
             stoks = np.zeros((jpad2, tpad), np.int32)
             spos = np.zeros((jpad2,), np.int32)
             sn = np.zeros((jpad2,), np.int32)
@@ -1491,10 +1597,29 @@ class ClientHandler:
                 spos[i] = pos0
                 sn[i] = len(s_)
                 stabs[i] = kv.tables[slot]
-            sfx_batch = (self.backend.prefill_window_fn(
-                kv.bs, tpad, self.donate_kv),
-                jnp.asarray(stoks), jnp.asarray(spos), jnp.asarray(sn),
-                jnp.asarray(stabs))
+            chunk = engine.chunk
+            sfx_steps = -(-tpad // chunk) if chunk else tpad
+            if engine.mixed and do_decode:
+                # ADR-005 fused step: the suffix chunks ride INSIDE the
+                # decode window's scan — one sequential pass covers both
+                # tiles, so the join/restore adds max(0, chunks - window)
+                # scan steps instead of a whole serial prefill dispatch
+                mix_steps = max(engine.window, sfx_steps)
+                mixed_batch = (self.backend.mixed_fn(
+                    kv.bs, chunk, mix_steps, self.donate_kv),
+                    jnp.asarray(stoks), jnp.asarray(spos), jnp.asarray(sn),
+                    jnp.asarray(stabs))
+                sfx_steps = 0
+            elif chunk:
+                sfx_batch = (self.backend.prefill_window_fn(
+                    kv.bs, tpad, self.donate_kv, chunk=chunk),
+                    jnp.asarray(stoks), jnp.asarray(spos), jnp.asarray(sn),
+                    jnp.asarray(stabs))
+            else:
+                sfx_batch = (self.backend.prefill_window_fn(
+                    kv.bs, tpad, self.donate_kv),
+                    jnp.asarray(stoks), jnp.asarray(spos), jnp.asarray(sn),
+                    jnp.asarray(stabs))
             nbytes += int(stoks.nbytes)
 
         def step_fn(params, pool, tok, pos, steps_left, tables):
@@ -1506,15 +1631,31 @@ class ClientHandler:
                 copy_into, src, dst = cow_batch
                 pool = copy_into(pool, src, dst)
             firsts_sfx = None
-            if sfx_batch is not None:
-                pw, stoks, spos, sn, stabs = sfx_batch
-                firsts_sfx, pool = pw(params, pool, stoks, spos, sn, stabs)
             nxt = None
-            if do_decode:
-                nxt, pool = decode_window(params, pool, tok, pos,
-                                          steps_left, tables)
+            if mixed_batch is not None:
+                mw, stoks, spos, sn, stabs = mixed_batch
+                nxt, firsts_sfx, pool = mw(params, pool, tok, pos,
+                                           steps_left, tables,
+                                           stoks, spos, sn, stabs)
+            else:
+                if sfx_batch is not None:
+                    pw, stoks, spos, sn, stabs = sfx_batch
+                    firsts_sfx, pool = pw(params, pool, stoks, spos, sn,
+                                          stabs)
+                if do_decode:
+                    nxt, pool = decode_window(params, pool, tok, pos,
+                                              steps_left, tables)
             return firsts, firsts_sfx, nxt, pool
 
+        # sequential scan steps this dispatch executes — what a step-aware
+        # executor bills (benchmarks/serving_load.py's mixed sweep): the
+        # batched join prefill and the CoW copy are one parallel pass each;
+        # the suffix scan and decode window are sequential scans, fused
+        # into max(..) steps by the mixed path instead of added serially
+        step_fn.seq_steps = (
+            int(join_batch is not None) + int(cow_batch is not None)
+            + (mix_steps if mixed_batch is not None
+               else sfx_steps + (engine.window if do_decode else 0)))
         delay = (self.autoscaler.clone_ready_delay(engine.clone,
                                                    self.clock.now())
                  + self._net_s(nbytes))

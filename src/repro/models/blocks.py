@@ -101,7 +101,7 @@ def attn_apply(params: dict, x: jax.Array, cfg: ModelConfig, ctx: RunContext,
     seq_mode = False
     seq_shards = 1
     constrain_cb = None
-    if ctx.mesh is not None and mode != "decode":
+    if ctx.mesh is not None and mode not in ("decode", "chunk"):
         m = ctx.model_axis
         msz = ctx.model_size
         from repro.models.model import constrain
@@ -152,6 +152,46 @@ def attn_apply(params: dict, x: jax.Array, cfg: ModelConfig, ctx: RunContext,
             vg = cv[block_tables].reshape(bsz, -1, hkv_n, cv.shape[3])
             out = attention_xla(q, kg, vg, causal=True, window=None,
                                 softcap=cfg.logit_softcap, q_offset=pos)
+        new_cache = {"k": ck, "v": cv}
+    elif mode == "chunk":
+        # Chunked paged prefill (ADR-005): each batch row carries a C-token
+        # chunk of its uncached suffix.  ``pos`` is (pos0, n_live) — the
+        # chunk's starting cursor and its live token count (0..C; 0 = dead
+        # row).  The chunk's K/V is scattered into the slot's paged blocks
+        # through the block table, then attention runs over all previously
+        # resident blocks plus the chunk itself (causal).  Writes mirror the
+        # stepwise scan exactly: dead tokens write block 0 (trash), tokens
+        # clamped at capacity-1 collapse to one write holding the *last*
+        # live token's K/V (last-live-wins = the stepwise final state).
+        if cfg.window is not None:
+            raise NotImplementedError("chunked prefill requires full "
+                                      "attention (cfg.window=None)")
+        pos0, n_live = pos
+        bsz, csz = x.shape[0], x.shape[1]
+        cap = cache_capacity
+        cidx = jnp.arange(csz)
+        cpos = pos0[:, None] + cidx[None, :]                 # (B, C)
+        live = cidx[None, :] < n_live[:, None]
+        wpos = jnp.minimum(cpos, cap - 1)
+        writer = live & ((cpos < cap - 1)
+                         | (cidx[None, :] == n_live[:, None] - 1))
+        blk_col = jnp.minimum(wpos // block_size,
+                              block_tables.shape[1] - 1)
+        blk = jnp.where(writer,
+                        jnp.take_along_axis(block_tables, blk_col, axis=1), 0)
+        off = jnp.where(writer, wpos % block_size, 0)
+        ck = cache["k"].at[blk, off].set(k)
+        cv = cache["v"].at[blk, off].set(v)
+        if ctx.impl == "pallas":
+            from repro.kernels import ops as kops
+            out = kops.paged_prefill(q, ck, cv, block_tables, pos0, n_live,
+                                     softcap=cfg.logit_softcap)
+        else:
+            hkv_n = ck.shape[2]
+            kg = ck[block_tables].reshape(bsz, -1, hkv_n, ck.shape[3])
+            vg = cv[block_tables].reshape(bsz, -1, hkv_n, cv.shape[3])
+            out = attention_xla(q, kg, vg, causal=True, window=None,
+                                softcap=cfg.logit_softcap, q_offset=pos0)
         new_cache = {"k": ck, "v": cv}
     elif mode == "decode":
         capacity = cache["k"].shape[1]

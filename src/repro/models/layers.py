@@ -169,9 +169,10 @@ def attention_xla(q: jax.Array, k: jax.Array, v: jax.Array, *,
     qg = q.reshape(b, sq, hkv, g, d)
     if k_pos is None:
         k_pos = jnp.broadcast_to(jnp.arange(sk), (b, sk))
-    q_pos_all = q_offset + jnp.arange(sq)
-    q_pos_all = jnp.broadcast_to(q_pos_all, (b, sq)) if jnp.ndim(q_offset) == 0 \
-        else q_offset[:, None] + jnp.arange(sq)[None]
+    if jnp.ndim(q_offset) == 0:
+        q_pos_all = jnp.broadcast_to(q_offset + jnp.arange(sq), (b, sq))
+    else:
+        q_pos_all = q_offset[:, None] + jnp.arange(sq)[None]
 
     core = functools.partial(_attn_core, causal=causal, window=window,
                              prefix_len=prefix_len, softcap=softcap)

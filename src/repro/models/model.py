@@ -540,3 +540,170 @@ def prefill_loop(cfg: ModelConfig, params: Dict, cache: Dict,
           jnp.swapaxes(tokens.astype(jnp.int32), 0, 1))
     (cache, first), _ = jax.lax.scan(step, (cache, first0), xs)
     return first, cache
+
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Whether :func:`prefill_chunks` covers this architecture.
+
+    Chunked prefill needs every layer to be full (windowless) attention:
+    recurrent kinds (rglru/rwkv) carry sequential per-token state a chunk
+    cannot parallelize, and sliding windows are rejected by the paged pool
+    anyway.  Callers fall back to the stepwise :func:`prefill_loop` scan.
+    """
+    return cfg.window is None and \
+        all(k == "attn" for k in cfg.layer_kinds())
+
+
+def chunk_step(cfg: ModelConfig, params: Dict, cache: Dict,
+               tokens: jax.Array, pos0: jax.Array, n_live: jax.Array,
+               ctx: RunContext, *, block_tables: jax.Array,
+               block_size: int, capacity: int):
+    """One C-token chunk of suffix prefill per row, in ONE model pass.
+
+    The chunked sibling of :func:`decode_step`: tokens (B, C) int32 are a
+    chunk of each row's uncached suffix starting at cursor ``pos0[i]``, of
+    which the first ``n_live[i]`` (0..C) are real.  Every layer scatters
+    the chunk's K/V into the row's paged blocks through ``block_tables``
+    and attends over the resident prefix plus the chunk (causal) — see the
+    ``mode="chunk"`` branch of ``blocks.attn_apply``.
+
+    Returns (last_logits (B, V), new_cache): the logits after each row's
+    *last live* token (rows with ``n_live == 0`` yield garbage the caller
+    masks out).  Position embedding clamps to ``capacity - 1`` exactly like
+    the stepwise scan, so live-token computation is bitwise identical.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
+    c = x.shape[1]
+    pos0 = pos0.astype(jnp.int32)
+    n_live = n_live.astype(jnp.int32)
+    positions = jnp.minimum(pos0[:, None] + jnp.arange(c), capacity - 1)
+    rope = rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+    x, new_cache, _ = apply_stack(cfg, params, x, ctx, rope, cache, "chunk",
+                                  prefix_len=0, pos=(pos0, n_live),
+                                  cache_capacity=capacity,
+                                  block_tables=block_tables,
+                                  block_size=block_size)
+    idx = jnp.clip(n_live - 1, 0, c - 1)
+    x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)   # (B, 1, D)
+    logits = unembed(cfg, params, x_last, ctx)
+    return logits[:, 0], new_cache
+
+
+def prefill_chunks(cfg: ModelConfig, params: Dict, cache: Dict,
+                   tokens: jax.Array, pos0: jax.Array, n_tokens: jax.Array,
+                   ctx: RunContext, *, block_tables: jax.Array,
+                   block_size: int, chunk: int, num_steps: int,
+                   capacity: int):
+    """Chunked suffix prefill: :func:`prefill_loop` at C tokens per step.
+
+    Same contract as :func:`prefill_loop` — tokens (B, T) suffix rows,
+    per-row start cursors ``pos0`` and live lengths ``n_tokens`` — but the
+    scan advances ``chunk`` tokens per step via :func:`chunk_step`, so a
+    T-token suffix costs ⌈T/chunk⌉ sequential steps instead of T.  Token-
+    identical to the stepwise scan (greedy first token per row), including
+    the trash-block parking of dead rows and the ``capacity - 1`` clamp.
+
+    ``num_steps`` is the number of *chunk* steps (⌈T_pad/chunk⌉); tokens
+    are padded on device to ``num_steps * chunk`` columns.
+    """
+    tables = block_tables.astype(jnp.int32)
+    n_tokens = n_tokens.astype(jnp.int32)
+    pos0 = pos0.astype(jnp.int32)
+    toks = tokens.astype(jnp.int32)
+    pad = num_steps * chunk - toks.shape[1]
+    if pad > 0:
+        toks = jnp.pad(toks, ((0, 0), (0, pad)))
+    first0 = jnp.zeros((toks.shape[0],), jnp.int32)
+
+    def step(carry, t):
+        cache, first = carry
+        base = t * chunk
+        tok_c = jax.lax.dynamic_slice_in_dim(toks, base, chunk, axis=1)
+        n_live = jnp.clip(n_tokens - base, 0, chunk)
+        eff_tables = jnp.where((n_live > 0)[:, None], tables, 0)
+        logits, cache = chunk_step(cfg, params, cache, tok_c, pos0 + base,
+                                   n_live, ctx, block_tables=eff_tables,
+                                   block_size=block_size, capacity=capacity)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        done_here = (n_tokens > base) & (n_tokens <= base + chunk)
+        first = jnp.where(done_here, nxt, first)
+        return (cache, first), None
+
+    (cache, first), _ = jax.lax.scan(
+        step, (cache, first0), jnp.arange(num_steps, dtype=jnp.int32))
+    return first, cache
+
+
+def mixed_loop(cfg: ModelConfig, params: Dict, cache: Dict,
+               tokens: jax.Array, pos: jax.Array, steps_left: jax.Array,
+               sfx_tokens: jax.Array, sfx_pos0: jax.Array,
+               sfx_n: jax.Array, ctx: RunContext, *,
+               block_tables: jax.Array, sfx_tables: jax.Array,
+               block_size: int, chunk: int, num_steps: int, capacity: int):
+    """Unified mixed prefill/decode engine step: ONE scan, ONE dispatch.
+
+    Fuses a :func:`decode_loop` window over the decode cohort (tokens
+    (S, 1) / pos / steps_left / block_tables, exactly decode_loop's
+    contract) with :func:`prefill_chunks` over joining rows (sfx_tokens
+    (J, T) / sfx_pos0 / sfx_n / sfx_tables), so a mid-flight join or
+    preemption restore never stalls the decode cohort behind a separate
+    prefill dispatch (docs/architecture.md ADR-005).  Each scan step runs
+    the pending prefill chunk first, then the decode step — matching the
+    serial order (prefill_into -> suffix scan -> decode window) the split
+    path executes, over *disjoint* physical blocks: suffix rows write only
+    their own freshly-allocated blocks, so the decode tile's inputs are
+    bitwise identical to the split path's.
+
+    Prefill rows take no part in sampling (their ``firsts`` come from the
+    teacher-forced chunk logits); decode rows take no part in chunk writes.
+    ``num_steps`` covers the longer of the two tiles: a tile past its end
+    runs dead (trash-block writes, frozen tokens).
+
+    Returns (tokens_out (S, num_steps), firsts (J,), new_cache).
+    """
+    tok0 = tokens[:, 0].astype(jnp.int32)
+    tables = block_tables.astype(jnp.int32)
+    steps_left = steps_left.astype(jnp.int32)
+    stables = sfx_tables.astype(jnp.int32)
+    sfx_n = sfx_n.astype(jnp.int32)
+    sfx_pos0 = sfx_pos0.astype(jnp.int32)
+    stoks = sfx_tokens.astype(jnp.int32)
+    pad = num_steps * chunk - stoks.shape[1]
+    if pad > 0:
+        stoks = jnp.pad(stoks, ((0, 0), (0, pad)))
+    first0 = jnp.zeros((stoks.shape[0],), jnp.int32)
+
+    def step(carry, t):
+        cache, tok, cur, first = carry
+        # --- prefill chunk tile (joining rows) ---
+        base = t * chunk
+        tok_c = jax.lax.dynamic_slice_in_dim(stoks, base, chunk, axis=1)
+        n_live = jnp.clip(sfx_n - base, 0, chunk)
+        eff_stables = jnp.where((n_live > 0)[:, None], stables, 0)
+        logits_c, cache = chunk_step(cfg, params, cache, tok_c,
+                                     sfx_pos0 + base, n_live, ctx,
+                                     block_tables=eff_stables,
+                                     block_size=block_size,
+                                     capacity=capacity)
+        nxt_c = jnp.argmax(logits_c, -1).astype(jnp.int32)
+        done_here = (sfx_n > base) & (sfx_n <= base + chunk)
+        first = jnp.where(done_here, nxt_c, first)
+        # --- decode tile (resident cohort) ---
+        live = t < steps_left
+        eff_tables = jnp.where(live[:, None], tables, 0)
+        eff_pos = jnp.where(live, jnp.minimum(cur, capacity - 1), 0)
+        logits, cache = decode_step(cfg, params, cache, tok[:, None],
+                                    eff_pos, ctx, block_tables=eff_tables,
+                                    block_size=block_size)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        nxt = jnp.where(live, nxt, tok)
+        cur = jnp.where(live, jnp.minimum(cur + 1, capacity), cur)
+        return (cache, nxt, cur, first), nxt
+
+    (cache, _, _, first), toks = jax.lax.scan(
+        step, (cache, tok0, pos.astype(jnp.int32), first0),
+        jnp.arange(num_steps, dtype=jnp.int32))
+    return jnp.swapaxes(toks, 0, 1), first, cache

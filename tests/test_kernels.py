@@ -180,6 +180,97 @@ def test_paged_attention_zero_context_slot_outputs_zero(fused):
 
 
 # --------------------------------------------------------------------------- #
+# paged prefill (chunked suffix attention through the block table, ADR-005)
+# --------------------------------------------------------------------------- #
+def _prefill_case(key, b, hq, hkv, d, bs, c, pos0, dtype=jnp.float32):
+    """Random pool + tables covering each slot's pos0 + c positions."""
+    spans = [-(-(p + c) // bs) for p in pos0]
+    max_blk = max(spans)
+    n_blocks = sum(spans) + 1                    # block 0 = trash
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = _rand(k1, (b, c, hq, d), dtype)
+    kp = _rand(k2, (n_blocks, bs, hkv, d), dtype)
+    vp = _rand(k3, (n_blocks, bs, hkv, d), dtype)
+    tables = np.zeros((b, max_blk), np.int32)
+    nxt = 1
+    for i, nb in enumerate(spans):
+        for j in range(nb):
+            tables[i, j] = nxt
+            nxt += 1
+    return q, kp, vp, jnp.asarray(tables), jnp.asarray(np.asarray(pos0,
+                                                                  np.int32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hq,hkv,d,bs,c,pos0,n_live,softcap", [
+    (2, 4, 2, 32, 8, 8, (0, 11), (8, 5), None),    # GQA 2:1, ragged chunks
+    (3, 6, 2, 16, 8, 4, (5, 0, 8), (4, 0, 1), None),  # dead slot + boundary
+    (1, 3, 3, 16, 4, 8, (3,), (6,), 20.0),         # softcap, MHA (group 1)
+    (2, 8, 2, 16, 4, 1, (7, 2), (1, 1), None),     # C=1 degenerates to decode
+])
+def test_paged_prefill_kernel_matches_ref(b, hq, hkv, d, bs, c, pos0, n_live,
+                                          softcap, dtype):
+    q, kp, vp, tables, p0 = _prefill_case(KEY, b, hq, hkv, d, bs, c, pos0,
+                                          dtype)
+    nl = jnp.asarray(np.asarray(n_live, np.int32))
+    got = ops.paged_prefill(q, kp, vp, tables, p0, nl, softcap=softcap,
+                            interpret=True)
+    want = ref.paged_prefill_ref(q.swapaxes(1, 2), kp, vp, tables, p0, nl,
+                                 softcap=softcap).swapaxes(1, 2)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+    # rows at chunk positions >= n_live (bucket padding) are exact zeros
+    got_np = np.asarray(got, np.float32)
+    for i, n in enumerate(n_live):
+        np.testing.assert_array_equal(got_np[i, n:], 0.0)
+
+
+def test_paged_prefill_matches_per_token_decode():
+    """Chunk row t must equal the decode kernel's output for the same query
+    at context length pos0+t+1 on the same pool — the equivalence that makes
+    chunked prefill token-identical to the stepwise scan."""
+    b, hq, hkv, d, bs, c = 2, 4, 2, 16, 4, 6
+    pos0, n_live = (3, 8), (6, 4)
+    q, kp, vp, tables, p0 = _prefill_case(KEY, b, hq, hkv, d, bs, c, pos0)
+    nl = jnp.asarray(np.asarray(n_live, np.int32))
+    chunk_out = np.asarray(ops.paged_prefill(q, kp, vp, tables, p0, nl,
+                                             interpret=True))
+    for t in range(c):
+        lens = jnp.asarray([(p + t + 1) if t < n else 0
+                            for p, n in zip(pos0, n_live)], jnp.int32)
+        tok = ops.paged_attention(q[:, t:t + 1], kp, vp, tables, lens,
+                                  interpret=True)
+        np.testing.assert_allclose(chunk_out[:, t], np.asarray(tok[:, 0]),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_paged_prefill_ignores_stale_pool_contents():
+    """Key positions past pos0 + t (not yet written at chunk position t in
+    the stepwise order) and the trash block must never leak into the
+    output, whatever garbage they hold."""
+    b, hq, hkv, d, bs, c = 2, 4, 2, 16, 4, 4
+    pos0, n_live = (2, 5), (4, 3)
+    q, kp, vp, tables, p0 = _prefill_case(KEY, b, hq, hkv, d, bs, c, pos0)
+    nl = jnp.asarray(np.asarray(n_live, np.int32))
+    out0 = ops.paged_prefill(q, kp, vp, tables, p0, nl, interpret=True)
+    pk, pv = kp.at[0].set(1e9), vp.at[0].set(-1e9)       # trash block
+    # poison every pool position past each slot's last live key
+    tb = np.asarray(tables)
+    for i, (p, n) in enumerate(zip(pos0, n_live)):
+        for pos in range(p + n, tb.shape[1] * bs):
+            blk, off = tb[i, pos // bs], pos % bs
+            pk = pk.at[blk, off].set(1e9)
+            pv = pv.at[blk, off].set(-1e9)
+    out1 = ops.paged_prefill(q, pk, pv, tables, p0, nl, interpret=True)
+    np.testing.assert_allclose(np.asarray(out0), np.asarray(out1))
+    ref0 = ref.paged_prefill_ref(q.swapaxes(1, 2), kp, vp, tables, p0, nl)
+    ref1 = ref.paged_prefill_ref(q.swapaxes(1, 2), pk, pv, tables, p0, nl)
+    np.testing.assert_allclose(np.asarray(ref0), np.asarray(ref1))
+
+
+# --------------------------------------------------------------------------- #
 # rglru scan
 # --------------------------------------------------------------------------- #
 @pytest.mark.parametrize("b,s,r,bs", [

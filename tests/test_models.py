@@ -301,6 +301,224 @@ def test_prefill_loop_matches_stepwise_prompt_feed():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def _assert_live_blocks_equal(pool_a, pool_b):
+    """Bitwise-compare every pool block except trash block 0.
+
+    Dead rows park their writes in the trash block, whose final contents
+    legitimately differ between execution orders — no reader ever gathers
+    it for a live position, so it is excluded from identity claims.
+    Cache leaves are (..., N, bs, Hkv, D) with leading layer-group dims,
+    so the block axis is ndim-4.
+    """
+    for a, b in zip(jax.tree.leaves(pool_a), jax.tree.leaves(pool_b)):
+        ax = a.ndim - 4
+        am = np.moveaxis(np.asarray(a), ax, 0)
+        bm = np.moveaxis(np.asarray(b), ax, 0)
+        np.testing.assert_array_equal(am[1:], bm[1:])
+
+
+def _staged_suffix_state(cfg, ctx, params, prefix_lens, n_tok, bs, cap,
+                         seed=11):
+    """Stage per-row prefixes into a paged pool; return the suffix batch.
+
+    Returns (pool, tables, sfx_toks (B, tmax), pos0, n_tok) — the state
+    right before a suffix prefill (prefix-hit join / restore): positions
+    0..prefix_lens[i]-1 hold KV, the suffix tokens are not yet written.
+    """
+    slots = len(prefix_lens)
+    max_blk = cap // bs
+    pool = model.init_paged_cache(cfg, slots, slots * max_blk + 1, bs)
+    rng = np.random.default_rng(seed)
+    tables = np.zeros((slots, max_blk), np.int32)
+    nxt = 1
+    for i in range(slots):
+        for j in range(max_blk):
+            tables[i, j] = nxt
+            nxt += 1
+    pre_max = max(max(prefix_lens), 1)
+    pre = np.zeros((slots, pre_max), np.int32)
+    for i, ln in enumerate(prefix_lens):
+        pre[i, :ln] = rng.integers(0, cfg.vocab_size, ln)
+    _, pool = model.prefill_loop(
+        cfg, params, pool, jnp.asarray(pre),
+        jnp.asarray(np.zeros(slots, np.int32)),
+        jnp.asarray(np.asarray(prefix_lens, np.int32)), ctx,
+        block_tables=jnp.asarray(tables), block_size=bs,
+        num_steps=pre_max, capacity=cap)
+    tmax = max(n_tok)
+    sfx = np.zeros((slots, tmax), np.int32)
+    for i, n in enumerate(n_tok):
+        sfx[i, :n] = rng.integers(0, cfg.vocab_size, n)
+    return pool, tables, sfx, np.asarray(prefix_lens, np.int32), \
+        np.asarray(n_tok, np.int32)
+
+
+@pytest.mark.parametrize("chunk", [1, 2, 4, 8])
+def test_prefill_chunks_matches_prefill_loop(chunk):
+    """The chunked suffix scan (⌈T/chunk⌉ steps) must return the same
+    first tokens as the stepwise scan (T steps) and leave every live pool
+    block bitwise identical — across ragged suffixes, nonzero start
+    cursors, and a dead (n_tok == 0) pad row."""
+    cfg = reduced_config(get_config("smollm-360m"))
+    ctx = RunContext()
+    params = model.init(cfg, KEY)
+    bs, cap = 4, 32
+    pool, tables, sfx, pos0, n_tok = _staged_suffix_state(
+        cfg, ctx, params, prefix_lens=[0, 8, 5], n_tok=[7, 9, 0],
+        bs=bs, cap=cap)
+    tmax = sfx.shape[1]
+    f_ref, pool_ref = model.prefill_loop(
+        cfg, params, jax.tree.map(jnp.copy, pool), jnp.asarray(sfx),
+        jnp.asarray(pos0), jnp.asarray(n_tok), ctx,
+        block_tables=jnp.asarray(tables), block_size=bs, num_steps=tmax,
+        capacity=cap)
+    f_chk, pool_chk = model.prefill_chunks(
+        cfg, params, jax.tree.map(jnp.copy, pool), jnp.asarray(sfx),
+        jnp.asarray(pos0), jnp.asarray(n_tok), ctx,
+        block_tables=jnp.asarray(tables), block_size=bs, chunk=chunk,
+        num_steps=-(-tmax // chunk), capacity=cap)
+    live = n_tok > 0
+    np.testing.assert_array_equal(np.asarray(f_chk)[live],
+                                  np.asarray(f_ref)[live])
+    _assert_live_blocks_equal(pool_ref, pool_chk)
+
+
+_CHUNK_FIX = []
+
+
+def _chunk_fixture():
+    """Shared tiny model for the chunked-prefill identity checks (built
+    once so seeded sweeps and the hypothesis property re-use params)."""
+    if not _CHUNK_FIX:
+        cfg = reduced_config(get_config("smollm-360m"))
+        _CHUNK_FIX.append((cfg, RunContext(), model.init(cfg, KEY)))
+    return _CHUNK_FIX[0]
+
+
+def _check_chunked_vs_stepwise(prefix_lens, n_tok, chunk, seed=11):
+    """Stage seeded prefixes, then assert prefill_chunks == prefill_loop
+    (first tokens on live rows + every live pool block bitwise)."""
+    cfg, ctx, params = _chunk_fixture()
+    bs, cap = 4, 32
+    n_tok = list(n_tok)
+    if max(n_tok) == 0:
+        n_tok[0] = 1                            # at least one live row
+    pool, tables, sfx, pos0, nt = _staged_suffix_state(
+        cfg, ctx, params, prefix_lens=list(prefix_lens), n_tok=n_tok,
+        bs=bs, cap=cap, seed=seed)
+    tmax = sfx.shape[1]
+    f_ref, pool_ref = model.prefill_loop(
+        cfg, params, jax.tree.map(jnp.copy, pool), jnp.asarray(sfx),
+        jnp.asarray(pos0), jnp.asarray(nt), ctx,
+        block_tables=jnp.asarray(tables), block_size=bs, num_steps=tmax,
+        capacity=cap)
+    f_chk, pool_chk = model.prefill_chunks(
+        cfg, params, jax.tree.map(jnp.copy, pool), jnp.asarray(sfx),
+        jnp.asarray(pos0), jnp.asarray(nt), ctx,
+        block_tables=jnp.asarray(tables), block_size=bs, chunk=chunk,
+        num_steps=-(-tmax // chunk), capacity=cap)
+    live = nt > 0
+    np.testing.assert_array_equal(np.asarray(f_chk)[live],
+                                  np.asarray(f_ref)[live])
+    _assert_live_blocks_equal(pool_ref, pool_chk)
+
+
+def test_prefill_chunks_random_lengths_token_identical():
+    """Seeded random prefix/suffix lengths x chunk sizes — the
+    deterministic twin of the hypothesis property in test_property.py
+    (which is skipped where hypothesis is not installed)."""
+    rng = np.random.default_rng(0)
+    for chunk in (1, 2, 3, 4, 8):
+        prefix_lens = rng.integers(0, 9, 3).tolist()
+        n_tok = rng.integers(0, 9, 3).tolist()
+        _check_chunked_vs_stepwise(prefix_lens, n_tok, chunk,
+                                   seed=int(rng.integers(1 << 30)))
+
+
+def test_prefill_chunks_zero_suffix_and_block_boundary():
+    """Regression (ISSUE 6 satellite): zero-length suffix rows must leave
+    their resident blocks untouched (writes park in the trash block), and
+    rows whose pos0 + n_tokens lands exactly on a block boundary — or past
+    capacity — must clamp bitwise like the stepwise scan."""
+    cfg = reduced_config(get_config("smollm-360m"))
+    ctx = RunContext()
+    params = model.init(cfg, KEY)
+    bs, cap = 4, 16
+    # row 0: 8+8 = 16 ends exactly at capacity (block boundary);
+    # row 1: 12+6 = 18 overruns capacity -> capacity-1 clamp;
+    # row 2: zero-length suffix on a staged 6-token prefix
+    pool, tables, sfx, pos0, n_tok = _staged_suffix_state(
+        cfg, ctx, params, prefix_lens=[8, 12, 6], n_tok=[8, 6, 0],
+        bs=bs, cap=cap)
+    tmax = sfx.shape[1]
+    f_ref, pool_ref = model.prefill_loop(
+        cfg, params, jax.tree.map(jnp.copy, pool), jnp.asarray(sfx),
+        jnp.asarray(pos0), jnp.asarray(n_tok), ctx,
+        block_tables=jnp.asarray(tables), block_size=bs, num_steps=tmax,
+        capacity=cap)
+    f_chk, pool_chk = model.prefill_chunks(
+        cfg, params, jax.tree.map(jnp.copy, pool), jnp.asarray(sfx),
+        jnp.asarray(pos0), jnp.asarray(n_tok), ctx,
+        block_tables=jnp.asarray(tables), block_size=bs, chunk=4,
+        num_steps=2, capacity=cap)
+    np.testing.assert_array_equal(np.asarray(f_chk)[:2],
+                                  np.asarray(f_ref)[:2])
+    _assert_live_blocks_equal(pool_ref, pool_chk)
+    # the dead row's resident blocks are bitwise untouched by both paths:
+    # its writes went to trash block 0, never to a live block
+    row2 = tables[2][tables[2] > 0]
+    for before, after in ((pool, pool_ref), (pool, pool_chk)):
+        for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+            ax = a.ndim - 4
+            np.testing.assert_array_equal(
+                np.take(np.asarray(a), row2, axis=ax),
+                np.take(np.asarray(b), row2, axis=ax))
+
+
+def test_mixed_loop_matches_split_prefill_then_decode():
+    """mixed_loop — ONE scan fusing the decode window with joining rows'
+    chunked suffix prefill — must emit bitwise what the split path emits
+    (prefill_chunks, then decode_loop), across ragged decode budgets
+    including an inactive slot, because the two tiles touch disjoint
+    blocks."""
+    cfg = reduced_config(get_config("smollm-360m"))
+    ctx = RunContext()
+    params = model.init(cfg, KEY)
+    bs, cap, W, C = 4, 16, 4, 2
+    cache, tables, tok, pos = _paged_decode_state(
+        cfg, ctx, params, prompt_lens=[3, 5, 1, 4, 5, 2], block_size=bs,
+        capacity=cap)
+    dec_tbl, sfx_tbl = tables[:4], tables[4:]
+    budgets = np.array([W, 2, 0, W], np.int32)
+    rng = np.random.default_rng(3)
+    sfx = rng.integers(0, cfg.vocab_size, (2, 6), dtype=np.int32)
+    spos = np.array([5, 2], np.int32)
+    sn = np.array([6, 3], np.int32)             # ragged; tmax 6 -> 3 chunks
+    n_chunks = -(-sfx.shape[1] // C)
+
+    f_ref, pool1 = model.prefill_chunks(
+        cfg, params, jax.tree.map(jnp.copy, cache), jnp.asarray(sfx),
+        jnp.asarray(spos), jnp.asarray(sn), ctx,
+        block_tables=jnp.asarray(sfx_tbl), block_size=bs, chunk=C,
+        num_steps=n_chunks, capacity=cap)
+    dec_ref, pool_ref = model.decode_loop(
+        cfg, params, pool1, jnp.asarray(tok[:4]), jnp.asarray(pos[:4]),
+        jnp.asarray(budgets), ctx, block_tables=jnp.asarray(dec_tbl),
+        block_size=bs, num_steps=W, capacity=cap)
+
+    dec_m, f_m, pool_m = model.mixed_loop(
+        cfg, params, jax.tree.map(jnp.copy, cache), jnp.asarray(tok[:4]),
+        jnp.asarray(pos[:4]), jnp.asarray(budgets), jnp.asarray(sfx),
+        jnp.asarray(spos), jnp.asarray(sn), ctx,
+        block_tables=jnp.asarray(dec_tbl),
+        sfx_tables=jnp.asarray(sfx_tbl), block_size=bs, chunk=C,
+        num_steps=max(W, n_chunks), capacity=cap)
+    np.testing.assert_array_equal(np.asarray(f_m), np.asarray(f_ref))
+    np.testing.assert_array_equal(np.asarray(dec_m)[:, :W],
+                                  np.asarray(dec_ref))
+    _assert_live_blocks_equal(pool_ref, pool_m)
+
+
 def test_paged_cache_rejects_non_full_attention():
     """Regression (ISSUE 4 satellite): paged KV requires full attention —
     both guard sites must keep raising a clean NotImplementedError for a

@@ -285,3 +285,37 @@ def test_energy_additivity(util10, bright16, secs):
     total = sum(m.energy_j(st_, float(secs)).values())
     parts = m.power_mw(st_)
     assert total == sum(v * 1e-3 * secs for v in parts.values())
+
+
+# ---------------------------------------------------------------------------
+# chunked paged prefill (ADR-005)
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 996),
+       prefix_lens=st.lists(st.integers(0, 8), min_size=3, max_size=3),
+       n_tok=st.lists(st.integers(0, 8), min_size=3, max_size=3),
+       chunk=st.sampled_from([1, 2, 3, 4, 8]))
+def test_chunked_prefill_token_identical_to_stepwise(seed, prefix_lens,
+                                                     n_tok, chunk):
+    """ADR-005 property: for any per-row prefix/suffix lengths and any
+    chunk size, the chunked suffix scan returns the stepwise scan's first
+    tokens and leaves every live pool block bitwise identical.  (The
+    deterministic twin lives in test_models.py so the invariant is still
+    exercised where hypothesis is not installed.)"""
+    import test_models as tm
+    tm._check_chunked_vs_stepwise(prefix_lens, n_tok, chunk, seed=seed)
+
+
+@settings(deadline=None, max_examples=5)
+@given(seed=st.integers(0, 2 ** 31 - 1), chunk=st.sampled_from([2, 4, 8]))
+def test_chunked_serving_preemption_invariant(seed, chunk):
+    """ADR-005 property: serving a seeded shared-prefix trace on a tight
+    pool — mid-stream preemptions, restores, prefix hits — is observably
+    invariant to prefill chunking: identical per-request tokens and
+    identical KVBlockPool refcount economics (preemption / restored /
+    prefix-hit counters)."""
+    import test_handler as th
+    assert th._run_tight_chunk_trace(seed, 0, False) == \
+        th._run_tight_chunk_trace(seed, chunk, True)

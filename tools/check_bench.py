@@ -38,6 +38,18 @@ ISSUE 5 acceptance (``BENCH_serving.json`` ``fleet_sweep``):
   (escalation absorbs KV pressure — no ``PoolExhausted`` crash), bills
   per-type clone-seconds / chips-aware energy / $-cost for every type it
   used, and powers off >= 1 long-idle secondary during the drain.
+
+ISSUE 6 acceptance (chunked prefill + mixed dispatch, ADR-005):
+
+- every ``prefill_loop`` row in ``BENCH_decode.json`` must show the
+  chunked path strictly reducing sequential steps per suffix token vs
+  the stepwise scan, a >= 4x reduction whenever ``chunk >= 8``, and
+  token-identical output (first tokens *and* the decode continuation);
+- the ``mixed_dispatch`` sweep in ``BENCH_serving.json`` must show the
+  unified mixed prefill/decode dispatch holding the decode cohort's p99
+  TPOT no worse than the no-join baseline under mid-stream joins, while
+  the serial prefill-then-decode path degrades it, with every request
+  served in all three runs.
 """
 from __future__ import annotations
 
@@ -49,12 +61,16 @@ REPO = Path(__file__).resolve().parent.parent
 DEFAULT = REPO / "BENCH_decode.json"
 DEFAULT_SERVING = REPO / "BENCH_serving.json"
 
-_TOP_KEYS = ("benchmark", "arch", "interpret", "kernel_sweep", "decode_loop")
+_TOP_KEYS = ("benchmark", "arch", "interpret", "kernel_sweep", "decode_loop",
+             "prefill_loop")
 _SWEEP_KEYS = ("b", "hq", "hkv", "group", "block_size", "num_blocks",
                "fused_us", "unfused_us", "kv_fetches_fused",
                "kv_fetches_unfused", "fetch_ratio")
 _LOOP_KEYS = ("window", "dispatches_per_token", "us_per_token",
               "us_per_token_stepwise", "pool_donated", "tokens_match")
+_PREFILL_KEYS = ("rows", "prefix_len", "suffix_len", "chunk", "tokens_total",
+                 "dispatches_per_token", "dispatches_per_token_stepwise",
+                 "tokens_per_s", "tokens_per_s_stepwise", "tokens_match")
 
 
 def check(path: Path) -> list:
@@ -107,6 +123,28 @@ def check(path: Path) -> list:
         if not row["tokens_match"]:
             bad.append(f"decode_loop[{i}]: window output is not token-"
                        "identical to the per-token path")
+    if not doc["prefill_loop"]:
+        bad.append("prefill_loop is empty")
+    for i, row in enumerate(doc["prefill_loop"]):
+        missing = [k for k in _PREFILL_KEYS if k not in row]
+        if missing:
+            bad.append(f"prefill_loop[{i}]: missing {missing}")
+            continue
+        if row["dispatches_per_token"] >= row["dispatches_per_token_stepwise"]:
+            bad.append(
+                f"prefill_loop[{i}]: chunked prefill does not reduce "
+                f"sequential steps/token ({row['dispatches_per_token']} vs "
+                f"stepwise {row['dispatches_per_token_stepwise']})")
+        if (row["chunk"] >= 8
+                and row["dispatches_per_token"] * 4 >
+                row["dispatches_per_token_stepwise"] + 1e-9):
+            bad.append(
+                f"prefill_loop[{i}]: chunk={row['chunk']} must cut "
+                f"sequential steps/token >= 4x, got "
+                f"{row['dispatches_per_token_stepwise'] / row['dispatches_per_token']:.2f}x")
+        if not row["tokens_match"]:
+            bad.append(f"prefill_loop[{i}]: chunked prefill is not token-"
+                       "identical to the stepwise scan")
     return bad
 
 
@@ -117,7 +155,7 @@ _SERVING_ROW_KEYS = ("rate_rps", "kv", "decode_window", "served", "shed",
                      "peak_secondaries", "busy_energy_j", "cost_usd",
                      "escalations", "power_offs")
 _PREFIX_KEYS = ("prefix_cache", "prefix_len", "prefix_share", "served",
-                "offered", "p50_ttft_s", "p99_latency_s",
+                "offered", "p50_ttft_s", "p99_latency_s", "p99_tpot_s",
                 "prefix_hit_rate", "preemptions", "restored_tokens")
 _TIGHT_KEYS = ("num_blocks", "offered", "served", "runtime_errors",
                "preemptions", "restored_tokens", "prefix_hit_rate")
@@ -196,6 +234,53 @@ def _check_fleet(doc: dict) -> list:
     return bad
 
 
+_MIXED_ROW_KEYS = ("prefill_chunk", "mixed_dispatch", "served", "offered",
+                   "p50_ttft_s", "p99_tpot_s")
+
+
+def _check_mixed(doc: dict) -> list:
+    """``mixed_dispatch`` violations (ISSUE 6 acceptance)."""
+    bad = []
+    sweep = doc.get("mixed_dispatch")
+    if not sweep:                   # optional: --mixed-requests 0 disables
+        return bad
+    for k in ("nojoin", "serial", "mixed"):
+        if k not in sweep:
+            return [f"mixed_dispatch: missing {k!r}"]
+        row = sweep[k]
+        missing = [m for m in _MIXED_ROW_KEYS if m not in row]
+        if missing:
+            return [f"mixed_dispatch.{k}: missing {missing}"]
+        if row["served"] != row["offered"]:
+            bad.append(f"mixed_dispatch.{k}: served {row['served']} != "
+                       f"offered {row['offered']}")
+    nojoin, serial, mixed = sweep["nojoin"], sweep["serial"], sweep["mixed"]
+    if not mixed["mixed_dispatch"] or mixed["prefill_chunk"] < 1:
+        bad.append("mixed_dispatch.mixed row did not run with chunked "
+                   "prefill + unified dispatch enabled")
+    if serial["mixed_dispatch"] or serial["prefill_chunk"] != 0:
+        bad.append("mixed_dispatch.serial row must be the stepwise "
+                   "prefill-then-decode path")
+    # epsilon 1e-4: joins pay a modeled block-table upload (~1e-5 s) the
+    # no-join baseline never does; the stall being ruled out is one
+    # sequential scan step (0.05 s) per join round
+    if mixed["p99_tpot_s"] > nojoin["p99_tpot_s"] + 1e-4:
+        bad.append(
+            f"mid-stream joins degraded decode p99 TPOT under mixed "
+            f"dispatch: {mixed['p99_tpot_s']} vs no-join baseline "
+            f"{nojoin['p99_tpot_s']} — one fused dispatch must not stall "
+            "the decode cohort")
+    if serial["p99_tpot_s"] <= nojoin["p99_tpot_s"] + 1e-4:
+        bad.append(
+            "serial prefill-then-decode shows no TPOT stall vs the "
+            "no-join baseline — the sweep is not actually exercising "
+            "join pressure")
+    if not mixed.get("tokens_identical_to_serial", False):
+        bad.append("mixed-dispatch serving is not token-identical to the "
+                   "serial prefill-then-decode run")
+    return bad
+
+
 def check_serving(path: Path) -> list:
     """BENCH_serving.json violations (empty == pass)."""
     bad = []
@@ -259,6 +344,7 @@ def check_serving(path: Path) -> list:
             bad.append("tight pool never preempted — the sweep is not "
                        "actually exercising pool pressure")
     bad += _check_fleet(doc)
+    bad += _check_mixed(doc)
     return bad
 
 
