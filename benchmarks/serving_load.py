@@ -465,6 +465,107 @@ def run_fleet_sweep(backend, *, fleet=FLEET_DEFAULT, seed: int = 0,
     return rows_pinned, mixed
 
 
+def run_fault_sweep(backend, *, n_requests: int = 12, prompt_len: int = 8,
+                    new_tokens: int = 10, max_batch: int = 4,
+                    block_size: int = 4, max_secondaries: int = 3,
+                    decode_window: int = 2, rate: float = 8.0,
+                    seed: int = 0):
+    """Fault-injected serving sweep (ADR-006).
+
+    One Poisson trace served under escalating fault pressure, all rows
+    with the same fixed-cost executor so they are deterministic and
+    host-independent: a **faultless baseline**; a mid-run **drain**
+    (graceful death — in-flight KV must *migrate* to a survivor); a
+    mid-run **kill** (fail-stop — in-flight requests must requeue on the
+    prefix-accelerated *restore* path); a **mixed** row firing one of
+    each (≈10% of the fleet-seconds faulted); and a **slow** straggler
+    served unhedged vs hedged.  Fault times are fractions of the
+    *baseline* makespan, so the schedule stresses the mid-decode window
+    regardless of trace parameters.  Every faulted row must serve every
+    request with tokens bit-identical to the faultless run — recovery is
+    a latency event, never a correctness event — which is exactly what
+    ``tools/check_bench.py`` hard-asserts in CI."""
+    from repro.core.faults import CloneFault
+
+    def executor(clone, fn, args):
+        return fn(*args), 0.05
+
+    def run(faults=None, hedge: float = 0.0):
+        handler = ClientHandler(backend, max_batch=max_batch,
+                                prompt_pad=prompt_len,
+                                block_size=block_size,
+                                max_secondaries=max_secondaries,
+                                decode_window=decode_window,
+                                executor=executor, faults=faults,
+                                hedge_factor=hedge, hedge_min_samples=4)
+        # one warm spare in EVERY row (identical fleets keep the rows
+        # comparable): hedging only races onto warm capacity — it never
+        # spins up a clone for a duplicate — and recovery migration needs
+        # a survivor with room
+        handler.pool.provision(handler.clone_type, 1,
+                               state=CloneState.RUNNING)
+        reqs = poisson_arrivals(rate, n_requests, seed=seed,
+                                prompt_len=prompt_len,
+                                vocab=backend.cfg.vocab_size,
+                                max_new_tokens=new_tokens,
+                                prefix_len=prompt_len // 2)
+        errors, rep = 0, None
+        try:
+            rep = handler.run(reqs, drain_idle_s=PAUSE_IDLE_TTL + 5.0)
+        except RuntimeError:
+            errors = 1
+        toks = ({c.rid: list(map(int, c.tokens)) for c in rep.completions}
+                if rep else {})
+        return rep, toks, errors
+
+    base_rep, base_toks, base_err = run()
+    span = base_rep.makespan_s if base_rep else 1.0
+
+    def row(name, faults=None, hedge: float = 0.0):
+        rep, toks, errors = run(faults=faults, hedge=hedge)
+        return {
+            "scenario": name,
+            "faults": [{"at": f.at, "kind": f.kind, "duration": f.duration,
+                        "factor": f.factor} for f in (faults or [])],
+            "offered": n_requests,
+            "served": len(rep.completions) if rep else 0,
+            "runtime_errors": errors,
+            "p50_latency_s": rep.p50_latency_s if rep else 0.0,
+            "p99_latency_s": rep.p99_latency_s if rep else 0.0,
+            "p50_ttft_s": rep.p50_ttft_s if rep else 0.0,
+            "faults_injected": rep.faults_injected if rep else 0,
+            "recoveries_migrated": rep.recoveries_migrated if rep else 0,
+            "recoveries_restored": rep.recoveries_restored if rep else 0,
+            "breaker_opens": rep.breaker_opens if rep else 0,
+            "hedges_fired": rep.hedges_fired if rep else 0,
+            "hedge_wins": rep.hedge_wins if rep else 0,
+            "preemptions": rep.preemptions if rep else 0,
+            "tokens_identical_to_faultless": bool(toks)
+            and toks == base_toks,
+        }
+
+    # fractions tuned to the trace's busy window: at 0.5x the makespan
+    # secondaries are mid-decode (a drain finds survivors with free
+    # slots to migrate into), and a 0.6x straggler hits when the warm
+    # spare is genuinely spare — hedging must not steal contended
+    # capacity from the queue
+    rows = [row("baseline")]
+    rows[0]["tokens_identical_to_faultless"] = not base_err
+    rows.append(row("drain", [CloneFault(at=0.5 * span, kind="drain",
+                                         duration=2.0)]))
+    rows.append(row("kill", [CloneFault(at=0.5 * span, kind="kill",
+                                        duration=2.0)]))
+    rows.append(row("mixed", [CloneFault(at=0.4 * span, kind="drain",
+                                         duration=2.0),
+                              CloneFault(at=0.6 * span, kind="kill",
+                                         duration=2.0)]))
+    slow = lambda: [CloneFault(at=0.6 * span, kind="slow",  # noqa: E731
+                               duration=0.4 * span, factor=40.0)]
+    rows.append(row("slow_unhedged", slow()))
+    rows.append(row("slow_hedged", slow(), hedge=2.0))
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -501,6 +602,9 @@ def main() -> None:
                     help="clone types for the heterogeneous fleet sweep "
                          f"(default: {' '.join(FLEET_DEFAULT)}; pass an "
                          "empty list to disable the sweep)")
+    ap.add_argument("--fault-requests", type=int, default=12,
+                    help="requests for the fault-injection sweep "
+                         "(0 disables the sweep)")
     ap.add_argument("--json", default="BENCH_serving.json",
                     help="machine-readable output path ('' to skip)")
     args = ap.parse_args()
@@ -660,6 +764,43 @@ def main() -> None:
         assert mixed["power_offs"] >= 1, \
             "OFF_IDLE_TTL never powered off an idle secondary in the drain"
 
+    # --- ADR-006 sweep: fault injection, recovery, hedging --------------
+    fault_rows = None
+    if args.fault_requests > 0:
+        fault_rows = run_fault_sweep(sweep_backend,
+                                     n_requests=args.fault_requests,
+                                     seed=args.seed)
+        by = {r["scenario"]: r for r in fault_rows}
+        print("\nfault sweep (fixed-cost executor, faults at fractions of "
+              "the faultless makespan):")
+        for r in fault_rows:
+            print(f"  {r['scenario']:>13s} served {r['served']:>2d}/"
+                  f"{r['offered']} p99={r['p99_latency_s']:.3f}s "
+                  f"inj={r['faults_injected']} "
+                  f"mig={r['recoveries_migrated']} "
+                  f"rest={r['recoveries_restored']} "
+                  f"breaker={r['breaker_opens']} "
+                  f"hedge={r['hedges_fired']}/{r['hedge_wins']} "
+                  f"identical={r['tokens_identical_to_faultless']}")
+        for r in fault_rows:
+            assert r["runtime_errors"] == 0, \
+                f"fault sweep ({r['scenario']}) raised: recovery must " \
+                "absorb clone death"
+            assert r["served"] == r["offered"], \
+                f"fault sweep ({r['scenario']}) lost requests"
+            assert r["tokens_identical_to_faultless"], \
+                f"fault sweep ({r['scenario']}) diverged from the " \
+                "faultless run"
+        assert by["drain"]["recoveries_migrated"] >= 1, \
+            "drain fault never migrated KV to a survivor"
+        assert by["kill"]["recoveries_restored"] >= 1, \
+            "kill fault never restored a request"
+        assert by["slow_hedged"]["hedge_wins"] >= 1, \
+            "hedged run never won a straggler race"
+        assert (by["slow_hedged"]["p99_latency_s"]
+                <= by["slow_unhedged"]["p99_latency_s"] + 1e-9), \
+            "hedging failed to bound the straggler's p99"
+
     if args.json:
         payload = {
             "benchmark": "serving_load",
@@ -678,6 +819,7 @@ def main() -> None:
             "tight_pool": tight_row,
             "fleet_sweep": fleet_payload,
             "mixed_dispatch": mixed_payload,
+            "fault_sweep": fault_rows,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

@@ -2,14 +2,16 @@
 from repro.core.clock import (BaseClock, Event, FunctionClock, SystemClock,
                               VirtualClock, ensure_clock)
 from repro.core.clones import (CLONE_TYPES, KV_SCALE_BY_CLONE_TYPE,
-                               TPU_BY_CLONE_TYPE, TPU_CLONE_TYPES, Clone,
+                               TPU_BY_CLONE_TYPE, TPU_CLONE_TYPES,
+                               CircuitBreaker, Clone, CloneHealth,
                                ClonePool, CloneState, chips_for, resume_time,
                                usd_per_second)
 from repro.core.controller import ExecutionController, ExecutionResult
 from repro.core.dispatch import CloneTask, Dispatcher
 from repro.core.energy import (PhoneState, PowerTutorModel, TpuCoeffs,
                                TpuEnergyModel)
-from repro.core.faults import FaultPlan, ReconnectManager, VenueFailure
+from repro.core.faults import (CloneFault, FaultInjector, FaultPlan,
+                               ReconnectManager, VenueFailure)
 from repro.core.parallel import (ParallelResult, Parallelizer, split_batch,
                                  split_range)
 from repro.core.policy import (Policy, Prediction, placement_key,
@@ -28,10 +30,12 @@ __all__ = [
     "BaseClock", "Event", "FunctionClock", "SystemClock", "VirtualClock",
     "ensure_clock",
     "CLONE_TYPES", "KV_SCALE_BY_CLONE_TYPE", "TPU_BY_CLONE_TYPE",
-    "TPU_CLONE_TYPES", "Clone", "ClonePool", "CloneState", "chips_for",
+    "TPU_CLONE_TYPES", "CircuitBreaker", "Clone", "CloneHealth",
+    "ClonePool", "CloneState", "chips_for",
     "resume_time", "usd_per_second",
     "ExecutionController", "ExecutionResult", "CloneTask", "Dispatcher",
     "PhoneState", "PowerTutorModel", "TpuCoeffs", "TpuEnergyModel",
+    "CloneFault", "FaultInjector",
     "FaultPlan", "ReconnectManager", "VenueFailure", "ParallelResult",
     "Parallelizer", "split_batch", "split_range", "Policy", "Prediction",
     "placement_key", "should_offload",

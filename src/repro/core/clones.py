@@ -113,11 +113,106 @@ CONTENTION_FACTOR = 3.3           # k simultaneous resumes: t = R*(1+f*(k-1))
 PAUSE_IDLE_TTL = 30.0             # auto-pause after idle (s)
 OFF_IDLE_TTL = 600.0              # auto-power-off after paused (s)
 
+# Circuit-breaker defaults (ADR-006): consecutive dispatch failures on a
+# clone trip its breaker open; after a cooldown a single half-open probe
+# decides between closing it and re-opening with doubled cooldown.
+CB_FAIL_THRESHOLD = 3             # consecutive failures -> open
+CB_OPEN_SECONDS = 1.0             # first open -> half-open cooldown (s)
+CB_MAX_OPEN_SECONDS = 30.0        # backoff cap for repeated re-opens (s)
+CB_MAX_PROBES = 8                 # probe-chain length per clock binding
+
 
 def resume_time(k_simultaneous: int) -> float:
     """Paper: 1 resume ~300 ms, 7 simultaneous -> 6-7 s (super-linear)."""
     k = max(1, k_simultaneous)
     return RESUME_SECONDS * (1.0 + CONTENTION_FACTOR * (k - 1))
+
+
+class CloneHealth(enum.Enum):
+    HEALTHY = "healthy"     # serving normally
+    SUSPECT = "suspect"     # recovered from a fault, awaiting a probe
+    DEAD = "dead"           # failed; only a successful probe revives it
+
+
+class CircuitBreaker:
+    """Per-clone circuit breaker (ADR-006): closed → open on the fail
+    threshold (or a hard :meth:`trip`), half-open after a cooldown, and
+    back to closed only when a probe succeeds.  ``bind`` attaches a
+    VirtualClock and a probe callable, after which every open schedules
+    its own half-open probe event with capped exponential backoff;
+    without a clock the classic :meth:`allow` gate drives the
+    transitions instead."""
+
+    def __init__(self, fail_threshold: int = CB_FAIL_THRESHOLD,
+                 open_seconds: float = CB_OPEN_SECONDS,
+                 max_open_seconds: float = CB_MAX_OPEN_SECONDS,
+                 max_probes: int = CB_MAX_PROBES):
+        self.fail_threshold = fail_threshold
+        self.open_seconds = open_seconds
+        self.max_open_seconds = max_open_seconds
+        self.max_probes = max_probes
+        self.state = "closed"            # closed | open | half_open
+        self.failures = 0                # consecutive, reset on success
+        self.opened_at = 0.0
+        self.opens = 0                   # lifetime open transitions
+        self.probes = 0                  # lifetime half-open probes
+        self._cooldown = open_seconds
+        self._clock = None
+        self._probe_fn: Optional[Callable[[], bool]] = None
+        self._probe_ev = None
+
+    def bind(self, clock, probe_fn: Callable[[], bool]) -> None:
+        """Attach a clock + probe; resets the probe-chain budget."""
+        self._clock = clock
+        self._probe_fn = probe_fn
+        self.probes = 0
+
+    def record_failure(self, now: float) -> None:
+        self.failures += 1
+        if self.state == "half_open" or self.failures >= self.fail_threshold:
+            self.trip(now)
+
+    def trip(self, now: float) -> None:
+        """Force-open (a clone death is definitive, no threshold)."""
+        reopening = self.state != "closed"
+        self.state = "open"
+        self.opened_at = now
+        self.opens += 1
+        if reopening:      # half-open probe failed: back off the cooldown
+            self._cooldown = min(self._cooldown * 2, self.max_open_seconds)
+        if self._clock is not None and self.probes < self.max_probes:
+            self._probe_ev = self._clock.schedule(self._cooldown,
+                                                  self._probe)
+    def record_success(self) -> None:
+        self.state = "closed"
+        self.failures = 0
+        self._cooldown = self.open_seconds
+        if self._probe_ev is not None:
+            self._probe_ev.cancel()
+            self._probe_ev = None
+
+    def allow(self, now: float) -> bool:
+        """Dispatch gate for clock-less use: closed always allows; open
+        allows one trial once the cooldown has elapsed (transitioning to
+        half-open); half-open allows nothing until the trial reports."""
+        if self.state == "closed":
+            return True
+        if self.state == "open" and now >= self.opened_at + self._cooldown:
+            self.state = "half_open"
+            return True
+        return False
+
+    def _probe(self) -> None:
+        """Scheduled half-open probe: success closes, failure re-opens
+        with doubled cooldown (next probe auto-scheduled, chain capped)."""
+        if self.state != "open" or self._probe_fn is None:
+            return
+        self.state = "half_open"
+        self.probes += 1
+        if self._probe_fn():
+            self.record_success()
+        else:
+            self.trip(self._clock.now())
 
 
 @dataclasses.dataclass
@@ -134,10 +229,23 @@ class Clone:
     # running clone still bills, which is what makes TTL pausing worth $
     running_since: Optional[float] = None
     running_seconds: float = 0.0
+    # fault tolerance (ADR-006): health gates placement, the breaker
+    # gates re-use after failures, slowdown scales dispatched venue time
+    health: CloneHealth = CloneHealth.HEALTHY
+    breaker: CircuitBreaker = dataclasses.field(
+        default_factory=CircuitBreaker)
+    slowdown: float = 1.0
 
     @property
     def warm(self) -> bool:
         return bool(self.executable_cache)
+
+    @property
+    def serveable(self) -> bool:
+        """Placement-eligible: healthy with a closed breaker.  Callers
+        still check RUNNING/busy — this is the fault gate only."""
+        return (self.health is CloneHealth.HEALTHY
+                and self.breaker.state == "closed")
 
 
 class ClonePool:
@@ -242,7 +350,7 @@ class ClonePool:
                 break
             if c.busy or (exclude_primary and c.is_primary):
                 continue
-            if c.ctype.name != type_name:
+            if c.ctype.name != type_name or not c.serveable:
                 continue
             if c.state is CloneState.RUNNING:
                 ready.append(c)
@@ -328,12 +436,16 @@ class ClonePool:
         if have >= n:
             return [], []
         need = n - have
+        # dead / suspect clones are not capacity: a failed secondary sits
+        # powered off until its breaker's probe revives it (ADR-006)
         to_resume = [c for c in self.clones
                      if not c.is_primary and c.ctype.name == type_name
+                     and c.serveable
                      and c.state is CloneState.PAUSED][:need]
         n_boot = need - len(to_resume)
         to_boot = [c for c in self.clones
                    if not c.is_primary and c.ctype.name == type_name
+                   and c.serveable
                    and c.state is CloneState.POWERED_OFF][:n_boot]
         while len(to_resume) + len(to_boot) < need:
             if len(self.clones) >= self.max_clones:

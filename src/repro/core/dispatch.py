@@ -32,7 +32,13 @@ class CloneTask:
     extra_delay: float = 0.0       # provisioning / transfer charged up front
     done_at: float = 0.0           # submitted_at + extra_delay + venue_seconds
     done: bool = False
+    cancelled: bool = False        # completion event revoked (ADR-006)
     value: object = None
+    # the submitted work, kept so a hedged duplicate can re-issue the
+    # exact closure on a second clone (the closure is pure — ADR-002)
+    fn: Optional[Callable] = None
+    fn_args: tuple = ()
+    _event: object = None          # the clock completion Event
     _callbacks: List[Callable] = dataclasses.field(default_factory=list)
 
     @property
@@ -83,15 +89,31 @@ class Dispatcher:
                 return Venue(c.spec).execute(f, *a)
 
         value, venue_s = executor(clone, fn, args)
+        # fault-injected slowdowns (ADR-006) scale the modeled venue time
+        # at the one choke point every dispatch passes through, so test
+        # and benchmark executors stay fault-agnostic
+        venue_s = float(venue_s) * max(1.0, getattr(clone, "slowdown", 1.0))
         task = CloneTask(clone=clone, label=label,
                          submitted_at=self.clock.now(),
-                         venue_seconds=float(venue_s),
-                         extra_delay=float(extra_delay))
+                         venue_seconds=venue_s,
+                         extra_delay=float(extra_delay),
+                         fn=fn, fn_args=tuple(args))
         task.value = value
         task.done_at = task.submitted_at + task.extra_delay + task.venue_seconds
-        self.clock.at(task.done_at, task._complete)
+        task._event = self.clock.at(task.done_at, task._complete)
         self.submitted += 1
         return task
+
+    def cancel(self, task: CloneTask) -> bool:
+        """Revoke an in-flight task: its completion event never fires and
+        its value is discarded (hedge losers, dispatches on dead clones).
+        Returns False when the task already completed or was cancelled."""
+        if task.done or task.cancelled:
+            return False
+        task.cancelled = True
+        if task._event is not None:
+            task._event.cancel()
+        return True
 
     def wait(self, tasks: Sequence[CloneTask]) -> List[CloneTask]:
         """Advance the timeline until every task has completed."""

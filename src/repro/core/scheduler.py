@@ -325,11 +325,14 @@ class PlacementEngine:
         a cold boot.  Energy and $ are the tier's burn rates over the
         placement horizon (chips-aware)."""
         now = self.pool.clock()
+        # open-breaker / dead clones are not capacity (ADR-006): placing
+        # a bucket on them would dispatch into a tripped circuit
         idle = [max(0.0, self.ready_at.get(c.cid, 0.0) - now)
                 for c in self.pool.running_secondaries(type_name)
-                if not c.busy]
+                if not c.busy and c.serveable]
         paused = any(c.state is CloneState.PAUSED
                      and c.ctype.name == type_name and not c.is_primary
+                     and c.serveable
                      for c in self.pool.clones)
         t = (min(idle) if idle
              else resume_time(1) if paused else BOOT_SECONDS)

@@ -79,6 +79,7 @@ from repro.core.clock import VirtualClock
 from repro.core.clones import (CLONE_TYPES, KV_SCALE_BY_CLONE_TYPE,
                                PAUSE_IDLE_TTL)
 from repro.core.dispatch import Dispatcher
+from repro.core.faults import CloneFault, FaultInjector
 from repro.core.scheduler import (AdmissionQueue, FleetAutoscaler,
                                   PlacementEngine, ServeCompletion,
                                   ServeRequest, SlotLedger, poisson_arrivals)
@@ -365,6 +366,38 @@ class LMBackend:
             self._copy_fns[donate] = jax.jit(
                 copy_into, donate_argnums=(0,) if donate else ())
         return self._copy_fns[donate]
+
+    def migrate_fn(self):
+        """Jitted cross-pool KV migration (ADR-006): ``fn(dst_pool,
+        src_pool, src_ids (C,), dst_ids (C,), src_slots (J,), dst_slots
+        (J,))`` copies the listed KV blocks *between two pools* across
+        every leaf with a capacity axis, and the listed per-slot
+        recurrent-state rows across the leaves without one — the device
+        half of moving a dying clone's in-flight requests to a survivor.
+        Padding follows the serving conventions: block id 0 is the trash
+        block on both sides (a 0→0 pad copy is a no-op) and an
+        out-of-range destination slot drops its state-row write."""
+        if getattr(self, "_migrate_fn", None) is None:
+            b_ax, c_ax = self._batch_axis, self._cap_axis
+
+            def migrate(dst_pool, src_pool, src_ids, dst_ids,
+                        src_slots, dst_slots):
+                def mv(dleaf, sleaf, bax, cax):
+                    if cax is None:          # per-slot state rows
+                        d = jnp.moveaxis(dleaf, bax, 0)
+                        s = jnp.moveaxis(sleaf, bax, 0)
+                        return jnp.moveaxis(
+                            d.at[dst_slots].set(s[src_slots], mode="drop"),
+                            0, bax)
+                    d = jnp.moveaxis(dleaf, bax, 0)
+                    s = jnp.moveaxis(sleaf, bax, 0)
+                    return jnp.moveaxis(d.at[dst_ids].set(s[src_ids]),
+                                        0, bax)
+
+                return jax.tree.map(mv, dst_pool, src_pool, b_ax, c_ax)
+
+            self._migrate_fn = jax.jit(migrate)
+        return self._migrate_fn
 
 
 class ServingEngine:
@@ -901,8 +934,13 @@ class _SlotEngine:
         self.joins: List[tuple] = []        # (slot, req, toks, blk_ids)
         self.sfx_joins: List[tuple] = []    # (slot, req, sfx, pos0, restore)
         self.cow_pairs: List[tuple] = []    # (slot, src, dst) this round
+        # inbound KV migrations from a dying clone (ADR-006):
+        # (dst_slot, req, out, first_token_t, src_pool, src_ids, dst_ids,
+        #  src_slot, pos) — folded into the next step as a device copy
+        self.migrations: List[tuple] = []
         self.submitted_joins: List[tuple] = []
         self.submitted_sfx: List[tuple] = []
+        self.submitted_migrations: List[tuple] = []
         self.decode_rows: Optional[np.ndarray] = None
         self.decode_counts: Optional[np.ndarray] = None
         self._tables_dev = None             # device tables cache
@@ -962,7 +1000,8 @@ class _SlotEngine:
 
     def alive(self) -> bool:
         return (any(s is not None for s in self.slots)
-                or bool(self.joins) or bool(self.sfx_joins))
+                or bool(self.joins) or bool(self.sfx_joins)
+                or bool(self.migrations))
 
 
 @dataclasses.dataclass
@@ -1017,6 +1056,19 @@ class ServeReport:
     energy_j_by_type: Dict[str, float] = dataclasses.field(
         default_factory=dict)
     power_offs: int = 0
+    # fault tolerance (ADR-006): ``faults_injected`` counts fired clone
+    # faults (kills + drains + slowdowns), ``recoveries_migrated`` the
+    # in-flight requests whose KV blocks moved to a survivor's pool,
+    # ``recoveries_restored`` those requeued for prefix-accelerated
+    # re-prefill, ``hedges_fired``/``hedge_wins`` the straggler decode
+    # windows raced on a second clone and the races the duplicate won,
+    # ``breaker_opens`` the fleet-wide circuit-breaker open transitions
+    faults_injected: int = 0
+    recoveries_migrated: int = 0
+    recoveries_restored: int = 0
+    hedges_fired: int = 0
+    hedge_wins: int = 0
+    breaker_opens: int = 0
 
     def summary(self) -> str:
         """One-line digest (documented in docs/benchmarks.md)."""
@@ -1058,9 +1110,24 @@ class ClientHandler:
                  provision: Optional[Dict[str, int]] = None,
                  executor: Optional[Callable] = None,
                  pool: Optional[ClonePool] = None,
-                 clock: Optional[VirtualClock] = None):
+                 clock: Optional[VirtualClock] = None,
+                 faults: Optional[List[CloneFault]] = None,
+                 hedge_factor: float = 0.0,
+                 hedge_quantile: float = 0.95,
+                 hedge_min_samples: int = 8):
         if kv not in ("paged", "contiguous"):
             raise ValueError(f"kv must be 'paged' or 'contiguous': {kv!r}")
+        if faults and kv != "paged":
+            raise ValueError("fault injection requires kv='paged' — the "
+                             "contiguous cohort keeps no per-slot restore "
+                             "state, so a clone death would lose tokens")
+        if hedge_factor > 0 and kv != "paged":
+            raise ValueError("hedged dispatch races _SlotEngine decode "
+                             "windows; it requires kv='paged'")
+        if hedge_factor > 0 and donate_kv:
+            raise ValueError("hedged dispatch re-runs the step closure on "
+                             "a second clone; a donated KV pool is "
+                             "consumed by the first run (ADR-002)")
         if decode_window < 1:
             raise ValueError(f"decode_window must be >= 1: {decode_window}")
         if decode_window > 1 and kv != "paged":
@@ -1168,6 +1235,19 @@ class ClientHandler:
         # rid -> (lo, hi) placement band, valid for one scheduler round
         # (invalidated whenever pool inventory changes — engine spawns)
         self._band_cache: Dict[int, tuple] = {}
+        # fault tolerance + hedging (ADR-006)
+        self.injector = (FaultInjector(self.pool, faults)
+                         if faults else None)
+        self.hedge_factor = hedge_factor
+        self.hedge_quantile = hedge_quantile
+        self.hedge_min_samples = hedge_min_samples
+        self.recoveries_migrated = 0
+        self.recoveries_restored = 0
+        self.hedges_fired = 0
+        self.hedge_wins = 0
+        self._hedges: Dict[object, object] = {}   # task <-> partner
+        self._step_hist: List[float] = []         # recent step durations
+        self._kv_tok_bytes: Optional[float] = None
 
     # ---------------------------------------------------------------- clones
     def _free_clone(self, lo_rank: Optional[int] = None,
@@ -1187,11 +1267,14 @@ class ClientHandler:
         now = self.clock.now()
         cands = []
         p = self.pool.primary
-        if self.use_primary and not p.busy and in_band(p.ctype.rank(),
-                                                       primary=True):
+        # dead / open-breaker clones never take new work (ADR-006): a
+        # tripped breaker re-closes only through its half-open probe
+        if self.use_primary and not p.busy and p.serveable \
+                and in_band(p.ctype.rank(), primary=True):
             cands.append((0.0, p.ctype.rank(), 0, p))
         for c in self.pool.running_secondaries():
-            if c.busy or c.ctype.name not in self._fleet_set:
+            if c.busy or not c.serveable \
+                    or c.ctype.name not in self._fleet_set:
                 continue
             if not in_band(c.ctype.rank()):
                 continue
@@ -1201,6 +1284,19 @@ class ClientHandler:
 
     def _net_s(self, nbytes: int) -> float:
         return transfer_time(nbytes, self.pool.link)
+
+    def _kv_token_bytes(self) -> float:
+        """Bytes of KV state one context token occupies — what a block
+        migration or a hedge's context transfer moves per token.  Derived
+        from the backend's own cache accounting when it has one (test
+        stubs fall back to a small constant)."""
+        if self._kv_tok_bytes is None:
+            fn = getattr(self.backend, "cache_mem_bytes", None)
+            if fn is not None:
+                self._kv_tok_bytes = float(fn(1)) / self.backend.capacity
+            else:
+                self._kv_tok_bytes = 64.0
+        return self._kv_tok_bytes
 
     # ------------------------------------------------------------- placement
     def _charge(self, clone, venue_seconds: float) -> None:
@@ -1444,11 +1540,24 @@ class ClientHandler:
         pressure: its prefill never ran, so nothing is lost — the slot
         and blocks return to the pool and the request requeues at the
         head.  Always preferred over preempting an *active* slot, whose
-        restore re-computes real work."""
+        restore re-computes real work.  Pending inbound migrations are
+        rolled back last-resort-before-preemption: the device copy never
+        ran, so the request downgrades to the restore recovery path with
+        its generated tokens carried (ADR-006)."""
         if engine.sfx_joins:
             slot, req, _, _, _ = engine.sfx_joins.pop()
-        else:
+        elif engine.joins:
             slot, req, _, _ = engine.joins.pop()
+        else:
+            slot, req, out, ft, *_rest = engine.migrations.pop()
+            req.generated = list(out)
+            req.first_token_t = ft
+            req.preemptions += 1
+            engine.kv.free_slot(slot)    # int-admitted: nothing indexed
+            self.queue.requeue(req)
+            self.preemptions += 1
+            self.recoveries_restored += 1
+            return
         engine.cow_pairs = [p for p in engine.cow_pairs if p[0] != slot]
         engine.kv.cancel_slot(slot)
         self.queue.requeue(req)
@@ -1469,7 +1578,7 @@ class ClientHandler:
                 kv.grow_for_window(counts)
                 return
             except PoolExhausted:
-                if engine.joins or engine.sfx_joins:
+                if engine.joins or engine.sfx_joins or engine.migrations:
                     self._cancel_join(engine)
                     continue
                 cands = [(slot, s.req.priority, len(s.out))
@@ -1525,8 +1634,10 @@ class ClientHandler:
         joins, engine.joins = engine.joins, []
         sfx, engine.sfx_joins = engine.sfx_joins, []
         cow, engine.cow_pairs = engine.cow_pairs, []
+        migs, engine.migrations = engine.migrations, []
         engine.submitted_joins = joins
         engine.submitted_sfx = sfx
+        engine.submitted_migrations = migs
         rows = np.nonzero(kv.active)[0]
         do_decode = rows.size > 0
         engine.decode_rows = rows if do_decode else None
@@ -1576,6 +1687,34 @@ class ClientHandler:
                               + [0] * (cpad - len(cow)), jnp.int32)
             cow_batch = (self.backend.copy_fn(self.donate_kv), src, dst)
             nbytes += int(src.nbytes) * 2
+        mig_batches = []
+        if migs:
+            # inbound KV migrations (ADR-006): one fused cross-pool copy
+            # per source pool — block ids padded to a power-of-two bucket
+            # with (0, 0) trash-to-trash no-ops, destination state-row
+            # pads dropped via an out-of-range slot id.  The *real* KV
+            # bytes cross the inter-clone link: billed into nbytes.
+            by_src: Dict[int, list] = {}
+            for m in migs:
+                by_src.setdefault(id(m[4]), []).append(m)
+            for group in by_src.values():
+                src_pool = group[0][4]
+                sids = [b for m in group for b in m[5]]
+                dids = [b for m in group for b in m[6]]
+                bpad = pow2_bucket(len(sids))
+                sids += [0] * (bpad - len(sids))
+                dids += [0] * (bpad - len(dids))
+                spad = pow2_bucket(len(group))
+                sslots = [m[7] for m in group] + [0] * (spad - len(group))
+                dslots = [m[0] for m in group] \
+                    + [kv.max_slots] * (spad - len(group))
+                mig_batches.append(
+                    (self.backend.migrate_fn(), src_pool,
+                     jnp.asarray(sids, jnp.int32),
+                     jnp.asarray(dids, jnp.int32),
+                     jnp.asarray(sslots, jnp.int32),
+                     jnp.asarray(dslots, jnp.int32)))
+            nbytes += int(sum(m[8] for m in migs) * self._kv_token_bytes())
         sfx_batch = None
         mixed_batch = None
         sfx_steps = 0
@@ -1623,6 +1762,8 @@ class ClientHandler:
             nbytes += int(stoks.nbytes)
 
         def step_fn(params, pool, tok, pos, steps_left, tables):
+            for mfn, spool, sids, dids, sslots, dslots in mig_batches:
+                pool = mfn(pool, spool, sids, dids, sslots, dslots)
             firsts = None
             if join_batch is not None:
                 toks, blks, slots = join_batch
@@ -1654,6 +1795,7 @@ class ClientHandler:
         # into max(..) steps by the mixed path instead of added serially
         step_fn.seq_steps = (
             int(join_batch is not None) + int(cow_batch is not None)
+            + len(mig_batches)
             + (mix_steps if mixed_batch is not None
                else sfx_steps + (engine.window if do_decode else 0)))
         delay = (self.autoscaler.clone_ready_delay(engine.clone,
@@ -1698,6 +1840,15 @@ class ClientHandler:
             engine.tok_host[slot] = t0
             kv.active[slot] = True
         engine.submitted_sfx = []
+        for (slot, req, out, ft, *_rest) in engine.submitted_migrations:
+            # the migrated slot resumes exactly where the dying clone
+            # stopped: tokens already emitted, the last one is the next
+            # decode input (same contract as the restore fold above)
+            engine.slots[slot] = _Slot(req, list(out), ft)
+            engine.tok_host[slot] = int(out[-1])
+            kv.active[slot] = True
+            self.recoveries_migrated += 1
+        engine.submitted_migrations = []
         kv.clear_pending()
         if engine.decode_rows is not None and nxt is not None:
             nxt = np.asarray(nxt)                       # (S, window)
@@ -1724,6 +1875,159 @@ class ClientHandler:
                 kv.free_slot(slot)
         return engine.alive()
 
+    # ------------------------------------------------------- fault recovery
+    def _requeue_lost(self, req: ServeRequest) -> None:
+        """Send a dead engine's request back through admission on the
+        prefix-accelerated restore path (its ``generated`` tokens, if
+        any, were already carried onto the request)."""
+        req.preemptions += 1
+        self.queue.requeue(req)
+        self.recoveries_restored += 1
+
+    def _try_migrate(self, src_engine: _SlotEngine, slot: int, s: _Slot,
+                     engines: Dict[int, "_SlotEngine"]) -> bool:
+        """Queue one active slot of a draining engine for KV migration
+        into a survivor with room: claim a destination slot + blocks now
+        (so later candidates in the same recovery pass see the
+        commitment), defer the device copy into the destination's next
+        step closure.  False when no survivor can admit the context."""
+        if getattr(self.backend, "migrate_fn", None) is None:
+            return False
+        kv = src_engine.kv
+        pos = int(kv.pos[slot])
+        nb = (pos - 1) // kv.bs + 1
+        src_ids = [int(b) for b in kv.tables[slot, :nb]]
+        cands = sorted(
+            (e for e in engines.values()
+             if e is not src_engine and e.clone.serveable),
+            key=lambda e: e.clone.cid)
+        for dst in cands:
+            if not dst.kv.can_admit(pos, s.req.max_new_tokens):
+                continue
+            dslot, new_ids, _, _ = dst.kv.alloc_slot(pos)
+            dst.migrations.append(
+                (dslot, s.req, list(s.out), s.first_token_t,
+                 kv.pool, src_ids, [int(b) for b in new_ids], slot, pos))
+            return True
+        return False
+
+    def _recover_engine(self, engine: _SlotEngine, fault: CloneFault,
+                        engines: Dict[int, "_SlotEngine"]) -> None:
+        """Recover every request a dead engine held (ADR-006).
+
+        Pending/submitted joins and inbound migrations never folded a
+        token on this engine, so they simply requeue (suffix/migration
+        rows carry their generated tokens).  *Active* slots hold real
+        decode progress: a ``drain`` leaves the KV salvageable — migrate
+        to a survivor when one can admit the context — while a ``kill``
+        lost the device memory, so the request requeues on the restore
+        path and re-prefills (prefix-accelerated on a surviving pool).
+        """
+        for (_, req, _t, _b) in engine.joins + engine.submitted_joins:
+            self._requeue_lost(req)
+        for (_, req, _s, _p, _r) in engine.sfx_joins + engine.submitted_sfx:
+            self._requeue_lost(req)
+        for (_, req, out, ft, *_rest) in (engine.migrations
+                                          + engine.submitted_migrations):
+            req.generated = list(out)
+            req.first_token_t = ft
+            self._requeue_lost(req)
+        engine.joins, engine.sfx_joins, engine.cow_pairs = [], [], []
+        engine.submitted_joins, engine.submitted_sfx = [], []
+        engine.migrations, engine.submitted_migrations = [], []
+        for slot, s in enumerate(engine.slots):
+            if s is None:
+                continue
+            if not (fault.kind == "drain"
+                    and self._try_migrate(engine, slot, s, engines)):
+                s.req.generated = list(s.out)
+                s.req.first_token_t = s.first_token_t
+                self._requeue_lost(s.req)
+            engine.slots[slot] = None
+        # the pool object dies with the clone — a revived clone starts
+        # from a fresh pool (its prefix index died with the memory); the
+        # device arrays stay referenced by any pending migration tuples
+        self._kv_pools.pop(engine.clone.cid, None)
+
+    def _recover_failed(self, inflight: Dict,
+                        engines: Dict[int, "_SlotEngine"]) -> None:
+        """Handle every clone the injector killed/drained since the last
+        round: cancel its in-flight dispatches (their values will never
+        arrive), resolve hedge races, and recover its engine's requests."""
+        for clone, fault in self.injector.drain_failed():
+            for task in [t for t in inflight if t.clone is clone]:
+                inflight.pop(task)
+                self.dispatcher.cancel(task)
+                partner = self._hedges.pop(task, None)
+                if partner is not None:
+                    self._hedges.pop(partner, None)
+                    if task.label == "hedge":
+                        continue      # the original keeps racing
+                    # the engine's own step died with the clone — its
+                    # hedge can't rescue an engine being recovered
+                    inflight.pop(partner, None)
+                    self.dispatcher.cancel(partner)
+                    self.pool.release([partner.clone])
+            engine = None
+            for key, eng in list(engines.items()):
+                if eng.clone is clone:
+                    engine = engines.pop(key)
+                    self.ledger.drop(key)
+                    break
+            if engine is not None:
+                self._recover_engine(engine, fault, engines)
+            self.pool.release([clone])
+
+    # ---------------------------------------------------------------- hedge
+    def _maybe_hedge(self, task, engine: _SlotEngine,
+                     inflight: Dict) -> None:
+        """Race a straggling decode step on a second clone (ADR-006).
+
+        A step whose timeline duration exceeds the recent-history
+        quantile by ``hedge_factor`` gets its (pure) closure re-issued
+        on a free serveable clone; the duplicate pays the engine's live
+        KV context over the link up front.  Whichever copy completes
+        first is folded; the loser's completion event is cancelled."""
+        if self.hedge_factor <= 0 or task.label != "step":
+            return
+        hist = self._step_hist
+        fire = (len(hist) >= self.hedge_min_samples
+                and task.duration > self.hedge_factor
+                * float(np.quantile(hist, self.hedge_quantile)))
+        hist.append(task.duration)    # after the decision: never vs itself
+        if not fire:
+            return
+        clone = self._free_clone()
+        if clone is None or clone is engine.clone:
+            return
+        kv = engine.kv
+        ctx_tokens = int(kv.pos[kv.active].sum())
+        delay = (self.autoscaler.clone_ready_delay(clone, self.clock.now())
+                 + self._net_s(int(ctx_tokens * self._kv_token_bytes())))
+        clone.busy = True
+        dup = self.dispatcher.submit(clone, task.fn, task.fn_args,
+                                     executor=self.executor,
+                                     extra_delay=delay, label="hedge")
+        self._charge(clone, dup.venue_seconds)
+        self.hedges_fired += 1
+        self._hedges[task] = dup
+        self._hedges[dup] = task
+        inflight[dup] = engine
+
+    def _resolve_hedge(self, winner, inflight: Dict) -> None:
+        """First of a hedge pair completed: cancel the loser, return the
+        borrowed clone, score the win if the duplicate got there first."""
+        partner = self._hedges.pop(winner, None)
+        if partner is None:
+            return
+        self._hedges.pop(partner, None)
+        inflight.pop(partner, None)
+        self.dispatcher.cancel(partner)
+        hedge = winner if winner.label == "hedge" else partner
+        self.pool.release([hedge.clone])
+        if winner is hedge:
+            self.hedge_wins += 1
+
     # ------------------------------------------------------------------ run
     def run(self, requests: List[ServeRequest], *,
             drain_idle_s: float = 0.0) -> ServeReport:
@@ -1743,6 +2047,8 @@ class ClientHandler:
         inflight: Dict[object, object] = {}        # task -> engine | cohort
         engines: Dict[int, _SlotEngine] = {}       # id -> live engine
         completions: List[ServeCompletion] = []
+        if self.injector is not None:
+            self.injector.arm()             # faults become clock events
 
         while True:
             now = self.clock.now()
@@ -1750,6 +2056,10 @@ class ClientHandler:
             while i < len(reqs) and reqs[i].arrival_t <= now + 1e-12:
                 self.queue.offer(reqs[i], now)
                 i += 1
+            if self.injector is not None:
+                # recover clones that died since the last round BEFORE
+                # joins/spawns consult the engine set (ADR-006)
+                self._recover_failed(inflight, engines)
             if paged and engines:
                 # mid-flight joins: fill open slots of in-flight engines
                 # before counting residual demand or spawning new ones
@@ -1816,7 +2126,9 @@ class ClientHandler:
                             f"block_size={self.block_size})")
                     engines[id(engine)] = engine
                     self.ledger.update(id(engine), engine.kv.free_slots)
-                    inflight[self._submit_engine_step(engine)] = engine
+                    task = self._submit_engine_step(engine)
+                    inflight[task] = engine
+                    self._maybe_hedge(task, engine, inflight)
                 else:
                     # the cohort seeds with the *picked* request (the
                     # clone was banded for it — never the possibly
@@ -1837,17 +2149,28 @@ class ClientHandler:
                 self._band_cache.clear()
 
             if inflight:
-                # bound the wait so due arrivals are admitted on time
+                # bound the wait so due arrivals are admitted on time and
+                # a mid-window clone death is detected when it fires, not
+                # when the doomed dispatch would have completed
                 next_arrival = reqs[i].arrival_t if i < len(reqs) else None
+                next_fault = (self.injector.next_event_time()
+                              if self.injector is not None else None)
+                bound = min((t for t in (next_arrival, next_fault)
+                             if t is not None), default=None)
                 first_done = min(t.done_at for t in inflight)
-                if next_arrival is not None and next_arrival < first_done:
-                    self.clock.advance_to(next_arrival)
+                if bound is not None and bound < first_done:
+                    self.clock.advance_to(bound)
                     continue
                 for task in self.dispatcher.wait_any(list(inflight)):
-                    unit = inflight.pop(task)
+                    unit = inflight.pop(task, None)
+                    if unit is None:
+                        continue          # hedge loser already resolved
+                    self._resolve_hedge(task, inflight)
                     if paged:
                         if self._engine_step_done(unit, task, completions):
-                            inflight[self._submit_engine_step(unit)] = unit
+                            t2 = self._submit_engine_step(unit)
+                            inflight[t2] = unit
+                            self._maybe_hedge(t2, unit, inflight)
                         else:
                             engines.pop(id(unit), None)
                             self.ledger.drop(id(unit))
@@ -1865,6 +2188,14 @@ class ClientHandler:
             elif i < len(reqs):
                 self.clock.advance_to(reqs[i].arrival_t)
             elif self.queue.depth > 0:
+                # every clone may be dead/tripped with revival + probe
+                # events pending — advance to the next clock event and
+                # let the breaker half-open probes re-admit capacity
+                nxt = (self.clock.next_event_time()
+                       if self.injector is not None else None)
+                if nxt is not None and nxt > now + 1e-12:
+                    self.clock.advance_to(nxt)
+                    continue
                 raise RuntimeError("requests queued but no clone can run "
                                    "(max_secondaries too small?)")
             else:
@@ -1916,7 +2247,14 @@ class ClientHandler:
             clone_seconds_by_type=cs_by_type,
             cost_usd=self.pool.cost_usd(self.clock.now()),
             energy_j_by_type=dict(self.energy_j_by_type),
-            power_offs=self.pool.stats["offs"])
+            power_offs=self.pool.stats["offs"],
+            faults_injected=(self.injector.stats["injected"]
+                             if self.injector is not None else 0),
+            recoveries_migrated=self.recoveries_migrated,
+            recoveries_restored=self.recoveries_restored,
+            hedges_fired=self.hedges_fired,
+            hedge_wins=self.hedge_wins,
+            breaker_opens=sum(c.breaker.opens for c in self.pool.clones))
 
 
 def main() -> None:

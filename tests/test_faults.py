@@ -1,0 +1,444 @@
+"""Fault-injected serving: chaos harness, breaker, hedging (ADR-006).
+
+Layered like the machinery it tests:
+
+- :class:`CircuitBreaker` state machine units (closed -> open ->
+  half-open -> closed, cooldown doubling, the clock-driven probe chain);
+- :class:`ReconnectManager` backoff as VirtualClock events (plus the
+  seed's synchronous mode, which must stay untouched);
+- :class:`FaultInjector` units: kill/drain/slow firing, targeting,
+  misses, revival, recovery bookkeeping;
+- end-to-end chaos on the :class:`~repro.launch.serve.ClientHandler`:
+  kill a clone mid-decode and assert the served tokens are
+  **bit-identical** to the faultless run for BOTH recovery paths —
+  drain -> KV migration to a survivor, kill -> prefix-accelerated
+  restore — on the FakeBackend and on a real reduced LM backend;
+- hedged dispatch: a straggling clone's decode window races a duplicate
+  on a warm spare, the winner's tokens are used, the loser is cancelled,
+  and nothing is double-billed.
+
+``run_chaos_trace`` at the bottom is the deterministic twin the
+Hypothesis property test (test_property.py) drives with random fault
+schedules; the leak/conservation checks live here so both suites assert
+the same invariants.
+"""
+import numpy as np
+import pytest
+
+from repro.core.clock import VirtualClock
+from repro.core.clones import (CB_FAIL_THRESHOLD, CircuitBreaker, Clone,
+                               CloneHealth, ClonePool, CloneState)
+from repro.core.dispatch import Dispatcher
+from repro.core.faults import CloneFault, FaultInjector, ReconnectManager
+from repro.core.scheduler import ServeRequest, poisson_arrivals
+
+import test_handler as th
+
+
+# --------------------------------------------------------------- breaker
+def test_breaker_threshold_opens_and_allow_gates():
+    cb = CircuitBreaker()
+    assert cb.state == "closed"
+    for _ in range(CB_FAIL_THRESHOLD - 1):
+        cb.record_failure(now=0.0)
+    assert cb.state == "closed"
+    cb.record_failure(now=0.0)
+    assert cb.state == "open" and cb.opens == 1
+    # open gate: refuse inside the cooldown, half-open after it
+    assert not cb.allow(now=0.5)
+    assert cb.state == "open"
+    assert cb.allow(now=1.5)             # past open_seconds=1.0
+    assert cb.state == "half_open"
+    cb.record_success()
+    assert cb.state == "closed" and cb.failures == 0
+
+
+def test_breaker_halfopen_failure_reopens_with_doubled_cooldown():
+    cb = CircuitBreaker()
+    cb.trip(now=0.0)
+    assert cb.allow(now=1.5) and cb.state == "half_open"
+    cb.record_failure(now=1.5)           # probe failed: reopen
+    assert cb.state == "open" and cb.opens == 2
+    # cooldown doubled: 2.0s now
+    assert not cb.allow(now=2.5)
+    assert cb.allow(now=3.6)
+    cb.record_success()
+    assert cb.state == "closed"
+    # success resets the cooldown back to base
+    cb.trip(now=10.0)
+    assert not cb.allow(now=10.9)
+    assert cb.allow(now=11.1)
+
+
+def test_breaker_clock_probe_chain_closes_on_success():
+    clock = VirtualClock()
+    healthy = {"v": False}
+    cb = CircuitBreaker()
+    cb.bind(clock, lambda: healthy["v"])
+    cb.trip(clock.now())
+    assert cb.state == "open"
+    clock.advance(1.1)                   # first probe: target still down
+    assert cb.state == "open" and cb.opens == 2
+    healthy["v"] = True
+    clock.advance(2.1)                   # doubled cooldown, second probe
+    assert cb.state == "closed"
+    assert cb.probes == 2
+
+
+def test_breaker_probe_budget_exhausts():
+    clock = VirtualClock()
+    cb = CircuitBreaker(max_probes=3)
+    cb.bind(clock, lambda: False)
+    cb.trip(clock.now())
+    clock.advance(1000.0)                # far past every backoff stage
+    assert cb.probes == 3                # budget spent, chain stopped
+    assert cb.state == "open"
+
+
+def test_breaker_success_cancels_pending_probe():
+    clock = VirtualClock()
+    calls = []
+    cb = CircuitBreaker()
+    cb.bind(clock, lambda: calls.append(1) or True)
+    cb.trip(clock.now())
+    cb.record_success()                  # external recovery before probe
+    clock.advance(50.0)
+    assert calls == [] and cb.state == "closed"
+
+
+# ----------------------------------------------------------- reconnect
+def test_reconnect_clock_mode_backoff_timing():
+    clock = VirtualClock()
+    times = []
+
+    def attempt():
+        times.append(clock.now())
+        return len(times) >= 4           # succeed on the 4th try
+
+    rm = ReconnectManager(attempt, base_delay=0.1, max_delay=0.5,
+                          max_attempts=8, clock=clock)
+    rm.notify_failure()
+    assert not rm.connected and times == []     # nothing runs inline
+    clock.advance(10.0)
+    # 0.1, then doubling 0.2, 0.4, capped 0.5 between attempts
+    np.testing.assert_allclose(times, [0.1, 0.3, 0.7, 1.2])
+    assert rm.connected and rm.attempts == 4
+
+
+def test_reconnect_clock_mode_burst_cap_and_rearm():
+    clock = VirtualClock()
+    rm = ReconnectManager(lambda: False, base_delay=0.1, max_delay=0.2,
+                          max_attempts=3, clock=clock)
+    rm.notify_failure()
+    rm.notify_failure()                  # pending event: not re-armed
+    clock.advance(10.0)
+    assert rm.attempts == 3 and not rm.connected
+    rm.notify_failure()                  # burst spent: a new failure re-arms
+    clock.advance(10.0)
+    assert rm.attempts == 6
+
+
+def test_reconnect_synchronous_mode_unchanged():
+    calls = []
+    rm = ReconnectManager(lambda: calls.append(1) or len(calls) >= 3)
+    rm.notify_failure()                  # seed behaviour: runs inline
+    assert rm.connected and len(calls) == 3
+
+
+def test_reconnect_rejects_wall_clock():
+    from repro.core.clock import SystemClock
+    with pytest.raises(TypeError):
+        ReconnectManager(clock=SystemClock())
+
+
+# ------------------------------------------------------------- injector
+def _pool_with_running(n=2):
+    clock = VirtualClock()
+    pool = ClonePool(clock=clock)
+    pool.provision("main", n, state=CloneState.RUNNING)
+    return clock, pool
+
+
+def test_injector_kill_marks_dead_and_trips_breaker():
+    clock, pool = _pool_with_running()
+    sec = pool.running_secondaries()[0]
+    sec.busy = True
+    inj = FaultInjector(pool, [CloneFault(at=0.5, kind="kill")])
+    inj.arm()
+    inj.arm()                            # idempotent
+    assert inj.next_event_time() == 0.5
+    clock.advance(1.0)
+    assert sec.health is CloneHealth.DEAD
+    assert sec.state is CloneState.POWERED_OFF
+    assert sec.breaker.state == "open"
+    assert not sec.serveable
+    assert inj.stats == {"injected": 1, "kills": 1, "drains": 0,
+                         "slowdowns": 0, "misses": 0, "clone_recoveries": 0}
+    failed = inj.drain_failed()
+    assert len(failed) == 1 and failed[0][0] is sec
+    assert inj.drain_failed() == []      # drained once
+    assert inj.next_event_time() is None
+
+
+def test_injector_revive_needs_probe_to_serve_again():
+    clock, pool = _pool_with_running()
+    sec = pool.running_secondaries()[0]
+    sec.busy = True
+    inj = FaultInjector(pool, [CloneFault(at=0.0, kind="kill",
+                                          duration=2.0)])
+    inj.arm()
+    clock.advance(1.5)                   # probe at ~1.0 fails (still dead)
+    assert sec.health is CloneHealth.DEAD
+    clock.advance(1.0)                   # revival at 2.0: answers pings
+    assert sec.health is CloneHealth.SUSPECT
+    assert not sec.serveable             # breaker still open
+    clock.advance(3.0)                   # next probe promotes it
+    assert sec.health is CloneHealth.HEALTHY
+    assert sec.breaker.state == "closed"
+    assert inj.stats["clone_recoveries"] == 1
+
+
+def test_injector_targets_lowest_cid_busy_secondary_and_cid_pin():
+    clock, pool = _pool_with_running(3)
+    secs = sorted(pool.running_secondaries(), key=lambda c: c.cid)
+    secs[1].busy = secs[2].busy = True
+    inj = FaultInjector(pool, [CloneFault(at=0.0),
+                               CloneFault(at=1.0, cid=secs[2].cid)])
+    inj.arm()
+    clock.advance(0.1)
+    assert secs[1].health is CloneHealth.DEAD     # busy beats idle
+    assert secs[0].health is CloneHealth.HEALTHY
+    clock.advance(1.0)
+    assert secs[2].health is CloneHealth.DEAD     # cid pin
+
+
+def test_injector_miss_when_no_target():
+    clock, pool = _pool_with_running(1)
+    sec = pool.running_secondaries()[0]
+    inj = FaultInjector(pool, [CloneFault(at=0.0, kind="kill"),
+                               CloneFault(at=1.0, kind="kill")])
+    inj.arm()
+    clock.advance(0.5)                   # idle secondary still killable
+    assert sec.health is CloneHealth.DEAD
+    clock.advance(1.0)                   # nothing healthy left: miss
+    assert inj.stats["injected"] == 1 and inj.stats["misses"] == 1
+
+
+def test_injector_slowdown_scales_dispatch_and_clears():
+    clock, pool = _pool_with_running()
+    sec = pool.running_secondaries()[0]
+    sec.busy = True
+    inj = FaultInjector(pool, [CloneFault(at=0.0, kind="slow",
+                                          duration=5.0, factor=4.0)])
+    inj.arm()
+    clock.advance(0.1)
+    assert sec.slowdown == 4.0
+    disp = Dispatcher(pool, clock)
+    t = disp.submit(sec, lambda: 1, (),
+                    executor=lambda c, f, a: (f(*a), 0.05))
+    assert t.venue_seconds == pytest.approx(0.2)  # 0.05 x 4
+    clock.advance(5.1)
+    assert sec.slowdown == 1.0
+    t2 = disp.submit(sec, lambda: 1, (),
+                     executor=lambda c, f, a: (f(*a), 0.05))
+    assert t2.venue_seconds == pytest.approx(0.05)
+
+
+def test_injector_rejects_unknown_kind_and_wall_clock():
+    _, pool = _pool_with_running()
+    with pytest.raises(ValueError):
+        FaultInjector(pool, [CloneFault(at=0.0, kind="explode")])
+    from repro.core.clock import SystemClock
+    with pytest.raises(TypeError):
+        FaultInjector(pool, [], clock=SystemClock())
+
+
+def test_dispatcher_cancel_revokes_completion():
+    clock, pool = _pool_with_running()
+    sec = pool.running_secondaries()[0]
+    disp = Dispatcher(pool, clock)
+    t = disp.submit(sec, lambda: 42, (),
+                    executor=lambda c, f, a: (f(*a), 0.5))
+    assert disp.cancel(t)
+    assert not disp.cancel(t)            # idempotent
+    clock.advance(1.0)
+    assert not t.done and t.cancelled
+    t2 = disp.submit(sec, lambda: 42, (),
+                     executor=lambda c, f, a: (f(*a), 0.5))
+    disp.wait([t2])
+    assert not disp.cancel(t2)           # too late: already completed
+
+
+# -------------------------------------------------------------- serving
+def assert_no_block_leak(handler):
+    """Block conservation on every surviving KV pool: each block's
+    refcount equals the number of slot-table references to it, and
+    free + cached-free + live-referenced == every allocatable block."""
+    for kv in handler._kv_pools.values():
+        refs = np.zeros(kv.num_blocks, np.int64)
+        for slot in range(kv.max_slots):
+            for j in range(int(kv.n_blocks_of[slot])):
+                refs[kv.tables[slot, j]] += 1
+        live = set(np.nonzero(kv.ref)[0].tolist())
+        for b in range(1, kv.num_blocks):
+            assert kv.ref[b] == refs[b], \
+                f"block {b}: ref {kv.ref[b]} != {refs[b]} table references"
+        accounted = (set(kv._free_blocks) | set(kv._cached_free) | live)
+        assert accounted == set(range(1, kv.num_blocks)), \
+            "block leak: free+cached+live != all blocks"
+
+
+def _chaos_handler(faults=None, hedge=0.0, backend=None, spare=True,
+                   **kw):
+    from repro.launch.serve import ClientHandler
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("prompt_pad", 8)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("max_secondaries", 3)
+    kw.setdefault("decode_window", 2)
+    h = ClientHandler(backend or th.FakeBackend(),
+                      executor=lambda c, f, a: (f(*a), 0.05),
+                      faults=faults, hedge_factor=hedge,
+                      hedge_min_samples=4, **kw)
+    if spare:
+        h.pool.provision(h.clone_type, 1, state=CloneState.RUNNING)
+    return h
+
+
+def run_chaos_trace(faults=None, hedge=0.0, *, seed=0, n=12, rate=8.0,
+                    backend=None, vocab=64, new_tokens=10):
+    """Serve one seeded Poisson trace under a fault schedule; returns the
+    observables the chaos tests and the Hypothesis twin both assert on.
+    Deterministic: same (seed, faults, hedge) -> same dict."""
+    h = _chaos_handler(faults=faults, hedge=hedge, backend=backend)
+    reqs = poisson_arrivals(rate, n, seed=seed, prompt_len=8, vocab=vocab,
+                            max_new_tokens=new_tokens, prefix_len=4)
+    rep = h.run(reqs)
+    assert_no_block_leak(h)
+    return {
+        "tokens": {c.rid: tuple(map(int, c.tokens))
+                   for c in rep.completions},
+        "served": len(rep.completions),
+        "offered": n,
+        "injected": rep.faults_injected,
+        "migrated": rep.recoveries_migrated,
+        "restored": rep.recoveries_restored,
+        "breaker_opens": rep.breaker_opens,
+        "hedges_fired": rep.hedges_fired,
+        "hedge_wins": rep.hedge_wins,
+        "makespan_s": rep.makespan_s,
+        "p99_latency_s": rep.p99_latency_s,
+        "cost_usd": rep.cost_usd,
+    }
+
+
+def test_chaos_drain_recovers_by_migration_token_identical():
+    base = run_chaos_trace()
+    assert base["injected"] == 0 and base["served"] == 12
+    out = run_chaos_trace([CloneFault(at=0.5 * base["makespan_s"],
+                                      kind="drain", duration=2.0)])
+    assert out["injected"] == 1
+    assert out["migrated"] >= 1          # KV moved to a survivor
+    assert out["breaker_opens"] >= 1
+    assert out["served"] == 12
+    assert out["tokens"] == base["tokens"]
+
+
+def test_chaos_kill_recovers_by_restore_token_identical():
+    base = run_chaos_trace()
+    out = run_chaos_trace([CloneFault(at=0.5 * base["makespan_s"],
+                                      kind="kill", duration=2.0)])
+    assert out["injected"] == 1
+    assert out["restored"] >= 1          # re-prefilled on a survivor
+    assert out["migrated"] == 0          # killed memory is not salvageable
+    assert out["served"] == 12
+    assert out["tokens"] == base["tokens"]
+
+
+def test_chaos_permanent_kill_still_serves_everything():
+    """duration=0: the clone never comes back; the remaining fleet must
+    still complete every request."""
+    base = run_chaos_trace()
+    out = run_chaos_trace([CloneFault(at=0.5 * base["makespan_s"],
+                                      kind="kill", duration=0.0)])
+    assert out["served"] == 12 and out["tokens"] == base["tokens"]
+
+
+def test_chaos_real_backend_both_paths_token_identical():
+    """The real reduced LM backend: recovery must reproduce the exact
+    KV-dependent decode continuation — migration moves real cache
+    content across pools, restore re-prefills it — bit-identically."""
+    backend = th._chunk_lm_backend()
+    vocab = backend.cfg.vocab_size
+    base = run_chaos_trace(backend=backend, vocab=vocab)
+    assert base["served"] == 12
+    drain = run_chaos_trace([CloneFault(at=0.5 * base["makespan_s"],
+                                        kind="drain", duration=2.0)],
+                            backend=backend, vocab=vocab)
+    kill = run_chaos_trace([CloneFault(at=0.5 * base["makespan_s"],
+                                       kind="kill", duration=2.0)],
+                           backend=backend, vocab=vocab)
+    assert drain["migrated"] >= 1 and kill["restored"] >= 1
+    assert drain["tokens"] == base["tokens"]
+    assert kill["tokens"] == base["tokens"]
+
+
+def test_hedged_dispatch_wins_race_and_bills_once():
+    base = run_chaos_trace()
+    span = base["makespan_s"]
+    slow = lambda: [CloneFault(at=0.6 * span, kind="slow",  # noqa: E731
+                               duration=0.4 * span, factor=40.0)]
+    unhedged = run_chaos_trace(slow())
+    hedged = run_chaos_trace(slow(), hedge=2.0)
+    assert unhedged["hedges_fired"] == 0
+    assert hedged["hedges_fired"] >= 1 and hedged["hedge_wins"] >= 1
+    # the winner's tokens are used and identical to the straggler's
+    assert hedged["tokens"] == unhedged["tokens"] == base["tokens"]
+    # the race bounds the straggler's tail latency
+    assert hedged["p99_latency_s"] < unhedged["p99_latency_s"]
+    # no double-billing: the $-meter runs on clone-seconds, and racing a
+    # duplicate on an already-running spare must not inflate the bill
+    # beyond the unhedged run's (shorter makespan: it can only shrink)
+    assert hedged["cost_usd"] <= unhedged["cost_usd"] + 1e-9
+
+
+def test_hedge_loser_is_cancelled():
+    """Count live dispatch events: every submitted task either completed
+    or was cancelled — a lost hedge must not fire its completion."""
+    base = run_chaos_trace()
+    span = base["makespan_s"]
+    h = _chaos_handler(faults=[CloneFault(at=0.6 * span, kind="slow",
+                                          duration=0.4 * span,
+                                          factor=40.0)], hedge=2.0)
+    submitted = []
+    orig = h.dispatcher.submit
+
+    def spy(*a, **k):
+        t = orig(*a, **k)
+        submitted.append(t)
+        return t
+
+    h.dispatcher.submit = spy
+    reqs = poisson_arrivals(8.0, 12, seed=0, prompt_len=8, vocab=64,
+                            max_new_tokens=10, prefix_len=4)
+    h.run(reqs)
+    assert h.hedges_fired >= 1
+    hedges = [t for t in submitted if t.label == "hedge"]
+    assert hedges, "no hedge task submitted"
+    for t in submitted:
+        assert t.done or t.cancelled, f"task {t.label!r} left dangling"
+    # every resolved race cancelled exactly one of the pair
+    cancelled = sum(t.cancelled for t in submitted)
+    assert cancelled >= len(hedges) \
+        or h.hedge_wins == len(hedges)   # losers were the originals
+
+
+def test_faults_require_paged_kv():
+    from repro.launch.serve import ClientHandler
+    with pytest.raises(ValueError):
+        ClientHandler(th.FakeBackend(), kv="contiguous",
+                      faults=[CloneFault(at=1.0)],
+                      executor=lambda c, f, a: (f(*a), 0.05))
+    with pytest.raises(ValueError):
+        ClientHandler(th.FakeBackend(), kv="contiguous", hedge_factor=2.0,
+                      executor=lambda c, f, a: (f(*a), 0.05))

@@ -394,6 +394,11 @@ class FakeBackend:
     def copy_fn(self, donate=False):
         return lambda pool, src, dst: pool
 
+    def migrate_fn(self):
+        # cross-pool KV copy: content is not modeled, the host-side
+        # token carry (out[-1]) is what keeps decode deterministic
+        return lambda dst, src, sids, dids, sslots, dslots: dst
+
 
 def _make_handler(**kw):
     from repro.launch.serve import ClientHandler

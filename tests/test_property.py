@@ -308,6 +308,46 @@ def test_chunked_prefill_token_identical_to_stepwise(seed, prefix_lens,
     tm._check_chunked_vs_stepwise(prefix_lens, n_tok, chunk, seed=seed)
 
 
+# ---------------------------------------------------------------------------
+# fault-injected serving (ADR-006)
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 7),
+       hedge=st.sampled_from([0.0, 2.0]),
+       faults=st.lists(
+           st.tuples(st.floats(min_value=0.05, max_value=0.95),
+                     st.sampled_from(["kill", "drain", "slow"]),
+                     st.sampled_from([0.0, 0.5, 2.0]),
+                     st.sampled_from([4.0, 40.0])),
+           min_size=1, max_size=3))
+def test_fault_recovery_conserves_requests_and_blocks(seed, hedge, faults):
+    """ADR-006 property: for any schedule of kill/drain/slow faults (any
+    times, durations, slowdown factors, hedging on or off), the handler
+    loses no request, leaks no KV block, emits tokens bit-identical to
+    the faultless run, and keeps its recovery counters consistent.
+    (``run_chaos_trace`` asserts block conservation internally; its
+    deterministic twin lives in test_faults.py so the invariant is still
+    exercised where hypothesis is not installed.)"""
+    import test_faults as tf
+    from repro.core.faults import CloneFault
+    base = tf.run_chaos_trace(seed=seed)
+    span = base["makespan_s"]
+    sched = [CloneFault(at=frac * span, kind=kind, duration=dur,
+                        factor=factor)
+             for frac, kind, dur, factor in faults]
+    out = tf.run_chaos_trace(sched, hedge=hedge, seed=seed)
+    assert out["served"] == out["offered"] == base["served"]   # none lost
+    assert out["tokens"] == base["tokens"]     # recovery is latency-only
+    assert out["injected"] <= len(sched)
+    assert out["hedge_wins"] <= out["hedges_fired"]
+    if hedge == 0.0:
+        assert out["hedges_fired"] == 0
+    if not any(k == "drain" for _, k, _, _ in faults):
+        assert out["migrated"] == 0            # only drains salvage KV
+
+
 @settings(deadline=None, max_examples=5)
 @given(seed=st.integers(0, 2 ** 31 - 1), chunk=st.sampled_from([2, 4, 8]))
 def test_chunked_serving_preemption_invariant(seed, chunk):

@@ -50,6 +50,18 @@ ISSUE 6 acceptance (chunked prefill + mixed dispatch, ADR-005):
   TPOT no worse than the no-join baseline under mid-stream joins, while
   the serial prefill-then-decode path degrades it, with every request
   served in all three runs.
+
+ISSUE 7 acceptance (fault-injected serving, ADR-006):
+
+- every ``fault_sweep`` row serves every request with tokens
+  **bit-identical** to the faultless baseline — a clone death is a
+  latency event, never a correctness event;
+- the ``drain`` scenario recovers via KV **migration** to a survivor,
+  the ``kill`` scenario via prefix-accelerated **restore**, each trips a
+  circuit breaker, and p99 stays within ``_FAULT_P99_FACTOR``x of the
+  faultless run;
+- the ``slow_hedged`` scenario fires and wins >= 1 hedged duplicate and
+  its p99 is no worse than the unhedged straggler run.
 """
 from __future__ import annotations
 
@@ -281,6 +293,80 @@ def _check_mixed(doc: dict) -> list:
     return bad
 
 
+_FAULT_ROW_KEYS = ("scenario", "faults", "offered", "served",
+                   "runtime_errors", "p50_latency_s", "p99_latency_s",
+                   "faults_injected", "recoveries_migrated",
+                   "recoveries_restored", "breaker_opens", "hedges_fired",
+                   "hedge_wins", "tokens_identical_to_faultless")
+# p99 under a mid-run clone death must stay within this factor of the
+# faultless run: recovery (migration or prefix-accelerated restore) is a
+# bounded latency event, not a retry storm
+_FAULT_P99_FACTOR = 4.0
+
+
+def _check_faults(doc: dict) -> list:
+    """``fault_sweep`` violations (ISSUE 7 acceptance, ADR-006)."""
+    bad = []
+    sweep = doc.get("fault_sweep")
+    if not sweep:                   # optional: --fault-requests 0 disables
+        return bad
+    by = {}
+    for i, row in enumerate(sweep):
+        missing = [k for k in _FAULT_ROW_KEYS if k not in row]
+        if missing:
+            return bad + [f"fault_sweep[{i}]: missing {missing}"]
+        by[row["scenario"]] = row
+        if row["runtime_errors"] != 0:
+            bad.append(f"fault_sweep.{row['scenario']}: raised — recovery "
+                       "must absorb clone death, never crash")
+        if row["served"] != row["offered"]:
+            bad.append(f"fault_sweep.{row['scenario']}: lost requests "
+                       f"({row['served']}/{row['offered']}) — no request "
+                       "may be lost to a fault")
+        if not row["tokens_identical_to_faultless"]:
+            bad.append(f"fault_sweep.{row['scenario']}: output diverged "
+                       "from the faultless run — recovery must be "
+                       "token-identical")
+    for k in ("baseline", "drain", "kill", "mixed", "slow_unhedged",
+              "slow_hedged"):
+        if k not in by:
+            return bad + [f"fault_sweep: missing scenario {k!r}"]
+    base_p99 = by["baseline"]["p99_latency_s"]
+    for k in ("drain", "kill", "mixed"):
+        row = by[k]
+        if row["faults_injected"] < 1:
+            bad.append(f"fault_sweep.{k}: no fault actually injected")
+        if row["recoveries_migrated"] + row["recoveries_restored"] < 1:
+            bad.append(f"fault_sweep.{k}: fault injected but nothing "
+                       "recovered — in-flight requests were not on the "
+                       "dead clone or recovery never ran")
+        if row["breaker_opens"] < 1:
+            bad.append(f"fault_sweep.{k}: clone death never tripped a "
+                       "circuit breaker")
+        if row["p99_latency_s"] > _FAULT_P99_FACTOR * base_p99 + 1e-9:
+            bad.append(f"fault_sweep.{k}: p99 {row['p99_latency_s']} "
+                       f"exceeds {_FAULT_P99_FACTOR}x the faultless "
+                       f"{base_p99} — recovery latency is unbounded")
+    if by["drain"]["recoveries_migrated"] < 1:
+        bad.append("fault_sweep.drain: graceful death never migrated KV "
+                   "to a survivor")
+    if by["kill"]["recoveries_restored"] < 1:
+        bad.append("fault_sweep.kill: fail-stop never restored a request "
+                   "via re-prefill")
+    hedged, unhedged = by["slow_hedged"], by["slow_unhedged"]
+    if hedged["hedges_fired"] < 1 or hedged["hedge_wins"] < 1:
+        bad.append("fault_sweep.slow_hedged: hedged dispatch never fired/"
+                   "won against the injected straggler")
+    if unhedged["hedges_fired"] != 0:
+        bad.append("fault_sweep.slow_unhedged: hedges fired with "
+                   "hedge_factor=0")
+    if hedged["p99_latency_s"] > unhedged["p99_latency_s"] + 1e-9:
+        bad.append(f"fault_sweep: hedging raised p99 "
+                   f"({hedged['p99_latency_s']} vs unhedged "
+                   f"{unhedged['p99_latency_s']})")
+    return bad
+
+
 def check_serving(path: Path) -> list:
     """BENCH_serving.json violations (empty == pass)."""
     bad = []
@@ -345,6 +431,7 @@ def check_serving(path: Path) -> list:
                        "actually exercising pool pressure")
     bad += _check_fleet(doc)
     bad += _check_mixed(doc)
+    bad += _check_faults(doc)
     return bad
 
 
