@@ -34,6 +34,17 @@ A fourth sweep measures the ADR-005 unified mixed prefill/decode dispatch:
   the fused path must hold TPOT at the no-join baseline,
   token-identically.
 
+A sixth sweep measures the ADR-007 SLO-aware gateway:
+
+- **overload sweep** (``--overload-requests``, ``--link``): one
+  multi-tenant trace per offered-load multiple of the fleet's capacity
+  ceiling, served ungated (unbounded queue) vs through the
+  ``StreamingGateway``; past ~1.5x capacity the ungated p99 TTFT and
+  queue depth diverge while the gateway holds interactive SLO
+  attainment >= 95% by shedding only batch work, token-identically for
+  everything admitted; a final pair adds a mid-run clone kill (ADR-006
+  injector) under overload.
+
 A third dedicated sweep measures the ADR-004 heterogeneous fleet:
 
 - **fleet sweep** (``--fleet``, ``--clone-type``): cost-vs-latency Pareto
@@ -566,6 +577,150 @@ def run_fault_sweep(backend, *, n_requests: int = 12, prompt_len: int = 8,
     return rows
 
 
+OVERLOAD_LINKS = ("wifi-local", "wifi-internet", "3g")
+OVERLOAD_TENANTS = ("premium", "bulk", "research")
+
+
+def overload_trace(vocab: int, *, n: int, rate: float,
+                   new_tokens: int = 16, prompt_len: int = 6,
+                   deadline_s: float = 3.0, seed: int = 0):
+    """Multi-tenant Poisson trace for the overload sweep (ADR-007).
+
+    Every 4th request is **interactive** (tenant ``premium``, carries an
+    end-to-end deadline); the rest is deadline-less **batch** split
+    between ``bulk`` and ``research`` (``research`` at lower priority —
+    the shed victim ordering is observable).  Every 5th batch request
+    repeats one fixed prompt so the gateway's exact-match response cache
+    has real duplicates to short-circuit."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n)
+    dup_prompt = rng.integers(1, vocab, size=prompt_len).astype(np.int32)
+    reqs, t = [], 0.0
+    for i in range(n):
+        t += gaps[i]
+        if i % 4 == 0:
+            slo, deadline, tenant, prio = ("interactive", deadline_s,
+                                           "premium", 2)
+        else:
+            slo, deadline = "batch", None
+            tenant = "bulk" if i % 2 else "research"
+            prio = 1 if tenant == "bulk" else 0
+        prompt = (dup_prompt if (slo == "batch" and i % 5 == 0)
+                  else rng.integers(1, vocab,
+                                    size=prompt_len).astype(np.int32))
+        reqs.append(ServeRequest(i, prompt, max_new_tokens=new_tokens,
+                                 arrival_t=t, tenant=tenant, slo=slo,
+                                 deadline_s=deadline, priority=prio))
+    return reqs
+
+
+def run_overload_sweep(backend, *, n_requests: int = 60,
+                       overs=(0.4, 1.6, 3.0), new_tokens: int = 16,
+                       prompt_len: int = 6, max_batch: int = 2,
+                       max_secondaries: int = 1, deadline_s: float = 3.0,
+                       link: str = "wifi-local", seed: int = 0):
+    """Overload sweep: ungated baseline vs SLO-aware gateway (ADR-007).
+
+    One deterministic trace per offered-load multiple (fractions of the
+    fleet's token-throughput ceiling with the fixed-cost 0.05 s
+    executor), each served twice: **ungated** (a practically unbounded
+    admission queue — everything is accepted and waits) and **gated**
+    (the :class:`~repro.core.gateway.StreamingGateway` in front).  Past
+    ~1.5x capacity the ungated p99 TTFT and queue depth diverge with the
+    backlog while the gateway holds interactive SLO attainment via
+    class-priority release, predictive admission, and batch-only
+    shedding — serving token-identical outputs for everything it admits
+    (greedy decode: scheduling changes timing, never content).  A final
+    pair replays the 1.6x trace with a mid-run clone **kill** (PR 7
+    injector; the ``on_fire`` hook tightens admission at the fault
+    instant) on a one-spare-larger fleet — graceful degradation under
+    fault + overload, gated attainment above the ungated faulted
+    baseline.  ``link`` selects the client link profile for both the
+    handler's transfer model and the gateway's admission estimator."""
+    from repro.core.faults import CloneFault
+    from repro.core.gateway import StreamingGateway, TenantPolicy
+    from repro.core.profilers import NetworkProfiler
+
+    def executor(clone, fn, args):
+        return fn(*args), 0.05
+
+    # token-throughput ceiling of the faultless fleet: every clone's
+    # max_batch slots emit one token per 0.05 s dispatch
+    slots = max_batch * (1 + max_secondaries)
+    capacity_rps = slots / (0.05 * new_tokens)
+
+    def gateway():
+        return StreamingGateway(
+            tenants={"premium": TenantPolicy(weight=4.0),
+                     "bulk": TenantPolicy(weight=1.0, rate=64.0, burst=64.0),
+                     "research": TenantPolicy(weight=1.0, rate=64.0,
+                                              burst=64.0)},
+            max_backlog_tokens=8 * new_tokens, quantum=new_tokens,
+            retry_base_s=0.4, retry_max=2, link=link,
+            net=NetworkProfiler(link), seed=seed)
+
+    def run(rate, gated, faults=None, secondaries=max_secondaries):
+        handler = ClientHandler(
+            backend, link=link, max_batch=max_batch, prompt_pad=8,
+            block_size=4, max_secondaries=secondaries, decode_window=1,
+            queue_depth=(2 * max_batch if gated else 100 * n_requests),
+            executor=executor, gateway=gateway() if gated else None,
+            faults=list(faults) if faults else None)
+        reqs = overload_trace(backend.cfg.vocab_size, n=n_requests,
+                              rate=rate, new_tokens=new_tokens,
+                              prompt_len=prompt_len, deadline_s=deadline_s,
+                              seed=seed)
+        rep = handler.run(reqs, drain_idle_s=PAUSE_IDLE_TTL + 5.0)
+        toks = {c.rid: list(map(int, c.tokens)) for c in rep.completions}
+        return rep, toks
+
+    def row(scenario, rate, rep, toks, base_toks):
+        ttfts = [c.ttft_s for c in rep.completions] or [0.0]
+        return {
+            "scenario": scenario,
+            "rate_rps": rate,
+            "over": round(rate / capacity_rps, 3),
+            "gated": "gated" in scenario,
+            "offered": n_requests,
+            "served": len(rep.completions),
+            "p50_ttft_s": float(np.percentile(ttfts, 50)),
+            "p99_ttft_s": float(np.percentile(ttfts, 99)),
+            "peak_queue_depth": rep.peak_queue_depth,
+            "slo_attainment": dict(rep.slo_attainment),
+            "goodput_tps": rep.goodput_tps,
+            "shed": rep.gateway_shed,
+            "shed_by_slo": dict(rep.shed_by_slo),
+            "rejected": rep.gateway_rejected,
+            "retries": rep.gateway_retries,
+            "cache_hits": rep.cache_hits,
+            "faults_injected": rep.faults_injected,
+            "tokens_identical_to_ungated": all(
+                base_toks.get(r) == t for r, t in toks.items()),
+        }
+
+    rows = []
+    for over in overs:
+        rate = round(over * capacity_rps, 3)
+        rep_u, toks_u = run(rate, gated=False)
+        rep_g, toks_g = run(rate, gated=True)
+        rows.append(row("ungated", rate, rep_u, toks_u, toks_u))
+        rows.append(row("gated", rate, rep_g, toks_g, toks_u))
+    # fault + overload: replay the mid sweep point with one clone killed
+    # mid-run on a one-spare-larger fleet (post-fault capacity matches
+    # the faultless sweep fleet, so the comparison isolates the gateway)
+    rate = round(overs[1] * capacity_rps, 3)
+    faults = [CloneFault(at=1.5, kind="kill")]
+    rep_u, toks_u = run(rate, gated=False, faults=faults,
+                        secondaries=max_secondaries + 1)
+    rep_g, toks_g = run(rate, gated=True, faults=faults,
+                        secondaries=max_secondaries + 1)
+    rows.append(row("fault_ungated", rate, rep_u, toks_u, toks_u))
+    rows.append(row("fault_gated", rate, rep_g, toks_g, toks_u))
+    return {"link": link, "capacity_rps": capacity_rps,
+            "new_tokens": new_tokens, "deadline_s": deadline_s,
+            "rows": rows}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -604,6 +759,14 @@ def main() -> None:
                          "empty list to disable the sweep)")
     ap.add_argument("--fault-requests", type=int, default=12,
                     help="requests for the fault-injection sweep "
+                         "(0 disables the sweep)")
+    ap.add_argument("--link", default="wifi-local",
+                    choices=OVERLOAD_LINKS,
+                    help="client link profile (core/venues.py::LINKS) for "
+                         "the overload sweep's transfer model + the "
+                         "gateway's link-aware admission estimator")
+    ap.add_argument("--overload-requests", type=int, default=60,
+                    help="requests per overload-sweep run "
                          "(0 disables the sweep)")
     ap.add_argument("--json", default="BENCH_serving.json",
                     help="machine-readable output path ('' to skip)")
@@ -801,6 +964,58 @@ def main() -> None:
                 <= by["slow_unhedged"]["p99_latency_s"] + 1e-9), \
             "hedging failed to bound the straggler's p99"
 
+    # --- ADR-007 sweep: overload, gated vs ungated ----------------------
+    overload_payload = None
+    if args.overload_requests > 0:
+        overload_payload = run_overload_sweep(
+            sweep_backend, n_requests=args.overload_requests,
+            link=args.link, seed=args.seed)
+        cap = overload_payload["capacity_rps"]
+        print(f"\noverload sweep (link={args.link}, capacity "
+              f"~{cap:.1f} req/s, fixed-cost executor):")
+        for r in overload_payload["rows"]:
+            slo_i = r["slo_attainment"].get("interactive", 1.0)
+            print(f"  {r['scenario']:>13s} {r['over']:.1f}x "
+                  f"served {r['served']:>2d}/{r['offered']} "
+                  f"p99_ttft={r['p99_ttft_s']:.2f}s "
+                  f"peakq={r['peak_queue_depth']:>3d} "
+                  f"slo_i={slo_i:.2f} good={r['goodput_tps']:.0f}tok/s "
+                  f"shed={r['shed']} rej={r['rejected']} "
+                  f"cache={r['cache_hits']} retries={r['retries']} "
+                  f"identical={r['tokens_identical_to_ungated']}")
+        by = {(r["scenario"], r["over"]): r
+              for r in overload_payload["rows"]}
+        ungated = sorted((r for r in overload_payload["rows"]
+                          if r["scenario"] == "ungated"),
+                         key=lambda r: r["over"])
+        # baseline divergence: p99 TTFT and queue depth grow with load
+        for lo, hi_r in zip(ungated, ungated[1:]):
+            assert hi_r["p99_ttft_s"] > 1.3 * lo["p99_ttft_s"], \
+                "ungated p99 TTFT did not diverge with offered load"
+            assert hi_r["peak_queue_depth"] > lo["peak_queue_depth"], \
+                "ungated queue depth did not grow with offered load"
+        for r in overload_payload["rows"]:
+            if not r["gated"]:
+                continue
+            assert "interactive" not in r["shed_by_slo"], \
+                f"gateway shed interactive work ({r['scenario']})"
+            assert r["tokens_identical_to_ungated"], \
+                f"gated run diverged from ungated tokens ({r['scenario']})"
+            if r["scenario"] == "gated":
+                assert r["cache_hits"] >= 1, \
+                    "response cache never short-circuited a duplicate"
+            if r["scenario"] == "gated" and r["over"] >= 1.5:
+                assert r["slo_attainment"].get("interactive", 0) >= 0.95, \
+                    f"gateway lost the interactive SLO at {r['over']}x"
+                twin = by[("ungated", r["over"])]
+                assert r["goodput_tps"] >= twin["goodput_tps"], \
+                    f"gating lost goodput at {r['over']}x overload"
+        fg, fu = by[("fault_gated", ungated[1]["over"])], \
+            by[("fault_ungated", ungated[1]["over"])]
+        assert (fg["slo_attainment"].get("interactive", 0)
+                >= fu["slo_attainment"].get("interactive", 1) + 0.15), \
+            "fault+overload: gateway not above the ungated faulted baseline"
+
     if args.json:
         payload = {
             "benchmark": "serving_load",
@@ -820,6 +1035,8 @@ def main() -> None:
             "fleet_sweep": fleet_payload,
             "mixed_dispatch": mixed_payload,
             "fault_sweep": fault_rows,
+            "link": args.link,
+            "overload_sweep": overload_payload,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

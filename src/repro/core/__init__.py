@@ -12,6 +12,8 @@ from repro.core.energy import (PhoneState, PowerTutorModel, TpuCoeffs,
                                TpuEnergyModel)
 from repro.core.faults import (CloneFault, FaultInjector, FaultPlan,
                                ReconnectManager, VenueFailure)
+from repro.core.gateway import (AdmissionEstimator, ResponseCache,
+                                StreamingGateway, TenantPolicy, TokenBucket)
 from repro.core.parallel import (ParallelResult, Parallelizer, split_batch,
                                  split_range)
 from repro.core.policy import (Policy, Prediction, placement_key,
@@ -36,7 +38,9 @@ __all__ = [
     "ExecutionController", "ExecutionResult", "CloneTask", "Dispatcher",
     "PhoneState", "PowerTutorModel", "TpuCoeffs", "TpuEnergyModel",
     "CloneFault", "FaultInjector",
-    "FaultPlan", "ReconnectManager", "VenueFailure", "ParallelResult",
+    "FaultPlan", "ReconnectManager", "VenueFailure",
+    "AdmissionEstimator", "ResponseCache", "StreamingGateway",
+    "TenantPolicy", "TokenBucket", "ParallelResult",
     "Parallelizer", "split_batch", "split_range", "Policy", "Prediction",
     "placement_key", "should_offload",
     "DeviceProfiler", "NetworkProfiler", "ProgramProfiler",

@@ -253,13 +253,18 @@ class ClonePool:
 
     def __init__(self, link_name: str = "wifi-local",
                  clock: Optional[Callable[[], float]] = None,
-                 max_clones: int = 64, tpu: bool = False):
+                 max_clones: int = 64, tpu: bool = False,
+                 breaker_kwargs: Optional[Dict[str, float]] = None):
         # one injected timeline: a clock object, a bare callable (tests), or
         # None for a fresh deterministic VirtualClock
         self.clock = ensure_clock(clock)
         self.link = LINKS[link_name]
         self.max_clones = max_clones
         self.tpu = tpu
+        # non-default CircuitBreaker ctor args (e.g. max_open_seconds,
+        # max_probes) applied to every clone this pool creates — must be
+        # set before the primary below
+        self.breaker_kwargs = dict(breaker_kwargs or {})
         self._ids = itertools.count()
         self.clones: List[Clone] = []
         self.stats = {"resumes": 0, "boots": 0, "pauses": 0, "offs": 0,
@@ -282,6 +287,8 @@ class ClonePool:
         ctype = CLONE_TYPES[type_name]
         clone = Clone(next(self._ids), ctype, self._make_spec(ctype),
                       is_primary=primary, last_used=self.clock())
+        if self.breaker_kwargs:
+            clone.breaker = CircuitBreaker(**self.breaker_kwargs)
         self.clones.append(clone)
         return clone
 

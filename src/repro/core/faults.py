@@ -170,12 +170,17 @@ class FaultInjector:
     """
 
     def __init__(self, pool: ClonePool, faults: List[CloneFault],
-                 clock=None):
+                 clock=None, on_fire=None):
         for f in faults:
             if f.kind not in FAULT_KINDS:
                 raise ValueError(f"unknown fault kind {f.kind!r}; "
                                  f"expected one of {FAULT_KINDS}")
         self.pool = pool
+        #: optional ``(clone, fault) -> None`` callback invoked at the
+        #: instant a kill/drain lands — capacity-loss signal for
+        #: admission control (the gateway tightens before the serving
+        #: loop's next fleet census)
+        self.on_fire = on_fire
         self.clock = pool.clock if clock is None else ensure_clock(clock)
         if not getattr(self.clock, "virtual", False):
             raise TypeError("FaultInjector schedules need a VirtualClock")
@@ -249,6 +254,8 @@ class FaultInjector:
             # is standing capacity — it stays billed but health-gated
             self.pool.power_off(clone)
         self.failed.append((clone, f))
+        if self.on_fire is not None:
+            self.on_fire(clone, f)
         if f.duration > 0:
             self.clock.schedule(f.duration,
                                 functools.partial(self._revive, clone))

@@ -61,6 +61,13 @@ class ServeRequest:
     tokens already emitted so a restore resumes instead of restarting,
     ``first_token_t`` preserves the client-visible TTFT, and
     ``preemptions`` counts how often this request was evicted.
+
+    The SLO fields are read by the gateway (ADR-007): ``slo`` classes
+    the request ("interactive" vs "batch"), ``deadline_s`` is a relative
+    end-to-end latency target fixed at arrival (None = best-effort),
+    ``token_ts`` carries streamed delivery timestamps across preempt /
+    restore so TPOT survives eviction, and ``retries`` counts
+    Retry-After replays of a shed request.
     """
 
     rid: int
@@ -73,11 +80,19 @@ class ServeRequest:
     first_token_t: Optional[float] = None
     preemptions: int = 0
     tenant: Optional[str] = None     # multi-tenant demand bucketing
+    slo: str = "batch"               # SLO class: "interactive" | "batch"
+    deadline_s: Optional[float] = None   # latency target (relative)
+    token_ts: List[float] = dataclasses.field(default_factory=list)
+    retries: int = 0                 # gateway Retry-After replays
 
 
 @dataclasses.dataclass
 class ServeCompletion:
-    """A finished request with its client-visible timeline stamps."""
+    """A finished request with its client-visible timeline stamps.
+
+    ``token_ts`` holds per-token streamed delivery times (same length as
+    ``tokens``), ``cached`` marks responses served from the gateway's
+    response cache without touching the fleet."""
 
     rid: int
     tokens: List[int]
@@ -85,6 +100,11 @@ class ServeCompletion:
     first_token_t: float
     done_t: float
     venue: str
+    tenant: Optional[str] = None
+    slo: str = "batch"
+    deadline_s: Optional[float] = None
+    token_ts: List[float] = dataclasses.field(default_factory=list)
+    cached: bool = False
 
     @property
     def latency_s(self) -> float:
@@ -95,6 +115,23 @@ class ServeCompletion:
     def ttft_s(self) -> float:
         """Time to first token: arrival to the first emitted token."""
         return self.first_token_t - self.arrival_t
+
+    @property
+    def tpot_s(self) -> float:
+        """Mean time per output token after the first, from streamed
+        delivery stamps (0.0 for single-token or unstamped replies)."""
+        n = len(self.tokens)
+        if n > 1 and len(self.token_ts) == n:
+            return (self.token_ts[-1] - self.token_ts[0]) / (n - 1)
+        if n > 1:
+            return (self.done_t - self.first_token_t) / (n - 1)
+        return 0.0
+
+    @property
+    def met_deadline(self) -> bool:
+        """True when the request had no deadline or finished inside it."""
+        return (self.deadline_s is None
+                or self.latency_s <= self.deadline_s + 1e-9)
 
 
 class AdmissionQueue:

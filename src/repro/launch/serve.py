@@ -77,9 +77,10 @@ from repro.core import (ClonePool, ExecutionController, Policy,
                         RemoteableMethod, TpuEnergyModel)
 from repro.core.clock import VirtualClock
 from repro.core.clones import (CLONE_TYPES, KV_SCALE_BY_CLONE_TYPE,
-                               PAUSE_IDLE_TTL)
+                               PAUSE_IDLE_TTL, CircuitBreaker)
 from repro.core.dispatch import Dispatcher
 from repro.core.faults import CloneFault, FaultInjector
+from repro.core.gateway import StreamingGateway
 from repro.core.scheduler import (AdmissionQueue, FleetAutoscaler,
                                   PlacementEngine, ServeCompletion,
                                   ServeRequest, SlotLedger, poisson_arrivals)
@@ -500,6 +501,7 @@ class _Cohort:
     plen: int
     outs: List[List[int]] = dataclasses.field(default_factory=list)
     first_token_t: List[float] = dataclasses.field(default_factory=list)
+    token_ts: List[List[float]] = dataclasses.field(default_factory=list)
     cache: object = None
     tok: object = None
     step: int = 0
@@ -894,11 +896,25 @@ class KVBlockPool:
 
 @dataclasses.dataclass
 class _Slot:
-    """One request occupying one decode slot of a :class:`_SlotEngine`."""
+    """One request occupying one decode slot of a :class:`_SlotEngine`.
+
+    ``token_ts`` mirrors ``out``: the streamed delivery timestamp of each
+    emitted token (window folds interpolate within the dispatch interval
+    — ADR-007 per-tenant TTFT/TPOT)."""
 
     req: ServeRequest
     out: List[int]
     first_token_t: float = 0.0
+    token_ts: List[float] = dataclasses.field(default_factory=list)
+
+
+def _carried_ts(req: ServeRequest, n: int) -> List[float]:
+    """Delivery stamps carried across preempt/migrate/restore, clamped
+    to ``n`` tokens and padded with the TTFT stamp when a legacy carrier
+    did not record them."""
+    ts = list(req.token_ts[:n])
+    pad = req.first_token_t if req.first_token_t is not None else 0.0
+    return ts + [pad] * (n - len(ts))
 
 
 class _SlotEngine:
@@ -1069,6 +1085,30 @@ class ServeReport:
     hedges_fired: int = 0
     hedge_wins: int = 0
     breaker_opens: int = 0
+    # gateway SLO telemetry (ADR-007): ``slo_attainment`` maps SLO class
+    # -> fraction of *offered* requests in that class that were served
+    # inside their deadline (no-deadline completions count as met;
+    # gateway-rejected/shed/dropped work counts as missed — honesty under
+    # overload), ``goodput_tps`` counts only deadline-meeting delivered
+    # tokens per second (cache hits included: they are real deliveries),
+    # ``gateway_shed``/``gateway_rejected`` the bounded-backlog evictions
+    # and predictive up-front rejections, ``gateway_retries`` scheduled
+    # Retry-After replays, ``cache_hits`` responses served from the
+    # gateway's exact-match LRU, ``shed_by_slo`` sheds per class (must
+    # never contain "interactive"), ``per_tenant`` served/p50 TTFT/p50
+    # TPOT per tenant, ``peak_queue_depth`` the deepest handler admission
+    # queue observed (the divergence metric for ungated overload)
+    slo_attainment: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    goodput_tps: float = 0.0
+    gateway_shed: int = 0
+    gateway_rejected: int = 0
+    gateway_retries: int = 0
+    cache_hits: int = 0
+    shed_by_slo: Dict[str, int] = dataclasses.field(default_factory=dict)
+    per_tenant: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
+    peak_queue_depth: int = 0
 
     def summary(self) -> str:
         """One-line digest (documented in docs/benchmarks.md)."""
@@ -1114,7 +1154,10 @@ class ClientHandler:
                  faults: Optional[List[CloneFault]] = None,
                  hedge_factor: float = 0.0,
                  hedge_quantile: float = 0.95,
-                 hedge_min_samples: int = 8):
+                 hedge_min_samples: int = 8,
+                 gateway: Optional[StreamingGateway] = None,
+                 breaker_max_open_s: Optional[float] = None,
+                 breaker_max_probes: Optional[int] = None):
         if kv not in ("paged", "contiguous"):
             raise ValueError(f"kv must be 'paged' or 'contiguous': {kv!r}")
         if faults and kv != "paged":
@@ -1168,6 +1211,13 @@ class ClientHandler:
         self.decode_window = decode_window
         self.donate_kv = donate_kv
         self.backend = backend
+        # breaker tuning (satellite of ADR-007): custom cooldown cap /
+        # probe-chain cap for every clone the pool creates
+        breaker_kwargs = {}
+        if breaker_max_open_s is not None:
+            breaker_kwargs["max_open_seconds"] = breaker_max_open_s
+        if breaker_max_probes is not None:
+            breaker_kwargs["max_probes"] = breaker_max_probes
         # one timeline: adopt a supplied pool's clock (TTL accounting and
         # dispatch must share it), otherwise build pool around ours
         if pool is not None:
@@ -1179,10 +1229,15 @@ class ClientHandler:
                                  "timeline")
             self.clock = pool.clock
             self.pool = pool
+            if breaker_kwargs:
+                self.pool.breaker_kwargs.update(breaker_kwargs)
+                for c in self.pool.clones:     # retrofit existing clones
+                    c.breaker = CircuitBreaker(**self.pool.breaker_kwargs)
         else:
             self.clock = clock or VirtualClock()
             self.pool = ClonePool(link_name=link, clock=self.clock,
-                                  max_clones=max_secondaries + 8)
+                                  max_clones=max_secondaries + 8,
+                                  breaker_kwargs=breaker_kwargs)
         self.dispatcher = Dispatcher(self.pool, self.clock)
         self.queue = AdmissionQueue(queue_depth)
         # heterogeneous fleet (ADR-004): allowed tiers, rank-ascending;
@@ -1235,9 +1290,18 @@ class ClientHandler:
         # rid -> (lo, hi) placement band, valid for one scheduler round
         # (invalidated whenever pool inventory changes — engine spawns)
         self._band_cache: Dict[int, tuple] = {}
-        # fault tolerance + hedging (ADR-006)
-        self.injector = (FaultInjector(self.pool, faults)
-                         if faults else None)
+        # SLO-aware gateway (ADR-007): arrivals flow through it when
+        # present; it shares the serving timeline and link profile
+        self.gateway = gateway
+        if gateway is not None:
+            gateway.adopt_clock(self.clock)
+        # fault tolerance + hedging (ADR-006); a gateway hears about
+        # kills/drains at the fault instant (capacity-loss signal)
+        self.injector = (FaultInjector(
+            self.pool, faults,
+            on_fire=(gateway.note_fault if gateway is not None else None))
+            if faults else None)
+        self._peak_queue_depth = 0
         self.hedge_factor = hedge_factor
         self.hedge_quantile = hedge_quantile
         self.hedge_min_samples = hedge_min_samples
@@ -1434,7 +1498,8 @@ class ClientHandler:
             toks[i, :min(len(r.prompt), plen)] = r.prompt[:plen]
         cohort = _Cohort(reqs=batch, clone=clone, plen=plen,
                          outs=[[] for _ in batch],
-                         first_token_t=[0.0] * len(batch))
+                         first_token_t=[0.0] * len(batch),
+                         token_ts=[[] for _ in batch])
         clone.busy = True
         delay = (self.autoscaler.clone_ready_delay(clone, self.clock.now())
                  + self._net_s(toks.nbytes))
@@ -1468,13 +1533,16 @@ class ClientHandler:
         keep = []
         for i, r in enumerate(cohort.reqs):
             cohort.outs[i].append(int(tok[i]))
+            cohort.token_ts[i].append(now)
             if len(cohort.outs[i]) == 1:
                 cohort.first_token_t[i] = now
             if len(cohort.outs[i]) >= r.max_new_tokens:
                 self.tokens_emitted += len(cohort.outs[i])
                 completions.append(ServeCompletion(
                     r.rid, cohort.outs[i], r.arrival_t,
-                    cohort.first_token_t[i], now, cohort.clone.spec.name))
+                    cohort.first_token_t[i], now, cohort.clone.spec.name,
+                    tenant=r.tenant, slo=r.slo, deadline_s=r.deadline_s,
+                    token_ts=cohort.token_ts[i]))
                 t = cohort.clone.ctype.name
                 self.fleet_mix[t] = self.fleet_mix.get(t, 0) + 1
             else:
@@ -1486,6 +1554,7 @@ class ClientHandler:
             cohort.reqs = [cohort.reqs[i] for i in keep]
             cohort.outs = [cohort.outs[i] for i in keep]
             cohort.first_token_t = [cohort.first_token_t[i] for i in keep]
+            cohort.token_ts = [cohort.token_ts[i] for i in keep]
             cohort.tok = cohort.tok[np.asarray(keep, np.int32)]
             cohort.cache = self.backend.cache_take(cohort.cache, keep)
         return True
@@ -1527,6 +1596,7 @@ class ClientHandler:
         req = s.req
         req.generated = list(s.out)
         req.first_token_t = s.first_token_t
+        req.token_ts = list(s.token_ts)
         req.preemptions += 1
         engine.slots[victim] = None
         engine.tok_host[victim] = 0
@@ -1819,7 +1889,7 @@ class ClientHandler:
         firsts = [] if firsts is None else np.asarray(firsts)
         for (slot, req, _, _), ft in zip(engine.submitted_joins, firsts):
             t0 = int(ft)
-            engine.slots[slot] = _Slot(req, [t0], now)
+            engine.slots[slot] = _Slot(req, [t0], now, token_ts=[now])
             engine.tok_host[slot] = t0
             kv.active[slot] = True
         engine.submitted_joins = []
@@ -1832,11 +1902,12 @@ class ClientHandler:
                 # the next decode input — the scan's final logits only
                 # re-derive it, so the stored token is authoritative
                 t0 = int(req.generated[-1])
-                engine.slots[slot] = _Slot(req, list(req.generated),
-                                           req.first_token_t)
+                engine.slots[slot] = _Slot(
+                    req, list(req.generated), req.first_token_t,
+                    token_ts=_carried_ts(req, len(req.generated)))
             else:
                 t0 = int(ft)
-                engine.slots[slot] = _Slot(req, [t0], now)
+                engine.slots[slot] = _Slot(req, [t0], now, token_ts=[now])
             engine.tok_host[slot] = t0
             kv.active[slot] = True
         engine.submitted_sfx = []
@@ -1844,7 +1915,8 @@ class ClientHandler:
             # the migrated slot resumes exactly where the dying clone
             # stopped: tokens already emitted, the last one is the next
             # decode input (same contract as the restore fold above)
-            engine.slots[slot] = _Slot(req, list(out), ft)
+            engine.slots[slot] = _Slot(req, list(out), ft,
+                                       token_ts=_carried_ts(req, len(out)))
             engine.tok_host[slot] = int(out[-1])
             kv.active[slot] = True
             self.recoveries_migrated += 1
@@ -1860,15 +1932,26 @@ class ClientHandler:
             # written-token count must not keep growing either)
             engine.tok_host[rows] = nxt[rows, n - 1]
             kv.pos[rows] = np.minimum(kv.pos[rows] + n, kv.capacity)
+            # streamed delivery stamps: tokens leave the clone spread
+            # across the dispatch interval, so interpolate within
+            # [submitted_at, done_at] per row (ADR-007 TTFT/TPOT)
+            t0 = getattr(task, "submitted_at", now)
+            span = max(now - t0, 0.0)
             for slot, row, k in zip(rows, nxt[rows].tolist(), n.tolist()):
                 engine.slots[slot].out.extend(row[:k])
+                engine.slots[slot].token_ts.extend(
+                    t0 + span * (j + 1) / k for j in range(k))
             engine.decode_rows = None
         for slot, s in enumerate(engine.slots):   # evict at step granularity
             if s is not None and len(s.out) >= s.req.max_new_tokens:
                 self.tokens_emitted += len(s.out)
                 completions.append(ServeCompletion(
                     s.req.rid, s.out, s.req.arrival_t, s.first_token_t,
-                    now, engine.clone.spec.name))
+                    now, engine.clone.spec.name,
+                    tenant=s.req.tenant, slo=s.req.slo,
+                    deadline_s=s.req.deadline_s,
+                    token_ts=(s.token_ts if len(s.token_ts) == len(s.out)
+                              else [])))
                 t = engine.clone.ctype.name
                 self.fleet_mix[t] = self.fleet_mix.get(t, 0) + 1
                 engine.slots[slot] = None
@@ -1905,6 +1988,7 @@ class ClientHandler:
             if not dst.kv.can_admit(pos, s.req.max_new_tokens):
                 continue
             dslot, new_ids, _, _ = dst.kv.alloc_slot(pos)
+            s.req.token_ts = list(s.token_ts)   # stamps survive the move
             dst.migrations.append(
                 (dslot, s.req, list(s.out), s.first_token_t,
                  kv.pool, src_ids, [int(b) for b in new_ids], slot, pos))
@@ -1942,6 +2026,7 @@ class ClientHandler:
                     and self._try_migrate(engine, slot, s, engines)):
                 s.req.generated = list(s.out)
                 s.req.first_token_t = s.first_token_t
+                s.req.token_ts = list(s.token_ts)
                 self._requeue_lost(s.req)
             engine.slots[slot] = None
         # the pool object dies with the clone — a revived clone starts
@@ -2047,6 +2132,7 @@ class ClientHandler:
         inflight: Dict[object, object] = {}        # task -> engine | cohort
         engines: Dict[int, _SlotEngine] = {}       # id -> live engine
         completions: List[ServeCompletion] = []
+        notified = 0                    # completions fed back to the gateway
         if self.injector is not None:
             self.injector.arm()             # faults become clock events
 
@@ -2054,12 +2140,36 @@ class ClientHandler:
             now = self.clock.now()
             self._band_cache.clear()        # fresh round, fresh inventory
             while i < len(reqs) and reqs[i].arrival_t <= now + 1e-12:
-                self.queue.offer(reqs[i], now)
+                # arrivals flow through the gateway when one is present
+                # (ADR-007); it decides cache-hit / reject / shed / queue
+                # and releases into self.queue under quota + fair share
+                if self.gateway is not None:
+                    self.gateway.offer(reqs[i], now)
+                else:
+                    self.queue.offer(reqs[i], now)
                 i += 1
             if self.injector is not None:
                 # recover clones that died since the last round BEFORE
                 # joins/spawns consult the engine set (ADR-006)
                 self._recover_failed(inflight, engines)
+            if self.gateway is not None:
+                gw = self.gateway
+                # fleet census AFTER recovery: serveable = healthy clones
+                # with closed breakers — breaker opens and DEAD clones
+                # shrink the gateway's admission envelope (ADR-006 signal)
+                healthy = sum(1 for c in self.pool.clones if c.serveable)
+                gw.observe_fleet(healthy, len(self.pool.clones),
+                                 self.max_batch * max(healthy, 1))
+                while notified < len(completions):
+                    gw.observe_completion(completions[notified])
+                    notified += 1
+                gw.release(now, self.queue,
+                           self.queue.max_depth - self.queue.depth)
+                completions.extend(gw.drain_cached())
+            self._peak_queue_depth = max(
+                self._peak_queue_depth,
+                self.queue.depth + (self.gateway.queued
+                                    if self.gateway is not None else 0))
             if paged and engines:
                 # mid-flight joins: fill open slots of in-flight engines
                 # before counting residual demand or spawning new ones
@@ -2155,8 +2265,10 @@ class ClientHandler:
                 next_arrival = reqs[i].arrival_t if i < len(reqs) else None
                 next_fault = (self.injector.next_event_time()
                               if self.injector is not None else None)
-                bound = min((t for t in (next_arrival, next_fault)
-                             if t is not None), default=None)
+                next_gw = (self.gateway.next_event_time()
+                           if self.gateway is not None else None)
+                bound = min((t for t in (next_arrival, next_fault, next_gw)
+                             if t is not None and t > now), default=None)
                 first_done = min(t.done_at for t in inflight)
                 if bound is not None and bound < first_done:
                     self.clock.advance_to(bound)
@@ -2198,6 +2310,18 @@ class ClientHandler:
                     continue
                 raise RuntimeError("requests queued but no clone can run "
                                    "(max_secondaries too small?)")
+            elif self.gateway is not None and self.gateway.pending > 0:
+                # the gateway still owes work: a quota-blocked head (its
+                # bucket's eta) or a scheduled Retry-After replay —
+                # advance to the event that unblocks it
+                nxt = self.gateway.next_event_time()
+                if nxt is None:
+                    nxt = self.clock.next_event_time()
+                if nxt is not None and nxt > now + 1e-12:
+                    self.clock.advance_to(nxt)
+                    continue
+                raise RuntimeError("gateway holds queued work but no clock "
+                                   "event can release it")
             else:
                 break
 
@@ -2220,6 +2344,30 @@ class ClientHandler:
         makespan = self.clock.now() - t_start - drain_idle_s
         utils = [w / r for w, r in self.kv_samples if r > 0]
         cs_by_type = self.pool.clone_seconds_by_type(self.clock.now())
+        # SLO accounting over *offered* requests (ADR-007): work the
+        # gateway rejected, shed, or dropped counts as missed
+        offered_by_slo: Dict[str, int] = {}
+        for r in reqs:
+            offered_by_slo[r.slo] = offered_by_slo.get(r.slo, 0) + 1
+        met_by_slo: Dict[str, int] = {}
+        for c in completions:
+            if c.met_deadline:
+                met_by_slo[c.slo] = met_by_slo.get(c.slo, 0) + 1
+        slo_attainment = {s: met_by_slo.get(s, 0) / n
+                          for s, n in offered_by_slo.items() if n}
+        good_tokens = sum(len(c.tokens) for c in completions
+                          if c.met_deadline)
+        by_tenant: Dict[str, List[ServeCompletion]] = {}
+        for c in completions:
+            by_tenant.setdefault(c.tenant or "", []).append(c)
+        per_tenant = {
+            t: {"served": float(len(cs)),
+                "p50_ttft_s": float(np.percentile(
+                    [c.ttft_s for c in cs], 50)),
+                "p50_tpot_s": float(np.percentile(
+                    [c.tpot_s for c in cs], 50))}
+            for t, cs in sorted(by_tenant.items())}
+        gw = self.gateway
         return ServeReport(
             completions=completions,
             accepted=self.queue.accepted,
@@ -2254,7 +2402,16 @@ class ClientHandler:
             recoveries_restored=self.recoveries_restored,
             hedges_fired=self.hedges_fired,
             hedge_wins=self.hedge_wins,
-            breaker_opens=sum(c.breaker.opens for c in self.pool.clones))
+            breaker_opens=sum(c.breaker.opens for c in self.pool.clones),
+            slo_attainment=slo_attainment,
+            goodput_tps=good_tokens / max(makespan, 1e-9),
+            gateway_shed=gw.shed if gw is not None else 0,
+            gateway_rejected=gw.rejected if gw is not None else 0,
+            gateway_retries=gw.retries if gw is not None else 0,
+            cache_hits=gw.cache_hits if gw is not None else 0,
+            shed_by_slo=dict(gw.shed_by_slo) if gw is not None else {},
+            per_tenant=per_tenant,
+            peak_queue_depth=self._peak_queue_depth)
 
 
 def main() -> None:

@@ -348,6 +348,29 @@ def test_fault_recovery_conserves_requests_and_blocks(seed, hedge, faults):
         assert out["migrated"] == 0            # only drains salvage KV
 
 
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 2 ** 31 - 1),
+       adv_weight=st.floats(min_value=0.25, max_value=8.0,
+                            allow_nan=False),
+       adv_cost=st.sampled_from([1, 2, 4, 8]),
+       adv_n=st.integers(10, 80),
+       rate=st.sampled_from([2.0, 4.0, 8.0, 16.0]),
+       burst=st.sampled_from([2.0, 8.0, 16.0]))
+def test_gateway_quota_and_fair_share(seed, adv_weight, adv_cost, adv_n,
+                                      rate, burst):
+    """ADR-007 property: under any adversarial arrival mix — a flooding
+    tenant of arbitrary weight/cost/volume against a steady victim and a
+    token-bucket-metered tenant — the gateway's release schedule never
+    lets the metered tenant exceed ``burst + rate x t`` cumulative
+    tokens, and the victim's weight-normalized share stays within a
+    DRR-granularity bound (it is never starved).  The deterministic twin
+    lives in test_gateway.py (``check_quota_invariants``)."""
+    import test_gateway as tg
+    tg.check_quota_invariants(tg.run_quota_trace(
+        adv_weight=adv_weight, adv_cost=adv_cost, adv_n=adv_n,
+        rate=rate, burst=burst, seed=seed))
+
+
 @settings(deadline=None, max_examples=5)
 @given(seed=st.integers(0, 2 ** 31 - 1), chunk=st.sampled_from([2, 4, 8]))
 def test_chunked_serving_preemption_invariant(seed, chunk):

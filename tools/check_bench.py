@@ -367,6 +367,101 @@ def _check_faults(doc: dict) -> list:
     return bad
 
 
+_OVERLOAD_ROW_KEYS = ("scenario", "rate_rps", "over", "gated", "offered",
+                      "served", "p50_ttft_s", "p99_ttft_s",
+                      "peak_queue_depth", "slo_attainment", "goodput_tps",
+                      "shed", "shed_by_slo", "rejected", "retries",
+                      "cache_hits", "faults_injected",
+                      "tokens_identical_to_ungated")
+# the ungated baseline's p99 TTFT must grow at least this much between
+# consecutive overload factors — without admission control, queueing
+# delay diverges past capacity
+_OVERLOAD_P99_GROWTH = 1.3
+# the gateway must hold interactive SLO attainment at or above this
+# floor at every overload factor >= 1.5x capacity (ISSUE 8 acceptance)
+_OVERLOAD_SLO_FLOOR = 0.95
+# under fault + overload, the gated run's interactive attainment must
+# beat the ungated faulted baseline by at least this margin
+_OVERLOAD_FAULT_MARGIN = 0.15
+
+
+def _check_gateway(doc: dict) -> list:
+    """``overload_sweep`` violations (ISSUE 8 acceptance, ADR-007)."""
+    bad = []
+    sweep = doc.get("overload_sweep")
+    if not sweep:               # optional: --overload-requests 0 disables
+        return bad
+    for k in ("link", "capacity_rps", "deadline_s", "rows"):
+        if k not in sweep:
+            return bad + [f"overload_sweep: missing top-level key {k!r}"]
+    rows = sweep["rows"]
+    for i, row in enumerate(rows):
+        missing = [k for k in _OVERLOAD_ROW_KEYS if k not in row]
+        if missing:
+            return bad + [f"overload_sweep[{i}]: missing {missing}"]
+    scenarios = {row["scenario"] for row in rows}
+    for k in ("ungated", "gated", "fault_ungated", "fault_gated"):
+        if k not in scenarios:
+            return bad + [f"overload_sweep: missing scenario {k!r}"]
+    ungated = sorted((r for r in rows if r["scenario"] == "ungated"),
+                     key=lambda r: r["over"])
+    gated = {r["over"]: r for r in rows if r["scenario"] == "gated"}
+    for lo, hi in zip(ungated, ungated[1:]):
+        if hi["p99_ttft_s"] <= _OVERLOAD_P99_GROWTH * lo["p99_ttft_s"]:
+            bad.append(f"overload_sweep: ungated p99 TTFT did not "
+                       f"diverge past capacity ({lo['p99_ttft_s']} @ "
+                       f"{lo['over']}x -> {hi['p99_ttft_s']} @ "
+                       f"{hi['over']}x, need >{_OVERLOAD_P99_GROWTH}x "
+                       "growth)")
+        if hi["peak_queue_depth"] <= lo["peak_queue_depth"]:
+            bad.append("overload_sweep: ungated peak queue depth stopped "
+                       f"growing ({lo['peak_queue_depth']} @ {lo['over']}x"
+                       f" -> {hi['peak_queue_depth']} @ {hi['over']}x) — "
+                       "the sweep is not actually past capacity")
+    for row in rows:
+        if not row["gated"]:
+            continue
+        name = f"overload_sweep.{row['scenario']}@{row['over']}x"
+        if "interactive" in row["shed_by_slo"]:
+            bad.append(f"{name}: shed interactive work — load shedding "
+                       "must only drop batch-class requests")
+        if not row["tokens_identical_to_ungated"]:
+            bad.append(f"{name}: admitted requests' outputs diverged "
+                       "from the ungated run — gating must not change "
+                       "what admitted work decodes")
+    for over, row in gated.items():
+        if row["cache_hits"] < 1:
+            bad.append(f"overload_sweep.gated@{over}x: response cache "
+                       "never hit despite duplicate prompts in the trace")
+        slo_i = row["slo_attainment"].get("interactive", 0.0)
+        if over >= 1.5 and slo_i < _OVERLOAD_SLO_FLOOR:
+            bad.append(f"overload_sweep.gated@{over}x: interactive SLO "
+                       f"attainment {slo_i} below the "
+                       f"{_OVERLOAD_SLO_FLOOR} floor — the gateway is "
+                       "not protecting interactive work under overload")
+        twin = next((r for r in ungated if r["over"] == over), None)
+        if (over >= 1.5 and twin is not None
+                and row["goodput_tps"] < twin["goodput_tps"] - 1e-9):
+            bad.append(f"overload_sweep.gated@{over}x: goodput "
+                       f"{row['goodput_tps']} fell below the ungated "
+                       f"{twin['goodput_tps']} — shedding must raise "
+                       "deadline-meeting throughput, not lower it")
+    fu = next(r for r in rows if r["scenario"] == "fault_ungated")
+    fg = next(r for r in rows if r["scenario"] == "fault_gated")
+    for name, row in (("fault_ungated", fu), ("fault_gated", fg)):
+        if row["faults_injected"] < 1:
+            bad.append(f"overload_sweep.{name}: no fault actually "
+                       "injected")
+    fu_slo = fu["slo_attainment"].get("interactive", 0.0)
+    fg_slo = fg["slo_attainment"].get("interactive", 0.0)
+    if fg_slo < fu_slo + _OVERLOAD_FAULT_MARGIN:
+        bad.append(f"overload_sweep: under fault + overload the gateway "
+                   f"held interactive attainment {fg_slo} vs ungated "
+                   f"{fu_slo} — need a >= {_OVERLOAD_FAULT_MARGIN} "
+                   "margin from capacity-aware admission")
+    return bad
+
+
 def check_serving(path: Path) -> list:
     """BENCH_serving.json violations (empty == pass)."""
     bad = []
@@ -432,6 +527,7 @@ def check_serving(path: Path) -> list:
     bad += _check_fleet(doc)
     bad += _check_mixed(doc)
     bad += _check_faults(doc)
+    bad += _check_gateway(doc)
     return bad
 
 
