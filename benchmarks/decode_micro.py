@@ -303,6 +303,165 @@ def prefill_bench(arch: str, *, rows: int, prefix_len: int, suffix_len: int,
     return row
 
 
+# --------------------------------------------------------------------------- #
+# 4. speculative decode: draft_loop + verify_window vs stepwise greedy
+# --------------------------------------------------------------------------- #
+# Modeled cross-tier venue seconds (ADR-008; matches the serving sweep's
+# TIER_STEP_S): the draft runs its k proposal steps (+ catch-up) on the
+# cheap tier at ``draft_cost`` of a full step, then ONE chunked verify
+# pass runs on the large tier.  Wall time on this CPU container measures
+# interpret-mode dispatch overhead, so the modeled ratio is the
+# hardware-independent claim — exactly like ``dispatches_per_token``.
+SPEC_DRAFT_STEP_S = 0.32      # basic-tier step (TIER_STEP_S["basic"])
+SPEC_VERIFY_STEP_S = 0.08     # large-tier step (TIER_STEP_S["large"])
+
+
+def _pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def spec_bench(arch: str, *, slots: int, k_max: int, budget: int,
+               flip_p: float, prompt_len: int, draft_cost: float,
+               seed: int = 0):
+    """One acceptance point of the speculative sweep (oracle draft whose
+    proposals are corrupted with probability ``flip_p``)."""
+    from repro.models import model
+
+    cfg = reduced_config(get_config(arch))
+    backend = LMBackend(cfg, capacity=64, draft="oracle")
+    budgets = np.full((slots,), budget, np.int32)
+
+    # --- stepwise greedy reference (1 target dispatch / token) ----------
+    kv, tok = _paged_setup(backend, slots, prompt_len, budgets)
+    decode_slots = backend.paged_fns(kv.bs)[1]
+    ref_out = np.zeros((slots, budget), np.int32)
+    cur = tok.copy()
+    jax.block_until_ready(decode_slots(
+        backend.params, jax.tree.map(jnp.copy, kv.pool),
+        jnp.asarray(cur[:, None]), jnp.asarray(kv.pos),
+        jnp.asarray(kv.tables)))                      # warm compile
+    t0 = time.perf_counter()
+    for t in range(budget):
+        kv.grow_for_write()
+        nxt, kv.pool = decode_slots(
+            backend.params, kv.pool, jnp.asarray(cur[:, None]),
+            jnp.asarray(np.minimum(kv.pos, backend.capacity - 1)),
+            jnp.asarray(kv.tables))
+        cur = np.asarray(nxt, np.int32)
+        ref_out[:, t] = cur
+        kv.pos[:] = np.minimum(kv.pos + 1, kv.capacity)
+    stepwise_s = time.perf_counter() - t0
+
+    # --- speculative rounds (draft on cheap tier, verify on large) ------
+    kv2, tok2 = _paged_setup(backend, slots, prompt_len, budgets)
+    dpool = backend.init_draft_pool(kv2.max_slots, kv2.num_blocks, kv2.bs)
+    # same seed as _paged_setup: the committed history the draft replays
+    # (position-indexed, so the pending first token rides at index p)
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (slots, prompt_len), dtype=np.int32)
+    hist = [prompts[i].tolist() + [int(tok2[i])] for i in range(slots)]
+    rng = np.random.default_rng(seed + 1)
+    verify_fn = backend.spec_verify_fn(kv2.bs)
+    cur, p = tok2.copy(), kv2.pos.copy()
+    dp = np.zeros((slots,), np.int32)
+    left = budgets.copy()
+    out = [[] for _ in range(slots)]
+    rounds = draft_steps = proposed = accepted = 0
+    t0 = time.perf_counter()
+    while (left > 0).any():
+        live = left > 0
+        kv2.active[:] = live
+        room = np.maximum(kv2.capacity - 1
+                          - np.minimum(p, kv2.capacity - 1), 0)
+        k = np.where(live,
+                     np.maximum(np.minimum(np.minimum(k_max, left - 1),
+                                           room), 0), 0).astype(np.int32)
+        kv2.grow_for_window(np.where(live, k + 1, 0).astype(np.int32))
+        tables = jnp.asarray(kv2.tables)
+        if int(k.sum()):
+            n_c = np.where(live, p - dp, 0).astype(np.int32)
+            tcpad = _pow2(max(int(n_c.max()), 1))
+            ctoks = np.zeros((slots, tcpad), np.int32)
+            for i in range(slots):
+                if n_c[i]:
+                    ctoks[i, :n_c[i]] = hist[i][dp[i]:p[i]]
+            draft_fn = backend.spec_draft_fn(kv2.bs, tcpad, k_max)
+            drafts, dpool = draft_fn(
+                backend.draft_params, dpool, jnp.asarray(ctoks),
+                jnp.asarray(np.where(live, dp, 0).astype(np.int32)),
+                jnp.asarray(n_c), jnp.asarray(cur[:, None]),
+                jnp.asarray(np.where(live, np.minimum(p, kv2.capacity - 1),
+                                     0).astype(np.int32)),
+                jnp.asarray(k), tables)
+            drafts = np.asarray(drafts, np.int32)
+            flips = rng.random((slots, k_max)) < flip_p
+            drafts = np.where(flips, (drafts + 1) % cfg.vocab_size, drafts)
+            draft_steps += tcpad + int(k.max())
+            dp = np.where(live, p + k, dp)
+        else:
+            # every row clamped to k=0 (budget tails): no draft dispatch,
+            # the verify degenerates to one plain greedy token per row —
+            # same degrade the serving layer uses (ADR-008)
+            drafts = np.zeros((slots, k_max), np.int32)
+        x = np.concatenate([cur[:, None], drafts], axis=1)
+        n_live = np.where(live, k + 1, 0).astype(np.int32)
+        greedy, kv2.pool = verify_fn(
+            backend.params, kv2.pool, jnp.asarray(x),
+            jnp.asarray(np.where(live, np.minimum(p, kv2.capacity - 1),
+                                 0).astype(np.int32)),
+            jnp.asarray(n_live), tables)
+        greedy = np.asarray(greedy, np.int32)
+        acc = model.spec_accept(greedy, drafts, np.where(live, k, 0))
+        for i in range(slots):
+            if live[i]:
+                got = greedy[i, :acc[i] + 1].tolist()
+                out[i].extend(got)
+                hist[i].extend(got)
+        emitted = np.where(live, acc + 1, 0).astype(np.int32)
+        cur = np.where(live, greedy[np.arange(slots), acc], cur)
+        p = np.where(live, np.minimum(p + emitted, kv2.capacity), p)
+        kv2.pos[:] = p                   # keep block reservation in step
+        left = left - emitted
+        dp = np.where(live, np.minimum(dp, p), dp)
+        rounds += 1
+        proposed += int(np.where(live, k, 0).sum())
+        accepted += int(acc.sum())
+    spec_s = time.perf_counter() - t0
+
+    tokens_total = int(budgets.sum())
+    tokens_match = all(out[i] == ref_out[i, :budgets[i]].tolist()
+                       for i in range(slots))
+    modeled_spec_s = (draft_steps * SPEC_DRAFT_STEP_S * draft_cost
+                      + rounds * SPEC_VERIFY_STEP_S)
+    modeled_plain_s = budget * SPEC_VERIFY_STEP_S
+    row = {
+        "slots": slots,
+        "k_max": k_max,
+        "budget": budget,
+        "flip_p": flip_p,
+        "draft_cost": draft_cost,
+        "tokens_emitted": tokens_total,
+        "rounds": rounds,
+        "acceptance_rate": accepted / max(proposed, 1),
+        "tokens_per_round": tokens_total / max(rounds * slots, 1) * slots,
+        "dispatches_per_token": rounds / budget,
+        "dispatches_per_token_stepwise": 1.0,
+        "spec_speedup": modeled_plain_s / modeled_spec_s,
+        "us_per_token": spec_s * 1e6 / tokens_total,
+        "us_per_token_stepwise": stepwise_s * 1e6 / tokens_total,
+        "tokens_match": tokens_match,
+    }
+    print(f"  spec k={k_max} flip={flip_p:.1f}: "
+          f"accept={row['acceptance_rate']:.2f} "
+          f"{row['dispatches_per_token']:.2f} target dispatches/token, "
+          f"modeled speedup {row['spec_speedup']:.2f}x, "
+          f"match={tokens_match}")
+    return row
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -310,6 +469,10 @@ def main() -> int:
                     help="tiny shapes for CI (interpret mode)")
     ap.add_argument("--reps", type=int, default=0,
                     help="timing repetitions (0 = auto)")
+    ap.add_argument("--draft-cost", type=float, default=0.1,
+                    help="modeled draft step cost as a fraction of a full "
+                         "step (the smoke model's parameter ratio is "
+                         "embedding-dominated, so this is explicit)")
     ap.add_argument("--json", default="BENCH_decode.json",
                     help="output artifact path ('' to disable)")
     args = ap.parse_args()
@@ -321,12 +484,17 @@ def main() -> int:
         b, ctx_blocks, d = 2, 2, 16
         loop_cfgs = [(2, 4)]
         pf_cfgs = [(2, 8, 16, 8)]              # (rows, prefix, suffix, chunk)
+        spec_cfgs = [(2, 4, 16, 0.0), (2, 4, 16, 0.5)]
     else:
         cases = [(2, 2, 8), (4, 2, 8), (4, 1, 8), (8, 2, 8),
                  (8, 2, 16), (4, 1, 16)]
         b, ctx_blocks, d = 4, 4, 32
         loop_cfgs = [(4, 4), (4, 8)]
         pf_cfgs = [(2, 8, 16, 8), (4, 8, 24, 8), (4, 16, 16, 4)]
+        # (slots, k_max, budget, flip_p): acceptance sweep from oracle
+        # agreement down to near-total draft/target disagreement
+        spec_cfgs = [(4, 4, 16, 0.0), (4, 4, 16, 0.4), (4, 4, 16, 0.9),
+                     (4, 2, 16, 0.0)]
 
     print("kernel sweep (fused vs per-head paged attention):")
     sweep = kernel_sweep(cases, b=b, ctx_blocks=ctx_blocks, d=d, reps=reps,
@@ -348,6 +516,12 @@ def main() -> int:
                                       prefix_len=prefix_len,
                                       suffix_len=suffix_len, chunk=chunk,
                                       reps=reps))
+    print("speculative decode (draft + chunked verify vs stepwise):")
+    specs = []
+    for slots, k_max, budget, flip_p in spec_cfgs:
+        specs.append(spec_bench(args.arch, slots=slots, k_max=k_max,
+                                budget=budget, flip_p=flip_p, prompt_len=6,
+                                draft_cost=args.draft_cost))
 
     doc = {
         "benchmark": "decode_micro",
@@ -357,13 +531,14 @@ def main() -> int:
         "kernel_sweep": sweep,
         "decode_loop": loops,
         "prefill_loop": prefills,
+        "spec": specs,
     }
     if args.json:
         path = os.path.join(os.path.dirname(__file__), "..", args.json)
         with open(path, "w") as f:
             json.dump(doc, f, indent=2)
         print(f"wrote {os.path.normpath(path)}")
-    ok = all(r["tokens_match"] for r in loops + prefills)
+    ok = all(r["tokens_match"] for r in loops + prefills + specs)
     return 0 if ok else 1
 
 

@@ -476,6 +476,98 @@ def run_fleet_sweep(backend, *, fleet=FLEET_DEFAULT, seed: int = 0,
     return rows_pinned, mixed
 
 
+def run_spec_sweep(backend, *, n_requests: int = 10, prompt_len: int = 7,
+                   new_tokens: int = 24, max_batch: int = 4,
+                   block_size: int = 4, max_secondaries: int = 3,
+                   spec_k: int = 4, draft_cost: float = 0.1,
+                   seed: int = 0):
+    """Cross-tier speculative decoding sweep (ADR-008).
+
+    One trace served three ways on the per-tier fixed-cost executor:
+    **pinned-large** — plain per-token decode, every engine on the
+    ``large`` tier (the $-per-token baseline); **cross-tier spec** — the
+    same requests with speculative decoding, the draft paired on the
+    fleet's cheapest tier (``basic``, billing ``draft_cost`` of a step
+    per draft scan step) and ONE chunked verify dispatch per round on
+    ``large``; and a **corrupted** twin whose draft proposals are
+    randomly flipped, dropping acceptance below 1.0.  Every request is
+    priority-1, so the urgent placement band pins serving engines to the
+    fast tier — only drafts burn ``basic`` seconds.  The speculative
+    rows must serve the identical token streams at a lower $-per-token
+    without losing throughput — hard-asserted by ``tools/check_bench.py``
+    in CI."""
+    def executor(clone, fn, args):
+        return fn(*args), (TIER_STEP_S[clone.ctype.name]
+                           * getattr(fn, "seq_steps", 1)
+                           * getattr(fn, "step_scale", 1.0))
+
+    def trace():
+        rng = np.random.default_rng(seed)
+        return [ServeRequest(i, rng.integers(0, backend.cfg.vocab_size,
+                                             size=prompt_len,
+                                             dtype=np.int32),
+                             new_tokens, arrival_t=0.15 * i, priority=1)
+                for i in range(n_requests)]
+
+    def run(scenario, speculative, corruption=0.0):
+        handler = ClientHandler(
+            backend, clone_type="large",
+            fleet=["basic", "large"] if speculative else None,
+            max_batch=max_batch, prompt_pad=prompt_len,
+            block_size=block_size, max_secondaries=max_secondaries,
+            use_primary=False, executor=executor,
+            speculative=speculative, spec_k=spec_k,
+            spec_corruption=corruption, draft_cost=draft_cost)
+        errors, rep = 0, None
+        try:
+            rep = handler.run(trace(), drain_idle_s=PAUSE_IDLE_TTL + 5.0)
+        except RuntimeError:
+            errors = 1                      # recorded; CI fails on it
+        toks = {c.rid: list(map(int, c.tokens))
+                for c in rep.completions} if rep else {}
+        total = sum(len(t) for t in toks.values())
+        return {
+            "scenario": scenario,
+            "speculative": speculative,
+            "corruption": corruption,
+            "served": len(toks),
+            "offered": n_requests,
+            "runtime_errors": errors,
+            "total_tokens": total,
+            "spec_rounds": rep.spec_rounds if rep else 0,
+            "spec_tokens": rep.spec_tokens if rep else 0,
+            "acceptance_rate": rep.acceptance_rate if rep else 0.0,
+            "spec_fallbacks": rep.spec_fallbacks if rep else 0,
+            "makespan_s": rep.makespan_s if rep else 0.0,
+            "tokens_per_s": (total / rep.makespan_s
+                             if rep and rep.makespan_s else 0.0),
+            "cost_usd": rep.cost_usd if rep else 0.0,
+            "usd_per_token": (rep.cost_usd / total
+                              if rep and total else 0.0),
+            "p50_ttft_s": rep.p50_ttft_s if rep else 0.0,
+            "p99_latency_s": rep.p99_latency_s if rep else 0.0,
+            "clone_seconds_by_type": rep.clone_seconds_by_type if rep
+            else {},
+        }, toks
+
+    pinned, ref = run("pinned_large", False)
+    rows = [pinned]
+    for corruption in (0.0, 0.5):
+        name = "spec" if corruption == 0.0 else "spec_corrupted"
+        row, got = run(name, True, corruption)
+        row["tokens_identical_to_pinned_large"] = bool(got) and got == ref
+        rows.append(row)
+    return {
+        "spec_k": spec_k,
+        "draft_cost": draft_cost,
+        "draft_tier": "basic",
+        "verify_tier": "large",
+        "draft_usd_per_hour": USD_PER_HOUR["basic"],
+        "verify_usd_per_hour": USD_PER_HOUR["large"],
+        "rows": rows,
+    }
+
+
 def run_fault_sweep(backend, *, n_requests: int = 12, prompt_len: int = 8,
                     new_tokens: int = 10, max_batch: int = 4,
                     block_size: int = 4, max_secondaries: int = 3,
@@ -768,6 +860,14 @@ def main() -> None:
     ap.add_argument("--overload-requests", type=int, default=60,
                     help="requests per overload-sweep run "
                          "(0 disables the sweep)")
+    ap.add_argument("--spec-requests", type=int, default=10,
+                    help="requests for the cross-tier speculative "
+                         "decoding sweep (0 disables the sweep)")
+    ap.add_argument("--draft-cost", type=float, default=0.1,
+                    help="modeled draft step cost as a fraction of a "
+                         "full step for the speculative sweep (the smoke "
+                         "model's own parameter ratio is "
+                         "embedding-dominated)")
     ap.add_argument("--json", default="BENCH_serving.json",
                     help="machine-readable output path ('' to skip)")
     args = ap.parse_args()
@@ -1016,6 +1116,46 @@ def main() -> None:
                 >= fu["slo_attainment"].get("interactive", 1) + 0.15), \
             "fault+overload: gateway not above the ungated faulted baseline"
 
+    # --- ADR-008 sweep: cross-tier speculative decoding -----------------
+    spec_payload = None
+    if args.spec_requests > 0:
+        spec_payload = run_spec_sweep(
+            LMBackend(cfg, capacity=32, draft="oracle"),
+            n_requests=args.spec_requests, draft_cost=args.draft_cost,
+            seed=args.seed)
+        by = {r["scenario"]: r for r in spec_payload["rows"]}
+        print(f"\nspeculative sweep (K={spec_payload['spec_k']}, draft on "
+              f"{spec_payload['draft_tier']} @ {args.draft_cost:.2f}x step "
+              f"cost, verify on {spec_payload['verify_tier']}):")
+        for r in spec_payload["rows"]:
+            ident = r.get("tokens_identical_to_pinned_large", "-")
+            print(f"  {r['scenario']:>14s} served {r['served']:>2d}/"
+                  f"{r['offered']} accept={r['acceptance_rate']:.2f} "
+                  f"rounds={r['spec_rounds']} "
+                  f"fallbacks={r['spec_fallbacks']} "
+                  f"{r['tokens_per_s']:.2f}tok/s "
+                  f"${r['usd_per_token'] * 1e6:.2f}/Mtok "
+                  f"identical={ident}")
+        for r in spec_payload["rows"]:
+            assert r["runtime_errors"] == 0, \
+                f"spec sweep ({r['scenario']}) raised"
+            assert r["served"] == r["offered"], \
+                f"spec sweep ({r['scenario']}) shed or lost requests"
+            if r["speculative"]:
+                assert r["tokens_identical_to_pinned_large"], \
+                    f"spec sweep ({r['scenario']}) diverged from plain " \
+                    "greedy decode"
+        assert by["spec"]["acceptance_rate"] == 1.0, \
+            "oracle draft did not reach full acceptance"
+        assert 0.0 < by["spec_corrupted"]["acceptance_rate"] < 1.0, \
+            "corrupted draft acceptance not in (0, 1): sweep not binding"
+        assert by["spec"]["usd_per_token"] < by["pinned_large"][
+            "usd_per_token"], \
+            "speculation failed to cut $-per-token vs pinned-large"
+        assert by["spec"]["tokens_per_s"] >= by["pinned_large"][
+            "tokens_per_s"], \
+            "speculation lost throughput vs pinned-large"
+
     if args.json:
         payload = {
             "benchmark": "serving_load",
@@ -1037,6 +1177,7 @@ def main() -> None:
             "fault_sweep": fault_rows,
             "link": args.link,
             "overload_sweep": overload_payload,
+            "spec": spec_payload,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

@@ -6,6 +6,11 @@ Writes:
     benchmarks/results/roofline_base.txt     (paper-faithful baseline)
     benchmarks/results/roofline_opt.txt      (optimized)
     benchmarks/results/perf_cells.txt        (three hillclimb cells, b/a)
+    benchmarks/results/bench_summary.md      (BENCH_decode + BENCH_serving
+                                              headline tables, one section
+                                              per sweep; sections whose
+                                              artifact or sweep is absent
+                                              are skipped with a note)
 """
 from __future__ import annotations
 
@@ -78,6 +83,128 @@ def perf_cells() -> str:
     return "\n".join(lines) + "\n"
 
 
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _md_table(headers, rows) -> list:
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "---|" * len(headers)]
+    out += ["| " + " | ".join(str(c) for c in r) + " |" for r in rows]
+    return out
+
+
+def bench_summary() -> str:
+    """Headline tables from the BENCH artifacts (one section per sweep)."""
+    lines = ["# Benchmark summary", ""]
+
+    def load(name):
+        path = os.path.join(REPO, name)
+        if not os.path.exists(path):
+            lines.append(f"_{name} absent — regenerate with "
+                         f"`PYTHONPATH=src python benchmarks/"
+                         f"{'decode_micro' if 'decode' in name else 'serving_load'}.py`_")
+            lines.append("")
+            return None
+        with open(path) as f:
+            return json.load(f)
+
+    dec = load("BENCH_decode.json")
+    if dec:
+        lines += ["## Decode micro "
+                  f"({dec['arch']}, interpret={dec['interpret']})", ""]
+        lines += ["### Kernel sweep (fused vs per-head paged attention)", ""]
+        lines += _md_table(
+            ["Hq/Hkv", "block", "fetches fused/unfused", "ratio"],
+            [[f"{r['hq']}/{r['hkv']}", r["block_size"],
+              f"{r['kv_fetches_fused']}/{r['kv_fetches_unfused']}",
+              f"{r['fetch_ratio']}x"] for r in dec["kernel_sweep"]])
+        lines += ["", "### Decode loop (window scan vs per-token)", ""]
+        lines += _md_table(
+            ["window", "dispatch/tok", "stepwise", "match"],
+            [[r["window"], f"{r['dispatches_per_token']:.3f}",
+              f"{r['dispatches_per_token_stepwise']:.3f}",
+              r["tokens_match"]] for r in dec["decode_loop"]])
+        lines += ["", "### Prefill loop (chunked vs stepwise)", ""]
+        lines += _md_table(
+            ["chunk", "suffix", "steps/tok", "stepwise", "match"],
+            [[r["chunk"], r["suffix_len"],
+              f"{r['dispatches_per_token']:.4f}",
+              f"{r['dispatches_per_token_stepwise']:.4f}",
+              r["tokens_match"]] for r in dec["prefill_loop"]])
+        if dec.get("spec"):
+            lines += ["", "### Speculative decode (ADR-008)", ""]
+            lines += _md_table(
+                ["K", "flip_p", "accept", "verify/tok", "modeled speedup",
+                 "match"],
+                [[r["k_max"], r["flip_p"], f"{r['acceptance_rate']:.2f}",
+                  f"{r['dispatches_per_token']:.2f}",
+                  f"{r['spec_speedup']:.2f}x", r["tokens_match"]]
+                 for r in dec["spec"]])
+        lines.append("")
+
+    srv = load("BENCH_serving.json")
+    if srv:
+        lines += [f"## Serving load ({srv['arch']}, seed {srv['seed']})", ""]
+        lines += ["### Rate sweep", ""]
+        lines += _md_table(
+            ["rate", "kv", "served", "p50 ttft", "p99 lat", "tok/s"],
+            [[r["rate_rps"], r["kv"], r["served"],
+              f"{r['p50_ttft_s']:.3f}s", f"{r['p99_latency_s']:.3f}s",
+              f"{r['tokens_per_s']:.1f}"] for r in srv["rows"]])
+        fleet = srv.get("fleet_sweep")
+        if fleet:
+            lines += ["", "### Fleet Pareto (pinned tiers)", ""]
+            lines += _md_table(
+                ["tier", "$/h", "p50 lat", "cost $"],
+                [[r["clone_type"], r["usd_per_hour"],
+                  f"{r['p50_latency_s']:.3f}s", f"{r['cost_usd']:.6f}"]
+                 for r in fleet["pinned"]])
+            m = fleet["mixed"]
+            lines += ["", f"Mixed run: {m['served']}/{m['offered']} served "
+                      f"across {m['distinct_types']} tiers, "
+                      f"{m['escalations']} escalations, identical to "
+                      f"pinned-large: "
+                      f"{m['tokens_identical_to_pinned_large']}."]
+        faults = srv.get("fault_sweep")
+        if faults:
+            lines += ["", "### Fault sweep (ADR-006)", ""]
+            lines += _md_table(
+                ["scenario", "served", "inj", "mig", "restore", "identical"],
+                [[r["scenario"], f"{r['served']}/{r['offered']}",
+                  r["faults_injected"], r["recoveries_migrated"],
+                  r["recoveries_restored"],
+                  r["tokens_identical_to_faultless"]] for r in faults])
+        over = srv.get("overload_sweep")
+        if over:
+            lines += ["", "### Overload sweep (ADR-007, "
+                      f"link {over['link']})", ""]
+            lines += _md_table(
+                ["scenario", "over", "served", "p99 ttft", "slo_i",
+                 "goodput"],
+                [[r["scenario"], f"{r['over']:.1f}x",
+                  f"{r['served']}/{r['offered']}",
+                  f"{r['p99_ttft_s']:.2f}s",
+                  f"{r['slo_attainment'].get('interactive', 1.0):.2f}",
+                  f"{r['goodput_tps']:.0f}"] for r in over["rows"]])
+        spec = srv.get("spec")
+        if spec:
+            lines += ["", "### Cross-tier speculation (ADR-008, "
+                      f"K={spec['spec_k']}, draft on {spec['draft_tier']} "
+                      f"@ {spec['draft_cost']}x step, verify on "
+                      f"{spec['verify_tier']})", ""]
+            lines += _md_table(
+                ["scenario", "served", "accept", "tok/s", "$/Mtok",
+                 "identical"],
+                [[r["scenario"], f"{r['served']}/{r['offered']}",
+                  f"{r['acceptance_rate']:.2f}",
+                  f"{r['tokens_per_s']:.1f}",
+                  f"{r['usd_per_token'] * 1e6:.2f}",
+                  r.get("tokens_identical_to_pinned_large", "-")]
+                 for r in spec["rows"]])
+        lines.append("")
+    return "\n".join(lines) + "\n"
+
+
 def main() -> None:
     from repro.launch import roofline
     os.makedirs(RESULTS, exist_ok=True)
@@ -89,6 +216,8 @@ def main() -> None:
             f.write(tbl + "\n")
     with open(os.path.join(RESULTS, "perf_cells.txt"), "w") as f:
         f.write(perf_cells())
+    with open(os.path.join(RESULTS, "bench_summary.md"), "w") as f:
+        f.write(bench_summary())
     print("summaries written to", RESULTS)
 
 

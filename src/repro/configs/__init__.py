@@ -94,6 +94,38 @@ def reduced_config(cfg: ModelConfig) -> ModelConfig:
     return dataclasses.replace(cfg, **updates)
 
 
+def draft_config(cfg: ModelConfig) -> ModelConfig:
+    """Reduced-cost draft config for cross-tier speculative decoding.
+
+    The draft model shares the target's tokenizer/vocab (acceptance
+    compares token ids directly) and its structural family, but shrinks
+    every capacity dimension well below even the smoke config: the point
+    is a per-step cost an order of magnitude under the target's, so the
+    cheap fleet tier can propose K tokens for one large-tier
+    verification (docs/architecture.md ADR-008).  ``head_dim`` is kept
+    at the smoke size so rope tables and the paged block geometry stay
+    shared with the target pool's block tables.
+    """
+    base = reduced_config(cfg)
+    updates = dict(
+        name=cfg.name + "-draft",
+        n_layers=2,
+        d_model=32,
+        d_ff=48,
+        n_experts=min(base.n_experts, 2),
+        top_k=min(base.top_k, 1),
+    )
+    if cfg.family == "ssm":
+        updates["n_heads"] = 2
+        updates["n_kv_heads"] = 2
+        updates["d_model"] = 32
+    else:
+        q_per_kv = base.q_per_kv
+        updates["n_heads"] = q_per_kv
+        updates["n_kv_heads"] = 1
+    return dataclasses.replace(base, **updates)
+
+
 __all__ = [
     "ModelConfig",
     "ShapeConfig",
@@ -107,4 +139,5 @@ __all__ = [
     "get_shape",
     "list_archs",
     "reduced_config",
+    "draft_config",
 ]

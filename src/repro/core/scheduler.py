@@ -84,6 +84,10 @@ class ServeRequest:
     deadline_s: Optional[float] = None   # latency target (relative)
     token_ts: List[float] = dataclasses.field(default_factory=list)
     retries: int = 0                 # gateway Retry-After replays
+    # speculative decoding (ADR-008): per-request draft acceptance-rate
+    # EMA — carried on the request so preemption / migration / restore
+    # keep the adaptive window K where the request left off
+    spec_ema: float = 1.0
 
 
 @dataclasses.dataclass
@@ -384,11 +388,22 @@ class PlacementEngine:
         return [t for t in self.fleet if CLONE_TYPES[t].rank() >= rmin]
 
     def choose_type(self, required_type: str, *,
-                    urgent: bool = False) -> Optional[str]:
-        """The tier this bucket's capacity should be provisioned on."""
+                    urgent: bool = False,
+                    hint: Optional[str] = None) -> Optional[str]:
+        """The tier this bucket's capacity should be provisioned on.
+
+        ``hint="spec_draft"`` picks the *cheapest adequate* tier by $-rate
+        regardless of the fleet policy: a speculative-decoding draft clone
+        (ADR-008) exists precisely to burn the cheap tier's cycles, so
+        latency/energy scoring — which would happily pin the draft next to
+        the verifier on premium — is overridden.
+        """
         cands = self.eligible(required_type)
         if not cands:
             return None
+        if hint == "spec_draft":
+            return min(cands, key=lambda t: (usd_per_second(t),
+                                             CLONE_TYPES[t].rank()))
         policy = Policy.EXEC_TIME if urgent else self.policy
         return min(cands,
                    key=lambda t: (placement_key(policy,

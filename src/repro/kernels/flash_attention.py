@@ -222,6 +222,15 @@ def paged_prefill_bhsd(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     Always the GQA-fused grid (B, Hkv, M): q regrouped so one grid step owns
     a whole group's (C*g, d) tile — the chunked generalization of the C=1
     flash-decoding grid, sharing its scalar-prefetch block-table gather.
+
+    ``n_live`` is per-row, NOT per-grid: two slots in the same dispatch may
+    score different live lengths (slot a: 8 suffix tokens; slot b: 3).
+    Speculative verification (``ops.paged_verify``, ADR-008) leans on
+    exactly this — each slot's window is its current token plus a
+    *variable* number of draft proposals ``k_i``, so ``n_live = k_i + 1``
+    varies per row while the kernel call, grid, and tile shapes stay
+    fixed at the padded C.  Dead query rows cost only masked lanes of the
+    same MXU tile, never an extra kernel call or KV fetch.
     """
     b, hq, c, d = q.shape
     _, bs, hkv, _ = k_pool.shape

@@ -108,6 +108,37 @@ def paged_prefill(q, k_pool, v_pool, block_tables, pos0, n_live, *,
     return jnp.swapaxes(out, 1, 2)
 
 
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_verify(q, k_pool, v_pool, block_tables, pos0, n_live, *,
+                 softcap: Optional[float] = None,
+                 interpret: Optional[bool] = None):
+    """Speculative-verification paged attention, model layout.
+
+    q: (B, C, Hq, D) — per slot, the queries of the current token plus its
+    ``k_i`` draft proposals (C = K+1 padded; the window's KV must already
+    be scattered into the pool); block_tables: (B, M) int32; pos0 (B,)
+    the slot cursor; n_live (B,) = ``k_i + 1`` live window tokens (0 =
+    dead row).  Returns (B, C, Hq, D) with rows >= n_live exactly zero.
+
+    This is the per-row *variable-K* generalization the verification path
+    needs (docs/architecture.md ADR-008), and it is exactly the
+    ``paged_prefill`` contract: the GQA-fused chunk kernel already masks
+    per row with ``q_chunk < n_live[b]`` and causally with
+    ``k_pos <= pos0[b] + q_chunk``, so every slot scores all K+1
+    positions in ONE kernel call per layer — one (C*g, d) MXU tile per
+    (slot, group, kv-block) — regardless of how many proposals each slot
+    brought.  Stale KV from previously rejected tokens sits at positions
+    beyond ``pos0 + n_live - 1`` and is causally masked off; positions
+    below that were overwritten by this window's scatter before the call
+    (write-then-attend), which is the whole containment argument for
+    lossless speculation.  Kept as a named entry point so the verify
+    path's kernel contract is explicit and can diverge (e.g. a fused
+    accept reduction) without touching the prefill path.
+    """
+    return paged_prefill(q, k_pool, v_pool, block_tables, pos0, n_live,
+                         softcap=softcap, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("axis",))
 def copy_blocks(leaf, src, dst, *, axis: int = 0):
     """Device-side KV block copy: ``leaf[dst] = leaf[src]`` along ``axis``.

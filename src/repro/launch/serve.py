@@ -119,9 +119,17 @@ class Completion:
 
 
 class LMBackend:
-    """Model binding: params + jitted prefill/decode + cache batch surgery."""
+    """Model binding: params + jitted prefill/decode + cache batch surgery.
 
-    def __init__(self, cfg, capacity: int = 256):
+    ``draft`` arms cross-tier speculative decoding (ADR-008): a
+    :class:`~repro.configs.ModelConfig` binds a reduced-cost draft model
+    sharing the target's vocab (its own params, context, and paged pool);
+    the string ``"oracle"`` aliases the target itself as its own draft —
+    the acceptance-rate-1.0 harness benchmarks and tests corrupt
+    deterministically.  ``None`` (default) leaves speculation off.
+    """
+
+    def __init__(self, cfg, capacity: int = 256, draft=None):
         self.cfg = cfg
         self.capacity = capacity
         self.ctx = S.make_context(None,
@@ -129,6 +137,24 @@ class LMBackend:
                                       cfg.n_experts / cfg.top_k
                                       if cfg.is_moe else 1.25))
         self.params = model.init(cfg, jax.random.PRNGKey(0))
+        self.draft_cfg = None
+        self.draft_params = None
+        self.draft_ctx = None
+        if draft == "oracle":
+            self.draft_cfg, self.draft_ctx = cfg, self.ctx
+            self.draft_params = self.params
+        elif draft is not None:
+            if draft.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    "draft model must share the target's vocab "
+                    f"({draft.vocab_size} != {cfg.vocab_size}): acceptance "
+                    "compares token ids directly")
+            self.draft_cfg = draft
+            self.draft_ctx = S.make_context(None,
+                                            moe_capacity_factor=(
+                                                draft.n_experts / draft.top_k
+                                                if draft.is_moe else 1.25))
+            self.draft_params = model.init(draft, jax.random.PRNGKey(7))
         cap = capacity
 
         def prefill_fn(params, tokens):
@@ -151,11 +177,31 @@ class LMBackend:
         self._paged_sfx_fns: Dict[tuple, object] = {}  # (bs, T, C, donate)
         self._paged_mix_fns: Dict[tuple, object] = {}  # (bs, C, T, donate)
         self._copy_fns: Dict[bool, object] = {}        # donate -> fn
+        self._spec_fns: Dict[tuple, tuple] = {}        # (bs, Tc, K)
 
     @property
     def supports_chunked(self) -> bool:
         """Whether chunked prefill / mixed dispatch cover this config."""
         return model.supports_chunked_prefill(self.cfg)
+
+    @property
+    def supports_speculative(self) -> bool:
+        """Whether a draft model is bound (and the target can run the
+        chunked verify pass — same layer requirement as ADR-005)."""
+        return self.draft_cfg is not None and self.supports_chunked
+
+    @property
+    def draft_cost_ratio(self) -> float:
+        """Draft/target parameter-count ratio — the *informational*
+        per-step cost ratio.  At smoke scale this is embedding-dominated
+        (vocab 256), so benchmarks model venue time with an explicit
+        ``--draft-cost`` instead (docs/benchmarks.md)."""
+        if self.draft_params is None:
+            return 1.0
+        n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(self.params))
+        d = sum(int(np.prod(x.shape))
+                for x in jax.tree.leaves(self.draft_params))
+        return d / max(n, 1)
 
     def cache_mem_bytes(self, batch: int) -> int:
         return pytree_bytes(model.abstract_cache(self.cfg, batch,
@@ -176,6 +222,71 @@ class LMBackend:
         """Zero KV block pool + per-slot state rows (block 0 = trash)."""
         return model.init_paged_cache(self.cfg, max_slots, num_blocks,
                                       block_size)
+
+    def init_draft_pool(self, max_slots: int, num_blocks: int,
+                        block_size: int):
+        """Zero paged pool for the *draft* model, same block geometry as
+        the target pool so the two share one set of block tables
+        (ADR-008: no extra host bookkeeping for the draft side)."""
+        return model.init_paged_cache(self.draft_cfg, max_slots, num_blocks,
+                                      block_size)
+
+    def spec_draft_fn(self, block_size: int, catchup_steps: int,
+                      k_max: int):
+        """Jitted draft half of a speculative round (ADR-008).
+
+        ``fn(dparams, dpool, ctoks (S,Tc), cpos0 (S,), n_c (S,), tok
+        (S,1), pos (S,), k_live (S,), tables (S,M))`` runs the draft
+        model's catch-up (teacher-forcing the ``n_c`` committed target
+        tokens it has not yet ingested, from each row's draft cursor
+        ``cpos0``) plus up to ``k_max`` greedy proposal steps per row in
+        ONE dispatch (:func:`model.draft_loop`), returning ``(drafts
+        (S, k_max), new_dpool)``.  Cached per (block_size,
+        catchup_steps, k_max); callers bucket ``catchup_steps`` to
+        powers of two so only O(log) variants compile."""
+        key = ("draft", block_size, catchup_steps, k_max)
+        fn = self._spec_fns.get(key)
+        if fn is not None:
+            return fn
+        dcfg, dctx, capacity = self.draft_cfg, self.draft_ctx, self.capacity
+
+        def draft(dparams, dpool, ctoks, cpos0, n_c, tok, pos, k_live,
+                  tables):
+            return model.draft_loop(
+                dcfg, dparams, dpool, ctoks, cpos0, n_c, tok, pos, k_live,
+                dctx, block_tables=tables, block_size=block_size,
+                catchup_steps=catchup_steps, num_steps=k_max,
+                capacity=capacity)
+
+        fn = jax.jit(draft)
+        self._spec_fns[key] = fn
+        return fn
+
+    def spec_verify_fn(self, block_size: int):
+        """Jitted verify half of a speculative round (ADR-008).
+
+        ``fn(params, pool, toks (S, K+1), pos0 (S,), n_live (S,), tables
+        (S,M))`` scores each row's current token plus its ``n_live - 1``
+        draft proposals in ONE chunked teacher-forced pass over the
+        *target* (:func:`model.verify_window` through the GQA-fused
+        ``paged_verify`` kernel), returning ``(greedy (S, K+1),
+        new_pool)`` — the grid the host accepts with
+        :func:`model.spec_accept`."""
+        key = ("verify", block_size)
+        fn = self._spec_fns.get(key)
+        if fn is not None:
+            return fn
+        cfg, ctx, capacity = self.cfg, self.ctx, self.capacity
+
+        def verify(params, pool, toks, pos0, n_live, tables):
+            return model.verify_window(
+                cfg, params, pool, toks, pos0, n_live, ctx,
+                block_tables=tables, block_size=block_size,
+                capacity=capacity)
+
+        fn = jax.jit(verify)
+        self._spec_fns[key] = fn
+        return fn
 
     def paged_fns(self, block_size: int, window: int = 1,
                   donate: bool = False):
@@ -961,6 +1072,23 @@ class _SlotEngine:
         self.decode_counts: Optional[np.ndarray] = None
         self._tables_dev = None             # device tables cache
         self._tables_ver = -1
+        # speculative decoding (ADR-008): the paired cheap-tier draft
+        # clone, the draft model's own paged pool (SAME block tables as
+        # ``kv``), per-slot draft-pool cursors (``dpos[i] <= kv.pos[i]``;
+        # the gap is the committed history the next catch-up replays),
+        # the stashed verify builder for the round in flight, and the
+        # (drafts, n_spec) pending host-side acceptance.  ``spec_on``
+        # goes (stickily) False when the draft dies or acceptance
+        # collapses — the engine degrades to plain window decode.
+        self.spec_on = False
+        self.draft_clone = None
+        self.draft_pool = None
+        self.spec_k = 0
+        self.dpos = np.zeros((kv.max_slots,), np.int32)
+        self._verify_builder = None
+        self._spec_round: Optional[np.ndarray] = None   # k per row, in flight
+        self.spec_pending: Optional[tuple] = None
+        self.spec_rounds_done = 0
 
     def device_tables(self):
         """Device copy of ``kv.tables``, re-uploaded only when the host
@@ -1109,6 +1237,16 @@ class ServeReport:
     per_tenant: Dict[str, Dict[str, float]] = dataclasses.field(
         default_factory=dict)
     peak_queue_depth: int = 0
+    # speculative decoding (ADR-008): ``spec_rounds`` counts completed
+    # draft+verify rounds, ``spec_tokens`` the tokens emitted through
+    # them (lossless: token-identical to plain greedy decode),
+    # ``acceptance_rate`` accepted / proposed draft tokens, and
+    # ``spec_fallbacks`` the engines that degraded to plain decode —
+    # draft-clone death or acceptance collapse, never a stall
+    spec_rounds: int = 0
+    spec_tokens: int = 0
+    acceptance_rate: float = 0.0
+    spec_fallbacks: int = 0
 
     def summary(self) -> str:
         """One-line digest (documented in docs/benchmarks.md)."""
@@ -1157,7 +1295,10 @@ class ClientHandler:
                  hedge_min_samples: int = 8,
                  gateway: Optional[StreamingGateway] = None,
                  breaker_max_open_s: Optional[float] = None,
-                 breaker_max_probes: Optional[int] = None):
+                 breaker_max_probes: Optional[int] = None,
+                 speculative: bool = False, spec_k: int = 4,
+                 spec_corruption: float = 0.0,
+                 draft_cost: Optional[float] = None):
         if kv not in ("paged", "contiguous"):
             raise ValueError(f"kv must be 'paged' or 'contiguous': {kv!r}")
         if faults and kv != "paged":
@@ -1182,6 +1323,28 @@ class ClientHandler:
             raise ValueError("donate_kv needs an executor that runs each "
                              "dispatch exactly once (the default venue "
                              "executor re-times cheap calls)")
+        # cross-tier speculative decoding (ADR-008)
+        if speculative:
+            if kv != "paged":
+                raise ValueError("speculative decoding scores draft "
+                                 "windows through per-slot block tables; "
+                                 "it requires kv='paged'")
+            if donate_kv:
+                raise ValueError("speculative decoding keeps the target "
+                                 "pool alive across the draft round-trip; "
+                                 "a donated pool is consumed (ADR-002)")
+            if not getattr(backend, "supports_speculative", False):
+                raise ValueError("speculative decoding needs a backend "
+                                 "with a bound draft model "
+                                 "(LMBackend(draft=...)) and chunked-"
+                                 "verify support")
+            if spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1: {spec_k}")
+        self.speculative = speculative
+        self.spec_k = spec_k
+        self.spec_corruption = spec_corruption
+        self.draft_cost = (draft_cost if draft_cost is not None
+                           else getattr(backend, "draft_cost_ratio", 1.0))
         # chunked prefill / mixed dispatch (ADR-005): default ON whenever
         # the backend supports it (all-attention, windowless) and the KV
         # mode is paged; backends without the capability flag (test stubs)
@@ -1197,7 +1360,14 @@ class ClientHandler:
                              "backend with chunked-prefill support "
                              "(all-attention, windowless layers)")
         if mixed_dispatch is None:
-            mixed_dispatch = prefill_chunk > 0
+            # speculative engines keep prefill and verify as separate
+            # tiles of one closure (the verify window IS the decode
+            # tile); the fused mixed scan has no verify variant
+            mixed_dispatch = prefill_chunk > 0 and not speculative
+        elif mixed_dispatch and speculative:
+            raise ValueError("mixed_dispatch and speculative decoding are "
+                             "mutually exclusive: the spec round's decode "
+                             "tile is a verify window, not a decode scan")
         elif mixed_dispatch and prefill_chunk == 0:
             raise ValueError("mixed_dispatch requires prefill_chunk > 0 "
                              "(the fused step advances chunk tokens per "
@@ -1312,6 +1482,16 @@ class ClientHandler:
         self._hedges: Dict[object, object] = {}   # task <-> partner
         self._step_hist: List[float] = []         # recent step durations
         self._kv_tok_bytes: Optional[float] = None
+        # speculative telemetry (ADR-008); ``spec_draft_cids`` records
+        # every clone ever paired as a draft (fault tests target them),
+        # ``_spec_rng`` drives the deterministic bench-harness corruption
+        self.spec_rounds = 0
+        self.spec_tokens = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+        self.spec_fallbacks = 0
+        self.spec_draft_cids: List[int] = []
+        self._spec_rng = np.random.default_rng(0xC0FFEE)
 
     # ---------------------------------------------------------------- clones
     def _free_clone(self, lo_rank: Optional[int] = None,
@@ -1563,7 +1743,14 @@ class ClientHandler:
     def _start_engine(self, clone) -> _SlotEngine:
         """Engine for ``clone``; the clone's KV pool is allocated once and
         reused (reset) across engine generations — no per-spawn zeros, and
-        the prefix index survives, so cached prompts keep paying off."""
+        the prefix index survives, so cached prompts keep paying off.
+
+        A speculative handler (ADR-008) additionally pairs the engine
+        with a *draft* clone on the cheapest adequate tier (the
+        ``spec_draft`` placement hint) and gives it a fresh draft-model
+        pool with the target pool's exact block geometry — the two sides
+        share one set of block tables.  No draft clone available means
+        the engine simply runs non-speculative (never a stall)."""
         clone.busy = True
         kv = self._kv_pools.get(clone.cid)
         if kv is None:
@@ -1573,9 +1760,56 @@ class ClientHandler:
             self._kv_pools[clone.cid] = kv
         else:
             kv.reset()
-        return _SlotEngine(self.backend, clone, kv, self.decode_window,
-                           self.donate_kv, self.prefill_chunk,
-                           self.mixed_dispatch)
+        engine = _SlotEngine(self.backend, clone, kv, self.decode_window,
+                             self.donate_kv, self.prefill_chunk,
+                             self.mixed_dispatch)
+        if self.speculative:
+            dc = self._acquire_draft_clone(clone)
+            if dc is not None:
+                engine.spec_on = True
+                engine.draft_clone = dc
+                engine.spec_k = self.spec_k
+                engine.draft_pool = self.backend.init_draft_pool(
+                    kv.max_slots, kv.num_blocks, kv.bs)
+                if dc.cid not in self.spec_draft_cids:
+                    self.spec_draft_cids.append(dc.cid)
+            else:
+                self.spec_fallbacks += 1
+        return engine
+
+    def _acquire_draft_clone(self, verify_clone):
+        """Claim a cheap-tier clone as the engine's draft partner.  The
+        placement hint picks the cheapest $-rate tier the fleet offers;
+        a free RUNNING clone of that tier is preferred, else one is
+        resumed/booted through the pool lifecycle.  The verify clone
+        itself is never a candidate (the whole point is overlap)."""
+        t = self.placement.choose_type(self.fleet[0], hint="spec_draft") \
+            or self.fleet[0]
+        for c in self.pool.running_secondaries():
+            if (c is not verify_clone and not c.busy and c.serveable
+                    and c.ctype.name == t):
+                c.busy = True
+                return c
+        try:
+            clones, _ = self.pool.acquire(t, n=1, exclude_primary=True)
+        except Exception:
+            return None
+        for c in clones:
+            if c is not verify_clone and c.serveable:
+                c.busy = True
+                return c
+        self.pool.release(clones)
+        return None
+
+    def _release_engine(self, engine: _SlotEngine) -> None:
+        """Return an engine's clone — and its draft partner — to the
+        pool."""
+        clones = [engine.clone]
+        if engine.draft_clone is not None:
+            clones.append(engine.draft_clone)
+            engine.draft_clone = None
+            engine.spec_on = False
+        self.pool.release(clones)
 
     def _admit(self, engine: _SlotEngine, req: ServeRequest) -> None:
         """Admit through the engine, folding the admission's prefix-cache
@@ -1689,12 +1923,27 @@ class ClientHandler:
         before submission.
         """
         kv = engine.kv
-        # tokens each slot will emit this window: min(window, budget left)
+        spec = engine.spec_on and engine.draft_clone is not None
+        # tokens each slot will emit this window: min(window, budget left).
+        # A speculative round sizes each row's window as its *verify*
+        # width k_i + 1 instead (ADR-008): k_i adapts to the row's draft
+        # acceptance EMA, clamped so (a) at least the current token is
+        # scored, (b) the budget can absorb a full accept (k <= left - 1),
+        # and (c) no window write ever needs the capacity - 1 pin
+        # (k <= capacity - 1 - pos — a pinned write would collapse
+        # last-live-wins and break stepwise token identity).
         counts = np.zeros((kv.max_slots,), np.int32)
         for slot in np.nonzero(kv.active)[0]:
             s = engine.slots[slot]
-            counts[slot] = min(engine.window,
-                               s.req.max_new_tokens - len(s.out))
+            left = s.req.max_new_tokens - len(s.out)
+            if spec:
+                p = int(kv.pos[slot])
+                room = max(kv.capacity - 1 - min(p, kv.capacity - 1), 0)
+                k = max(1, int(round(s.req.spec_ema * engine.spec_k)))
+                k = max(min(k, engine.spec_k, left - 1, room), 0)
+                counts[slot] = k + 1
+            else:
+                counts[slot] = min(engine.window, left)
         if counts.any():
             # whole window's blocks up front; exhaustion rolls back
             # pending joins / preempts victims (zeroing their counts)
@@ -1831,6 +2080,11 @@ class ClientHandler:
                     jnp.asarray(stabs))
             nbytes += int(stoks.nbytes)
 
+        if spec and do_decode:
+            return self._submit_spec_round(
+                engine, counts, rows, join_batch, cow_batch, mig_batches,
+                sfx_batch, sfx_steps, tables, pos, nbytes)
+
         def step_fn(params, pool, tok, pos, steps_left, tables):
             for mfn, spool, sids, dids, sslots, dslots in mig_batches:
                 pool = mfn(pool, spool, sids, dids, sslots, dslots)
@@ -1879,6 +2133,147 @@ class ClientHandler:
         self._charge(engine.clone, task.venue_seconds)
         return task
 
+    # ------------------------------------------------------- speculative
+    def _slot_history(self, engine: _SlotEngine, slot: int) -> List[int]:
+        """Tokens resident at positions ``0 .. kv.pos[slot] - 1`` of a
+        slot — the committed context the draft model's catch-up replays
+        (the *current* token at ``kv.pos`` is the decode input, read from
+        ``tok_host``, never from here)."""
+        s = engine.slots[slot]
+        base = np.zeros((self.prompt_pad,), np.int32)
+        pr = s.req.prompt
+        base[:min(len(pr), self.prompt_pad)] = pr[:self.prompt_pad]
+        seq = base.tolist() + list(s.out)
+        return seq[:int(engine.kv.pos[slot])]
+
+    def _submit_spec_round(self, engine: _SlotEngine, counts, rows,
+                           join_batch, cow_batch, mig_batches, sfx_batch,
+                           sfx_steps, tables, pos, nbytes):
+        """Dispatch one speculative round: stash the verify closure
+        (which carries the round's join/CoW/migration/suffix folds), then
+        fire the *draft* dispatch on the cheap-tier partner clone
+        (ADR-008).  The verify is submitted when the draft completes —
+        or immediately with zero drafts when every row's window clamped
+        to k = 0 (capacity edge / one-token budgets), where the verify
+        degenerates to a plain decode step."""
+        kv = engine.kv
+        act = kv.active.astype(bool)
+        k_arr = np.maximum(counts - 1, 0).astype(np.int32)
+        n_live = jnp.asarray(counts)
+        tok_snap = engine.tok_host.copy()
+        prefill_into = engine.prefill_into
+        v_fn = self.backend.spec_verify_fn(kv.bs)
+        params, pool0 = self.backend.params, kv.pool
+
+        def verify_builder(drafts_np):
+            x = np.concatenate([tok_snap[:, None],
+                                drafts_np.astype(np.int32)], axis=1)
+
+            def step_fn(params, pool, toks, pos, n_live, tables):
+                for mfn, spool, sids, dids, sslots, dslots in mig_batches:
+                    pool = mfn(pool, spool, sids, dids, sslots, dslots)
+                firsts = None
+                if join_batch is not None:
+                    jtoks, blks, slots = join_batch
+                    firsts, pool = prefill_into(params, jtoks, pool, blks,
+                                                slots)
+                if cow_batch is not None:
+                    copy_into, src, dst = cow_batch
+                    pool = copy_into(pool, src, dst)
+                firsts_sfx = None
+                if sfx_batch is not None:
+                    pw, stoks, spos, sn, stabs = sfx_batch
+                    firsts_sfx, pool = pw(params, pool, stoks, spos, sn,
+                                          stabs)
+                greedy, pool = v_fn(params, pool, toks, pos, n_live, tables)
+                return firsts, firsts_sfx, greedy, pool
+
+            # the chunked verify scores every window position in ONE
+            # sequential pass — that is the dispatches-per-token win
+            step_fn.seq_steps = (int(join_batch is not None)
+                                 + int(cow_batch is not None)
+                                 + len(mig_batches) + sfx_steps + 1)
+            args = (params, pool0, jnp.asarray(x), pos, n_live, tables)
+            return step_fn, args, nbytes + int(x.nbytes)
+
+        engine._verify_builder = verify_builder
+        engine._spec_round = k_arr
+        if int(k_arr.sum()) == 0:
+            return self._submit_spec_verify(
+                engine, np.zeros((kv.max_slots, engine.spec_k), np.int32),
+                np.zeros((kv.max_slots,), np.int32))
+        # --- draft dispatch: catch-up (committed tokens the draft pool
+        # has not ingested) + k greedy proposal steps, one jitted call ---
+        n_c = np.where(act, kv.pos - engine.dpos, 0).astype(np.int32)
+        tcpad = pow2_bucket(max(int(n_c.max()), 1))
+        ctoks = np.zeros((kv.max_slots, tcpad), np.int32)
+        for slot in rows:
+            if n_c[slot] > 0:
+                hist = self._slot_history(engine, slot)
+                ctoks[slot, :n_c[slot]] = hist[int(engine.dpos[slot]):]
+        d_fn = self.backend.spec_draft_fn(kv.bs, tcpad, engine.spec_k)
+
+        def draft_step(dparams, dpool, ctoks, cpos0, n_c, tok, pos,
+                       k_live, tables):
+            return d_fn(dparams, dpool, ctoks, cpos0, n_c, tok, pos,
+                        k_live, tables)
+
+        draft_step.seq_steps = tcpad + engine.spec_k
+        draft_step.step_scale = self.draft_cost
+        dargs = (self.backend.draft_params, engine.draft_pool,
+                 jnp.asarray(ctoks),
+                 jnp.asarray(np.where(act, engine.dpos, 0)),
+                 jnp.asarray(n_c), jnp.asarray(tok_snap[:, None]),
+                 pos, jnp.asarray(k_arr), tables)
+        delay = (self.autoscaler.clone_ready_delay(engine.draft_clone,
+                                                   self.clock.now())
+                 + self._net_s(int(ctoks.nbytes)))
+        task = self.dispatcher.submit(
+            engine.draft_clone, draft_step, dargs, executor=self.executor,
+            extra_delay=delay, label="draft")
+        self._charge(engine.draft_clone, task.venue_seconds)
+        return task
+
+    def _spec_draft_done(self, engine: _SlotEngine, task):
+        """Fold a completed draft dispatch: take the draft pool update
+        and the proposals (bench harnesses corrupt them here,
+        deterministically), advance the draft cursors past what the
+        draft ingested+proposed, and chain the verify dispatch."""
+        drafts, dpool = task.value
+        engine.draft_pool = dpool
+        drafts = np.asarray(drafts, np.int32)
+        k_arr = engine._spec_round
+        if self.spec_corruption > 0:
+            vocab = getattr(getattr(self.backend, "cfg", None),
+                            "vocab_size", None)
+            flips = self._spec_rng.random(drafts.shape) \
+                < self.spec_corruption
+            bumped = drafts + 1 if vocab is None else (drafts + 1) % vocab
+            drafts = np.where(flips, bumped, drafts).astype(np.int32)
+        rows = engine.decode_rows
+        if rows is not None:
+            engine.dpos[rows] = engine.kv.pos[rows] + k_arr[rows]
+        return self._submit_spec_verify(engine, drafts, k_arr)
+
+    def _submit_spec_verify(self, engine: _SlotEngine, drafts: np.ndarray,
+                            n_spec: np.ndarray):
+        """Dispatch the stashed verify closure with the round's draft
+        proposals — or all-zero drafts with ``n_spec = 0`` when the
+        draft clone died mid-round: the verify then accepts nothing and
+        emits exactly one plain greedy token per row, preserving the
+        round's join/CoW/migration folds (the cohort never stalls)."""
+        builder, engine._verify_builder = engine._verify_builder, None
+        step_fn, args, nbytes = builder(drafts)
+        engine.spec_pending = (drafts, np.asarray(n_spec, np.int32))
+        delay = (self.autoscaler.clone_ready_delay(engine.clone,
+                                                   self.clock.now())
+                 + self._net_s(nbytes))
+        task = self.dispatcher.submit(
+            engine.clone, step_fn, args, executor=self.executor,
+            extra_delay=delay, label="step")
+        self._charge(engine.clone, task.venue_seconds)
+        return task
+
     def _engine_step_done(self, engine: _SlotEngine, task,
                           completions: List[ServeCompletion]) -> bool:
         """Fold a completed step back into host state.  True while alive."""
@@ -1891,6 +2286,7 @@ class ClientHandler:
             t0 = int(ft)
             engine.slots[slot] = _Slot(req, [t0], now, token_ts=[now])
             engine.tok_host[slot] = t0
+            engine.dpos[slot] = 0       # draft replays full history
             kv.active[slot] = True
         engine.submitted_joins = []
         firsts_sfx = [] if firsts_sfx is None else np.asarray(firsts_sfx)
@@ -1909,6 +2305,7 @@ class ClientHandler:
                 t0 = int(ft)
                 engine.slots[slot] = _Slot(req, [t0], now, token_ts=[now])
             engine.tok_host[slot] = t0
+            engine.dpos[slot] = 0       # draft replays full history
             kv.active[slot] = True
         engine.submitted_sfx = []
         for (slot, req, out, ft, *_rest) in engine.submitted_migrations:
@@ -1918,6 +2315,7 @@ class ClientHandler:
             engine.slots[slot] = _Slot(req, list(out), ft,
                                        token_ts=_carried_ts(req, len(out)))
             engine.tok_host[slot] = int(out[-1])
+            engine.dpos[slot] = 0       # draft replays full history
             kv.active[slot] = True
             self.recoveries_migrated += 1
         engine.submitted_migrations = []
@@ -1925,13 +2323,40 @@ class ClientHandler:
         if engine.decode_rows is not None and nxt is not None:
             nxt = np.asarray(nxt)                       # (S, window)
             rows = engine.decode_rows
-            n = engine.decode_counts[rows]              # >= 1 per active row
+            spec_pend, engine.spec_pending = engine.spec_pending, None
+            if spec_pend is not None:
+                # speculative fold (ADR-008): the verify grid scored the
+                # current token plus every draft; accept the longest
+                # agreeing prefix and emit one extra target token — the
+                # emitted stream is bitwise the stepwise greedy stream
+                drafts, n_spec = spec_pend
+                acc = model.spec_accept(nxt, drafts, n_spec)[rows]
+                n = (acc + 1).astype(np.int32)
+                self.spec_rounds += 1
+                self.spec_proposed += int(n_spec[rows].sum())
+                self.spec_accepted += int(acc.sum())
+                self.spec_tokens += int(n.sum())
+                for slot, a in zip(rows, acc.tolist()):
+                    k_i = int(n_spec[slot])
+                    if k_i > 0:     # EMA drives next round's window K
+                        req = engine.slots[slot].req
+                        req.spec_ema = (0.5 * req.spec_ema
+                                        + 0.5 * (a / k_i))
+            else:
+                n = engine.decode_counts[rows]          # >= 1 per active row
             # vectorized fold: last live token and the capacity clamp via
             # fancy indexing (the clamp: past capacity the write position
             # pins to the last slot, like the contiguous path, so the
             # written-token count must not keep growing either)
             engine.tok_host[rows] = nxt[rows, n - 1]
             kv.pos[rows] = np.minimum(kv.pos[rows] + n, kv.capacity)
+            # draft cursor never runs ahead of the committed context:
+            # rejected proposals' KV is garbage on both pools, the next
+            # catch-up overwrites it
+            engine.dpos[rows] = np.minimum(engine.dpos[rows], kv.pos[rows])
+            if spec_pend is not None:
+                engine.spec_rounds_done += 1
+                self._maybe_drop_speculation(engine)
             # streamed delivery stamps: tokens leave the clone spread
             # across the dispatch interval, so interpolate within
             # [submitted_at, done_at] per row (ADR-007 TTFT/TPOT)
@@ -1957,6 +2382,21 @@ class ClientHandler:
                 engine.slots[slot] = None
                 kv.free_slot(slot)
         return engine.alive()
+
+    def _maybe_drop_speculation(self, engine: _SlotEngine) -> None:
+        """Adaptive bail-out (ADR-008): when the cohort's mean
+        acceptance EMA collapses, speculation costs more dispatches than
+        it saves — release the draft clone and fall back to the plain
+        decode window for this engine (sticky; counted as a fallback)."""
+        if not engine.spec_on or engine.spec_rounds_done < 3:
+            return
+        emas = [s.req.spec_ema for s in engine.slots if s is not None]
+        if emas and float(np.mean(emas)) < 0.25:
+            engine.spec_on = False
+            self.spec_fallbacks += 1
+            if engine.draft_clone is not None:
+                self.pool.release([engine.draft_clone])
+                engine.draft_clone = None
 
     # ------------------------------------------------------- fault recovery
     def _requeue_lost(self, req: ServeRequest) -> None:
@@ -2040,9 +2480,16 @@ class ClientHandler:
         round: cancel its in-flight dispatches (their values will never
         arrive), resolve hedge races, and recover its engine's requests."""
         for clone, fault in self.injector.drain_failed():
+            draft_orphans = []        # engines whose draft died mid-round
             for task in [t for t in inflight if t.clone is clone]:
-                inflight.pop(task)
+                unit = inflight.pop(task)
                 self.dispatcher.cancel(task)
+                if task.label == "draft":
+                    # the VERIFY closure (and this round's join/CoW/
+                    # migration folds) is stashed on the engine — it can
+                    # still run, with zero drafts, on the healthy clone
+                    draft_orphans.append(unit)
+                    continue
                 partner = self._hedges.pop(task, None)
                 if partner is not None:
                     self._hedges.pop(partner, None)
@@ -2060,8 +2507,34 @@ class ClientHandler:
                     self.ledger.drop(key)
                     break
             if engine is not None:
+                # a dead verify clone orphans its in-flight draft
+                # dispatch (the verify target is gone) and frees the
+                # draft partner back to the pool
+                for t in [t for t, u in inflight.items() if u is engine]:
+                    inflight.pop(t)
+                    self.dispatcher.cancel(t)
+                if engine.draft_clone is not None:
+                    self.pool.release([engine.draft_clone])
+                    engine.draft_clone = None
                 self._recover_engine(engine, fault, engines)
             self.pool.release([clone])
+            # draft-clone death degrades its engines to plain decode —
+            # they never stall (ADR-008): an interrupted round completes
+            # as a zero-draft verify (accepts nothing, emits one plain
+            # greedy token per row, folds the round's joins/migrations)
+            for eng in engines.values():
+                if eng.draft_clone is clone:
+                    eng.draft_clone = None
+                    eng.spec_on = False
+                    self.spec_fallbacks += 1
+            for eng in draft_orphans:
+                if id(eng) in engines and eng._verify_builder is not None:
+                    vt = self._submit_spec_verify(
+                        eng,
+                        np.zeros((eng.kv.max_slots, max(eng.spec_k, 1)),
+                                 np.int32),
+                        np.zeros((eng.kv.max_slots,), np.int32))
+                    inflight[vt] = eng
 
     # ---------------------------------------------------------------- hedge
     def _maybe_hedge(self, task, engine: _SlotEngine,
@@ -2279,6 +2752,12 @@ class ClientHandler:
                         continue          # hedge loser already resolved
                     self._resolve_hedge(task, inflight)
                     if paged:
+                        if task.label == "draft":
+                            # half-round: chain the verify on the target
+                            vt = self._spec_draft_done(unit, task)
+                            inflight[vt] = unit
+                            self._maybe_hedge(vt, unit, inflight)
+                            continue
                         if self._engine_step_done(unit, task, completions):
                             t2 = self._submit_engine_step(unit)
                             inflight[t2] = unit
@@ -2286,7 +2765,7 @@ class ClientHandler:
                         else:
                             engines.pop(id(unit), None)
                             self.ledger.drop(id(unit))
-                            self.pool.release([unit.clone])
+                            self._release_engine(unit)
                     else:
                         cohort = unit
                         tok, cohort.cache = task.value
@@ -2411,7 +2890,12 @@ class ClientHandler:
             cache_hits=gw.cache_hits if gw is not None else 0,
             shed_by_slo=dict(gw.shed_by_slo) if gw is not None else {},
             per_tenant=per_tenant,
-            peak_queue_depth=self._peak_queue_depth)
+            peak_queue_depth=self._peak_queue_depth,
+            spec_rounds=self.spec_rounds,
+            spec_tokens=self.spec_tokens,
+            acceptance_rate=(self.spec_accepted
+                             / max(self.spec_proposed, 1)),
+            spec_fallbacks=self.spec_fallbacks)
 
 
 def main() -> None:

@@ -707,3 +707,118 @@ def mixed_loop(cfg: ModelConfig, params: Dict, cache: Dict,
         step, (cache, tok0, pos.astype(jnp.int32), first0),
         jnp.arange(num_steps, dtype=jnp.int32))
     return jnp.swapaxes(toks, 0, 1), first, cache
+
+
+def verify_window(cfg: ModelConfig, params: Dict, cache: Dict,
+                  tokens: jax.Array, pos0: jax.Array, n_live: jax.Array,
+                  ctx: RunContext, *, block_tables: jax.Array,
+                  block_size: int, capacity: int):
+    """Speculative verification: score a K+1 token window in ONE dispatch.
+
+    The target-model half of cross-tier speculative decoding
+    (docs/architecture.md ADR-008).  Row i of ``tokens`` (B, C) is
+    ``[t0, d_1 .. d_k, pad...]`` — the slot's current token followed by
+    ``k_i`` draft proposals — of which the first ``n_live[i] = k_i + 1``
+    are fed, teacher-forced, at positions ``pos0[i] .. pos0[i]+k_i``
+    through the ``chunk_step`` machinery (one chunked model pass: paged
+    KV writes through ``block_tables``, per-row variable-length causal
+    masking in the GQA-fused ``paged_prefill`` kernel).  Unlike
+    ``chunk_step`` it unembeds EVERY position, returning the greedy token
+    grid (B, C): ``greedy[i, j]`` is the target's next token after
+    feeding ``tokens[i, j]`` — bitwise the same computation as ``j+1``
+    stepwise :func:`decode_step` calls, because chunk-mode attention is
+    write-then-attend with the same ``capacity - 1`` clamp.
+
+    Acceptance happens on the host (:func:`spec_accept`): with
+    ``a = accepts[i]`` draft tokens accepted, the emitted tokens are
+    ``greedy[i, :a+1]`` (each accepted draft token equals the greedy
+    token before it, so the greedy row IS the decoded continuation), the
+    new current token is ``greedy[i, a]``, and the cursor advances by
+    ``a + 1``.  Rejected positions ``pos0+a+1 .. pos0+k`` hold stale KV:
+    harmless, because every later dispatch either overwrites a position
+    before attending to it (decode and chunk modes both write first) or
+    causally masks it (``k_pos <= pos0 + q``), exactly the chunked-
+    prefill containment argument of ADR-005.  Callers must clamp
+    ``k_i <= capacity - pos0[i] - 1`` so no window write needs the
+    ``capacity - 1`` pin (a pinned write would collapse last-live-wins
+    instead of last-step-wins and break stepwise equivalence);
+    ``n_live = 0`` rows are dead (trash-block parking, caller masks).
+
+    Returns (greedy (B, C) int32, new_cache).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    toks = tokens.astype(jnp.int32)
+    x = jnp.take(params["embed"], toks, axis=0).astype(dtype)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
+    c = x.shape[1]
+    pos0 = pos0.astype(jnp.int32)
+    n_live = n_live.astype(jnp.int32)
+    eff_tables = jnp.where((n_live > 0)[:, None],
+                           block_tables.astype(jnp.int32), 0)
+    positions = jnp.minimum(pos0[:, None] + jnp.arange(c), capacity - 1)
+    rope = rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+    x, new_cache, _ = apply_stack(cfg, params, x, ctx, rope, cache, "chunk",
+                                  prefix_len=0, pos=(pos0, n_live),
+                                  cache_capacity=capacity,
+                                  block_tables=eff_tables,
+                                  block_size=block_size)
+    logits = unembed(cfg, params, x, ctx)                     # (B, C, V)
+    return jnp.argmax(logits, -1).astype(jnp.int32), new_cache
+
+
+def draft_loop(cfg: ModelConfig, params: Dict, cache: Dict,
+               ctoks: jax.Array, cpos0: jax.Array, n_ctok: jax.Array,
+               tokens: jax.Array, pos: jax.Array, k_live: jax.Array,
+               ctx: RunContext, *, block_tables: jax.Array,
+               block_size: int, catchup_steps: int, num_steps: int,
+               capacity: int):
+    """Draft side of speculative decoding: catch-up + K greedy steps.
+
+    Runs on the *draft* model (a reduced-cost config sharing the target's
+    vocab) against the draft's own paged pool, indexed by the SAME block
+    tables as the target (ADR-008: the draft pool mirrors the target's
+    block geometry, so no extra host bookkeeping).  Two phases under one
+    jitted dispatch:
+
+    1. **Catch-up** (``catchup_steps > 0``): teacher-force ``ctoks``
+       (B, Tc) — committed target tokens the draft has not yet ingested —
+       at positions ``cpos0[i] ..`` via :func:`prefill_loop`.  After a
+       partial accept this is empty; after a full accept it is one token;
+       after admit/restore/migration it replays the whole history.  One
+       uniform resync path subsumes every case.
+    2. **Draft**: ``k_live[i]`` greedy steps from the current token via
+       :func:`decode_loop` (dead rows freeze and park in the trash
+       block), emitting the proposals ``verify_window`` scores.
+
+    Returns (drafts (B, num_steps) int32, new_cache).
+    """
+    if catchup_steps > 0:
+        _, cache = prefill_loop(cfg, params, cache, ctoks, cpos0, n_ctok,
+                                ctx, block_tables=block_tables,
+                                block_size=block_size,
+                                num_steps=catchup_steps, capacity=capacity)
+    return decode_loop(cfg, params, cache, tokens, pos, k_live, ctx,
+                       block_tables=block_tables, block_size=block_size,
+                       num_steps=num_steps, capacity=capacity)
+
+
+def spec_accept(greedy: np.ndarray, drafts: np.ndarray,
+                n_spec: np.ndarray) -> np.ndarray:
+    """Longest-matching-prefix acceptance rule (host side, numpy).
+
+    greedy: (B, C >= K+1) verify_window output; drafts: (B, K) draft
+    proposals; n_spec: (B,) live draft count per row (0..K).  Row i
+    accepts ``a`` draft tokens where ``a`` is the length of the longest
+    prefix with ``drafts[i, j] == greedy[i, j]`` for all ``j < a``
+    (draft token ``d_{j+1}`` is accepted iff it equals the target's
+    greedy choice after the previous token).  Lossless by construction:
+    emitted tokens ``greedy[i, :a+1]`` are exactly what ``a + 1``
+    stepwise greedy decode steps would produce.
+
+    Returns accepts (B,) int: accepted draft-token count per row.
+    """
+    k = drafts.shape[1]
+    m = (np.asarray(greedy)[:, :k] == np.asarray(drafts))
+    m &= np.arange(k)[None, :] < np.asarray(n_spec)[:, None]
+    return np.cumprod(m, axis=1).sum(axis=1).astype(np.int64)

@@ -442,3 +442,45 @@ def test_faults_require_paged_kv():
     with pytest.raises(ValueError):
         ClientHandler(th.FakeBackend(), kv="contiguous", hedge_factor=2.0,
                       executor=lambda c, f, a: (f(*a), 0.05))
+
+
+# --------------------------------------------------------------------------- #
+# speculative decoding under faults (ADR-008): the draft tier is
+# sacrificial — killing it degrades the engine, never the stream
+# --------------------------------------------------------------------------- #
+def _run_spec_chaos(faults=None, *, speculative=True, seed=0, n=12):
+    h = _chaos_handler(faults=faults, backend=th.SpecFakeBackend(),
+                       speculative=speculative, spec_k=4)
+    reqs = poisson_arrivals(8.0, n, seed=seed, prompt_len=8, vocab=64,
+                            max_new_tokens=10, prefix_len=4)
+    rep = h.run(reqs)
+    assert_no_block_leak(h)
+    return h, rep
+
+
+def test_chaos_spec_draft_kill_degrades_token_identical():
+    """Kill the draft clone mid-decode: the interrupted round completes
+    as a zero-draft verify on the healthy target, the engine stickily
+    degrades to plain decode, and every stream stays bitwise identical
+    to the non-speculative baseline — a dead draft tier costs speedup,
+    never tokens, and never a stall."""
+    _, plain = _run_spec_chaos(speculative=False)
+    base_tokens = {c.rid: tuple(map(int, c.tokens))
+                   for c in plain.completions}
+    h0, spec = _run_spec_chaos()
+    assert {c.rid: tuple(map(int, c.tokens))
+            for c in spec.completions} == base_tokens
+    assert spec.spec_rounds > 0 and h0.spec_draft_cids
+    # same seeded trace -> same pairing order -> same draft cid
+    out_h, out = _run_spec_chaos(
+        [CloneFault(at=0.5 * spec.makespan_s, kind="kill", duration=0.0,
+                    cid=h0.spec_draft_cids[0])])
+    assert {c.rid: tuple(map(int, c.tokens))
+            for c in out.completions} == base_tokens
+    assert len(out.completions) == 12
+    assert out.faults_injected == 1
+    assert out.spec_fallbacks >= 1          # the engine really degraded
+    assert 0 < out.spec_rounds <= spec.spec_rounds
+    # only the draft died: no engine requests were lost or moved
+    assert out.recoveries_migrated == 0
+    assert out.recoveries_restored == 0

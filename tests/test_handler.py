@@ -1032,3 +1032,168 @@ def test_chunked_serving_preemption_restore_token_identical():
         assert a == b
         assert a["served"] == 8
         assert a["preemptions"] > 0 and a["restored_tokens"] > 0
+
+
+# --------------------------------------------------------------------------- #
+# cross-tier speculative decoding (ADR-008)
+# --------------------------------------------------------------------------- #
+class SpecFakeBackend(FakeBackend):
+    """FakeBackend + the speculative protocol.
+
+    The 'draft' proposes exactly the target's counting continuation
+    (tok+1 .. tok+k) and the 'verify' maps every window token v to v+1,
+    so acceptance is 1.0 unless the handler's corruption harness flips
+    proposals — the host acceptance/EMA/fold machinery runs for real
+    with no model in the loop.
+    """
+
+    supports_speculative = True
+    draft_params = None
+
+    class cfg:                      # corruption path reads vocab_size
+        vocab_size = 1 << 30        # the +1 bump never wraps
+
+    def init_draft_pool(self, max_slots, num_blocks, block_size):
+        return {}
+
+    def spec_draft_fn(self, block_size, catchup_steps, k_max):
+        def draft(dparams, dpool, ctoks, cpos0, n_c, tok, pos, k_live,
+                  tables):
+            t = np.asarray(tok)[:, 0].astype(np.int32)
+            k = np.asarray(k_live).astype(np.int32)
+            step = np.arange(1, k_max + 1, dtype=np.int32)
+            drafts = np.where(step[None, :] <= k[:, None],
+                              t[:, None] + step[None, :], 0)
+            return drafts.astype(np.int32), dpool
+
+        return draft
+
+    def spec_verify_fn(self, block_size):
+        def verify(params, pool, toks, pos0, n_live, tables):
+            return np.asarray(toks).astype(np.int32) + 1, pool
+
+        return verify
+
+
+def _spec_trace(n=6, new_tokens=9):
+    return [ServeRequest(i, np.zeros(4, np.int32), new_tokens,
+                         arrival_t=0.15 * i) for i in range(n)]
+
+
+def _run_spec_handler(speculative, **kw):
+    from repro.launch.serve import ClientHandler
+    h = ClientHandler(SpecFakeBackend(), prompt_pad=4, max_batch=4,
+                      max_secondaries=2, speculative=speculative,
+                      executor=kw.pop("executor",
+                                      lambda c, f, a: (f(*a), 0.05)),
+                      **kw)
+    rep = h.run(_spec_trace())
+    return rep, h
+
+
+def test_speculative_validation_errors():
+    from repro.launch.serve import ClientHandler
+    with pytest.raises(ValueError, match="draft model"):
+        _make_handler(speculative=True)     # FakeBackend: no spec support
+    kw = dict(prompt_pad=4, executor=lambda c, f, a: (f(*a), 0.05))
+    with pytest.raises(ValueError, match="spec_k"):
+        ClientHandler(SpecFakeBackend(), speculative=True, spec_k=0, **kw)
+    with pytest.raises(ValueError, match="paged"):
+        ClientHandler(SpecFakeBackend(), speculative=True,
+                      kv="contiguous", **kw)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        ClientHandler(SpecFakeBackend(), speculative=True,
+                      mixed_dispatch=True, **kw)
+
+
+def test_speculative_serving_token_identical_and_fewer_dispatches():
+    """Oracle draft: the speculative run must emit bitwise the plain
+    run's streams, accept every proposal, and spend strictly fewer
+    target dispatches per token than stepwise decode."""
+    plain, _ = _run_spec_handler(False, decode_window=1)
+    spec, h = _run_spec_handler(True, spec_k=4)
+    a = {c.rid: list(map(int, c.tokens)) for c in plain.completions}
+    b = {c.rid: list(map(int, c.tokens)) for c in spec.completions}
+    assert a == b and len(a) == 6
+    assert spec.spec_rounds > 0 and spec.spec_tokens > 0
+    assert spec.acceptance_rate == 1.0
+    assert spec.spec_fallbacks == 0
+    # dispatch economy: every spec round emits >= 1 token, most emit K+1
+    assert spec.spec_tokens / spec.spec_rounds > 1.5
+    assert h.spec_draft_cids                # a draft partner really paired
+
+
+def test_speculative_corruption_partial_acceptance_token_identical():
+    """Randomly corrupted proposals cut acceptance below 1.0 but can
+    never change the emitted stream (rejected suffixes are garbage KV
+    both pools overwrite on the next round)."""
+    plain, _ = _run_spec_handler(False, decode_window=1)
+    spec, _ = _run_spec_handler(True, spec_k=4, spec_corruption=0.4)
+    a = {c.rid: list(map(int, c.tokens)) for c in plain.completions}
+    b = {c.rid: list(map(int, c.tokens)) for c in spec.completions}
+    assert a == b
+    assert 0.0 < spec.acceptance_rate < 1.0
+
+
+def test_speculative_acceptance_collapse_falls_back_to_plain_decode():
+    """Near-total corruption collapses the acceptance EMA; the engine
+    must stickily drop speculation (releasing the draft clone) and keep
+    serving the exact same streams non-speculatively."""
+    plain, _ = _run_spec_handler(False, decode_window=1)
+    spec, h = _run_spec_handler(True, spec_k=4, spec_corruption=0.95)
+    a = {c.rid: list(map(int, c.tokens)) for c in plain.completions}
+    b = {c.rid: list(map(int, c.tokens)) for c in spec.completions}
+    assert a == b
+    assert spec.spec_fallbacks >= 1
+    assert not any(e.spec_on for e in [])   # engines drained at run end
+
+
+def test_speculative_no_draft_clone_degrades_nonspeculative():
+    """A pool with no acquirable draft partner (max_clones=1: the
+    primary is all there is) must serve the trace plainly, counted as a
+    fallback — pairing failure is never a stall."""
+    from repro.launch.serve import ClientHandler
+    clk = VirtualClock()
+    h = ClientHandler(SpecFakeBackend(), prompt_pad=4, max_batch=4,
+                      pool=ClonePool(clock=clk, max_clones=1),
+                      max_secondaries=0, speculative=True, spec_k=4,
+                      executor=lambda c, f, a: (f(*a), 0.05))
+    rep = h.run(_spec_trace())
+    assert len(rep.completions) == 6
+    assert rep.spec_rounds == 0
+    assert rep.spec_fallbacks >= 1
+
+
+def test_speculative_lm_serving_token_identical():
+    """Real reduced model, oracle draft, mid-stream corruption: the
+    speculative handler's streams must be bitwise the plain handler's
+    (greedy decode is deterministic; ADR-008 losslessness end-to-end)."""
+    import dataclasses
+
+    from repro.configs import get_config, reduced_config
+    from repro.launch.serve import ClientHandler, LMBackend
+    cfg = reduced_config(get_config("smollm-360m"))
+    backend = LMBackend(cfg, capacity=32, draft="oracle")
+    vocab = cfg.vocab_size
+    rng = np.random.default_rng(11)
+    reqs = [ServeRequest(i, rng.integers(0, vocab, 6, dtype=np.int32), 8,
+                         arrival_t=float(rng.uniform(0.0, 0.3)))
+            for i in range(4)]
+
+    def run(speculative, corruption=0.0):
+        h = ClientHandler(backend, max_batch=4, prompt_pad=8,
+                          block_size=4, max_secondaries=2,
+                          decode_window=1, prefill_chunk=0,
+                          speculative=speculative, spec_k=3,
+                          spec_corruption=corruption,
+                          executor=lambda c, f, a: (f(*a), 0.05))
+        rep = h.run([dataclasses.replace(r) for r in reqs])
+        return {c.rid: list(map(int, c.tokens)) for c in rep.completions}, \
+            rep
+
+    base, _ = run(False)
+    for corr in (0.0, 0.35):
+        toks, rep = run(True, corr)
+        assert toks == base and len(toks) == 4
+        assert rep.spec_rounds > 0
+        assert rep.acceptance_rate > 0.0

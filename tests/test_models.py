@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config, list_archs, reduced_config
+from repro.configs import draft_config, get_config, list_archs, \
+    reduced_config
 from repro.models import model
 from repro.models.context import RunContext
 
@@ -548,3 +549,185 @@ def test_cache_logical_axes_match_cache_structure():
         axes = model.cache_logical_axes(cfg)
         ok = jax.tree.map(lambda c, a: len(c.shape) == len(a), cache, axes)
         assert all(jax.tree.leaves(ok)), arch
+
+
+# --------------------------------------------------------------------------- #
+# Speculative decoding: draft_loop / verify_window (ADR-008)
+# --------------------------------------------------------------------------- #
+def _spec_state(cfg, ctx, params, prompt_lens, bs, cap, seed=11):
+    """Stage seeded prompts into a paged pool via one prefill scan.
+
+    Returns (pool, tables, prompts, tok (B,), pos (B,)): the serving state
+    right before decoding — ``tok[i]`` is row i's first generated (current,
+    KV-unwritten) token at cursor ``pos[i] = len(prompts[i])``.
+    """
+    slots = len(prompt_lens)
+    max_blk = cap // bs
+    pool = model.init_paged_cache(cfg, slots, slots * max_blk + 1, bs)
+    rng = np.random.default_rng(seed)
+    tables = np.zeros((slots, max_blk), np.int32)
+    nxt = 1
+    for i in range(slots):
+        for j in range(max_blk):
+            tables[i, j] = nxt
+            nxt += 1
+    prompts = [rng.integers(0, cfg.vocab_size, ln).astype(np.int32)
+               for ln in prompt_lens]
+    pre = np.zeros((slots, max(prompt_lens)), np.int32)
+    for i, p in enumerate(prompts):
+        pre[i, :len(p)] = p
+    first, pool = model.prefill_loop(
+        cfg, params, pool, jnp.asarray(pre),
+        jnp.asarray(np.zeros(slots, np.int32)),
+        jnp.asarray(np.asarray(prompt_lens, np.int32)), ctx,
+        block_tables=jnp.asarray(tables), block_size=bs,
+        num_steps=pre.shape[1], capacity=cap)
+    return pool, tables, prompts, np.asarray(first, np.int32), \
+        np.asarray(prompt_lens, np.int32)
+
+
+def _run_spec_rounds(cfg, ctx, params, dcfg, dparams, pool, dpool, tables,
+                     hist, tok, pos, budgets, bs, cap, k_max, flip_p, rng):
+    """Drive draft_loop + verify_window rounds until every budget drains.
+
+    The draft is an oracle (or a real reduced model when dcfg/dparams
+    differ) whose proposals are corrupted with per-token probability
+    ``flip_p`` and whose window size is drawn per-row per-round — random
+    K, mid-window rejections, and dead rows all fall out of the draw.
+    Returns (out per-row token lists, cur, pos, pool).
+    """
+    slots = len(budgets)
+    cur, p, left = tok.copy(), pos.copy(), np.asarray(budgets, np.int32)
+    left = left.copy()
+    dp = np.zeros((slots,), np.int32)           # draft pool cursor
+    out = [[] for _ in range(slots)]
+    guard = 0
+    while (left > 0).any():
+        guard += 1
+        assert guard <= 4 * (int(left.max()) + 1), "spec loop diverged"
+        live = left > 0
+        room = np.maximum(cap - 1 - np.minimum(p, cap - 1), 0)
+        k_cap = np.minimum(np.minimum(k_max, left - 1), room)
+        k = np.where(live, rng.integers(0, np.maximum(k_cap, 0) + 1), 0)
+        k = k.astype(np.int32)
+        # --- draft side: catch-up (hist[dp:p]) + k greedy steps ---
+        n_c = np.where(live, p - dp, 0).astype(np.int32)
+        tc = max(int(n_c.max()), 1)
+        ctoks = np.zeros((slots, tc), np.int32)
+        for i in range(slots):
+            if n_c[i]:
+                ctoks[i, :n_c[i]] = hist[i][dp[i]:p[i]]
+        drafts, dpool = model.draft_loop(
+            dcfg, dparams, dpool, jnp.asarray(ctoks),
+            jnp.asarray(np.where(live, dp, 0).astype(np.int32)),
+            jnp.asarray(n_c), jnp.asarray(cur[:, None]),
+            jnp.asarray(np.where(live, p, 0).astype(np.int32)),
+            jnp.asarray(k), ctx, block_tables=jnp.asarray(tables),
+            block_size=bs, catchup_steps=tc, num_steps=k_max, capacity=cap)
+        drafts = np.asarray(drafts, np.int32)
+        flips = rng.random((slots, k_max)) < flip_p
+        drafts = np.where(flips, (drafts + 1) % cfg.vocab_size, drafts)
+        dp = np.where(live, p + k, dp)
+        # --- verify side: one chunked dispatch over k+1 window tokens ---
+        x = np.concatenate([cur[:, None], drafts], axis=1)
+        n_live = np.where(live, k + 1, 0).astype(np.int32)
+        greedy, pool = model.verify_window(
+            cfg, params, pool, jnp.asarray(x),
+            jnp.asarray(np.where(live, np.minimum(p, cap - 1), 0)),
+            jnp.asarray(n_live), ctx, block_tables=jnp.asarray(tables),
+            block_size=bs, capacity=cap)
+        greedy = np.asarray(greedy, np.int32)
+        acc = model.spec_accept(greedy, drafts, np.where(live, k, 0))
+        for i in range(slots):
+            if live[i]:
+                got = greedy[i, :acc[i] + 1].tolist()
+                out[i].extend(got)
+                hist[i].extend(got)
+        emitted = np.where(live, acc + 1, 0).astype(np.int32)
+        cur = np.where(live, greedy[np.arange(slots), acc], cur)
+        p = np.where(live, np.minimum(p + emitted, cap), p)
+        left = left - emitted
+        dp = np.where(live, np.minimum(dp, p), dp)
+    return out, cur, p, pool
+
+
+def _check_spec_vs_stepwise(prompt_lens, budgets, k_max, flip_p, seed=11,
+                            cap=32, real_draft=False):
+    """Full speculative decode (oracle/real draft, random per-round K,
+    corrupted proposals) must emit token-identical output to stepwise
+    greedy decode — and leave committed KV a continuation can't tell
+    apart (stale rejected-position KV is provably never read)."""
+    cfg, ctx, params = _chunk_fixture()
+    bs = 4
+    budgets = np.asarray(budgets, np.int32)
+    if budgets.max() == 0:
+        budgets = budgets.copy()
+        budgets[0] = 1                          # at least one live row
+    pool, tables, prompts, tok, pos = _spec_state(
+        cfg, ctx, params, list(prompt_lens), bs, cap, seed=seed)
+    T = int(budgets.max())
+    want, pool_ref = _stepwise_decode(
+        cfg, ctx, params, jax.tree.map(jnp.copy, pool), tables,
+        tok[:, None], pos, budgets, bs, cap, T)
+
+    if real_draft:
+        dcfg = draft_config(get_config("smollm-360m"))
+        dparams = model.init(dcfg, jax.random.PRNGKey(7))
+    else:
+        dcfg, dparams = cfg, params             # oracle draft
+    slots = len(prompt_lens)
+    max_blk = cap // bs
+    dpool = model.init_paged_cache(dcfg, slots, slots * max_blk + 1, bs)
+    hist = [p.tolist() + [int(tok[i])] for i, p in enumerate(prompts)]
+    rng = np.random.default_rng(seed + 1)
+    out, cur, p, pool_spec = _run_spec_rounds(
+        cfg, ctx, params, dcfg, dparams, jax.tree.map(jnp.copy, pool),
+        dpool, tables, hist, tok, pos, budgets, bs, cap, k_max, flip_p, rng)
+
+    for i in range(slots):
+        np.testing.assert_array_equal(
+            np.asarray(out[i], np.int32), want[i, :budgets[i]],
+            err_msg=f"slot {i} speculative stream != stepwise greedy")
+    # cursors and current tokens line up with the stepwise endpoint
+    p_ref = np.minimum(pos + budgets, cap)
+    np.testing.assert_array_equal(p, p_ref)
+    # committed KV is intact: a plain stepwise continuation from the same
+    # (token, cursor) state must match on both pools — this reads every
+    # committed position and causally masks the stale rejected tail
+    ext = np.minimum(np.maximum(cap - p, 0), 3).astype(np.int32)
+    if ext.max() > 0:
+        cont_ref, _ = _stepwise_decode(
+            cfg, ctx, params, pool_ref, tables, cur[:, None], p, ext,
+            bs, cap, int(ext.max()))
+        cont_spec, _ = _stepwise_decode(
+            cfg, ctx, params, pool_spec, tables, cur[:, None], p, ext,
+            bs, cap, int(ext.max()))
+        np.testing.assert_array_equal(cont_spec, cont_ref)
+
+
+def test_verify_window_token_identical_sweep():
+    """Deterministic twin of the hypothesis property (PR 6 pattern):
+    seeded sweeps over draft quality — oracle-perfect (full accepts),
+    always-wrong (every window rejects at position 0, degenerating to
+    per-token decode), and mid-window rejections — plus a dead row and
+    ragged budgets."""
+    for flip_p, seed in [(0.0, 3), (1.0, 5), (0.35, 7), (0.5, 11)]:
+        _check_spec_vs_stepwise(prompt_lens=[3, 5, 1], budgets=[6, 4, 0],
+                                k_max=3, flip_p=flip_p, seed=seed)
+
+
+def test_verify_window_capacity_clamp_matches_stepwise():
+    """Windows shrink to k=0 at the capacity edge (no pinned-write
+    collapse is ever allowed inside a verify window), matching the
+    stepwise clamp bitwise."""
+    _check_spec_vs_stepwise(prompt_lens=[6, 4], budgets=[8, 8], k_max=3,
+                            flip_p=0.2, seed=13, cap=8)
+
+
+def test_real_reduced_draft_model_is_still_lossless():
+    """A genuinely different (randomly initialized, architecturally
+    smaller) draft model mostly disagrees with the target — acceptance
+    collapses — but the emitted stream must STILL be token-identical:
+    verification makes draft quality a pure performance knob."""
+    _check_spec_vs_stepwise(prompt_lens=[4, 2], budgets=[5, 3], k_max=3,
+                            flip_p=0.0, seed=17, real_draft=True)

@@ -371,6 +371,33 @@ def test_gateway_quota_and_fair_share(seed, adv_weight, adv_cost, adv_n,
         rate=rate, burst=burst, seed=seed))
 
 
+# ---------------------------------------------------------------------------
+# cross-tier speculative decoding (ADR-008)
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 996),
+       prompt_lens=st.lists(st.integers(1, 8), min_size=2, max_size=3),
+       budgets=st.lists(st.integers(0, 7), min_size=3, max_size=3),
+       k_max=st.integers(1, 4),
+       flip_p=st.sampled_from([0.0, 0.3, 0.6, 1.0]))
+def test_speculative_decode_token_identical_to_stepwise(seed, prompt_lens,
+                                                        budgets, k_max,
+                                                        flip_p):
+    """ADR-008 property: for any draft-agreement pattern — random per-row
+    per-round window sizes K, mid-window rejections (proposals corrupted
+    with probability ``flip_p``), dead rows (budget 0), ragged budgets —
+    the draft_loop + verify_window rounds emit a stream bitwise identical
+    to stepwise greedy decode, and the committed KV they leave behind is
+    indistinguishable under continuation.  (The deterministic twin lives
+    in test_models.py so the invariant is still exercised where
+    hypothesis is not installed.)"""
+    import test_models as tm
+    tm._check_spec_vs_stepwise(prompt_lens + [1] * (3 - len(prompt_lens)),
+                               budgets, k_max, flip_p, seed=seed)
+
+
 @settings(deadline=None, max_examples=5)
 @given(seed=st.integers(0, 2 ** 31 - 1), chunk=st.sampled_from([2, 4, 8]))
 def test_chunked_serving_preemption_invariant(seed, chunk):

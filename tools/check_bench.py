@@ -62,6 +62,21 @@ ISSUE 7 acceptance (fault-injected serving, ADR-006):
   faultless run;
 - the ``slow_hedged`` scenario fires and wins >= 1 hedged duplicate and
   its p99 is no worse than the unhedged straggler run.
+
+ISSUE 9 acceptance (cross-tier speculative decoding, ADR-008):
+
+- every ``spec`` row in ``BENCH_decode.json`` is token-identical to
+  stepwise greedy decode across the acceptance sweep, spends < 1 target
+  dispatch per token, and the full-agreement (``flip_p == 0``) rows show
+  a modeled cross-tier speedup >= 1;
+- the ``spec`` sweep in ``BENCH_serving.json`` serves every request in
+  every row, the speculative rows token-identical to the pinned-large
+  baseline, with the oracle row at full acceptance, the corrupted row
+  strictly between 0 and 1, and the oracle row at a strictly lower
+  $-per-token than pinned-large without losing tokens/s.
+
+Every missing-section violation names the command that regenerates the
+artifact, so a stale BENCH file is a one-line fix.
 """
 from __future__ import annotations
 
@@ -73,8 +88,17 @@ REPO = Path(__file__).resolve().parent.parent
 DEFAULT = REPO / "BENCH_decode.json"
 DEFAULT_SERVING = REPO / "BENCH_serving.json"
 
+# regeneration commands, quoted in missing-section/unreadable violations
+_REGEN_DECODE = "PYTHONPATH=src python benchmarks/decode_micro.py"
+_REGEN_SERVING = "PYTHONPATH=src python benchmarks/serving_load.py"
+
+
+def _regen(cmd: str) -> str:
+    return f" (regenerate: {cmd})"
+
+
 _TOP_KEYS = ("benchmark", "arch", "interpret", "kernel_sweep", "decode_loop",
-             "prefill_loop")
+             "prefill_loop", "spec")
 _SWEEP_KEYS = ("b", "hq", "hkv", "group", "block_size", "num_blocks",
                "fused_us", "unfused_us", "kv_fetches_fused",
                "kv_fetches_unfused", "fetch_ratio")
@@ -83,6 +107,49 @@ _LOOP_KEYS = ("window", "dispatches_per_token", "us_per_token",
 _PREFILL_KEYS = ("rows", "prefix_len", "suffix_len", "chunk", "tokens_total",
                  "dispatches_per_token", "dispatches_per_token_stepwise",
                  "tokens_per_s", "tokens_per_s_stepwise", "tokens_match")
+_SPEC_KEYS = ("slots", "k_max", "budget", "flip_p", "draft_cost",
+              "tokens_emitted", "rounds", "acceptance_rate",
+              "dispatches_per_token", "spec_speedup", "tokens_match")
+
+
+def _check_spec_decode(doc: dict) -> list:
+    """``spec`` violations in BENCH_decode.json (ISSUE 9 acceptance)."""
+    bad = []
+    rows = doc["spec"]
+    if not rows:
+        return [f"spec is empty{_regen(_REGEN_DECODE)}"]
+    for i, row in enumerate(rows):
+        missing = [k for k in _SPEC_KEYS if k not in row]
+        if missing:
+            return bad + [f"spec[{i}]: missing {missing}"
+                          f"{_regen(_REGEN_DECODE)}"]
+        if not row["tokens_match"]:
+            bad.append(f"spec[{i}] (flip_p={row['flip_p']}): speculative "
+                       "decode is not token-identical to stepwise greedy "
+                       "— speculation must be lossless at every "
+                       "acceptance level")
+        if row["dispatches_per_token"] > 1.0 + 1e-9:
+            bad.append(f"spec[{i}]: {row['dispatches_per_token']} target "
+                       "dispatches/token — a verify round must emit at "
+                       "least one token")
+        if row["flip_p"] == 0 and row["dispatches_per_token"] >= 1.0:
+            bad.append(f"spec[{i}]: {row['dispatches_per_token']} target "
+                       "dispatches/token at full agreement — speculation "
+                       "never amortized a verify round over > 1 token")
+        if row["flip_p"] == 0 and row["acceptance_rate"] < 1.0 - 1e-9:
+            bad.append(f"spec[{i}]: oracle draft acceptance "
+                       f"{row['acceptance_rate']} < 1.0 — the draft/verify "
+                       "pair disagrees without corruption")
+        if row["flip_p"] == 0 and row["spec_speedup"] < 1.0 - 1e-9:
+            bad.append(f"spec[{i}]: modeled cross-tier speedup "
+                       f"{row['spec_speedup']} < 1 at full agreement — "
+                       "drafting on the cheap tier must pay for itself")
+    if not any(r["flip_p"] == 0 for r in rows):
+        bad.append("spec sweep has no flip_p=0 (full-agreement) row")
+    if not any(r["flip_p"] > 0 for r in rows):
+        bad.append("spec sweep has no corrupted row — partial acceptance "
+                   "is unexercised")
+    return bad
 
 
 def check(path: Path) -> list:
@@ -91,10 +158,11 @@ def check(path: Path) -> list:
     try:
         doc = json.loads(path.read_text())
     except (OSError, ValueError) as e:
-        return [f"{path}: unreadable ({e})"]
+        return [f"{path}: unreadable ({e}){_regen(_REGEN_DECODE)}"]
     for k in _TOP_KEYS:
         if k not in doc:
-            bad.append(f"missing top-level key {k!r}")
+            bad.append(f"missing top-level key {k!r}"
+                       f"{_regen(_REGEN_DECODE)}")
     if bad:
         return bad
     if doc["benchmark"] != "decode_micro":
@@ -157,6 +225,7 @@ def check(path: Path) -> list:
         if not row["tokens_match"]:
             bad.append(f"prefill_loop[{i}]: chunked prefill is not token-"
                        "identical to the stepwise scan")
+    bad += _check_spec_decode(doc)
     return bad
 
 
@@ -191,7 +260,8 @@ def _check_fleet(doc: dict) -> list:
         return bad
     for k in ("pinned", "mixed"):
         if k not in sweep:
-            return [f"fleet_sweep: missing {k!r}"]
+            return [f"fleet_sweep: missing {k!r}"
+                    f"{_regen(_REGEN_SERVING)}"]
     if len(sweep["pinned"]) < 2:
         bad.append("fleet_sweep.pinned needs >= 2 tiers for a Pareto")
     for i, row in enumerate(sweep["pinned"]):
@@ -258,11 +328,13 @@ def _check_mixed(doc: dict) -> list:
         return bad
     for k in ("nojoin", "serial", "mixed"):
         if k not in sweep:
-            return [f"mixed_dispatch: missing {k!r}"]
+            return [f"mixed_dispatch: missing {k!r}"
+                    f"{_regen(_REGEN_SERVING)}"]
         row = sweep[k]
         missing = [m for m in _MIXED_ROW_KEYS if m not in row]
         if missing:
-            return [f"mixed_dispatch.{k}: missing {missing}"]
+            return [f"mixed_dispatch.{k}: missing {missing}"
+                    f"{_regen(_REGEN_SERVING)}"]
         if row["served"] != row["offered"]:
             bad.append(f"mixed_dispatch.{k}: served {row['served']} != "
                        f"offered {row['offered']}")
@@ -314,7 +386,8 @@ def _check_faults(doc: dict) -> list:
     for i, row in enumerate(sweep):
         missing = [k for k in _FAULT_ROW_KEYS if k not in row]
         if missing:
-            return bad + [f"fault_sweep[{i}]: missing {missing}"]
+            return bad + [f"fault_sweep[{i}]: missing {missing}"
+                          f"{_regen(_REGEN_SERVING)}"]
         by[row["scenario"]] = row
         if row["runtime_errors"] != 0:
             bad.append(f"fault_sweep.{row['scenario']}: raised — recovery "
@@ -330,7 +403,8 @@ def _check_faults(doc: dict) -> list:
     for k in ("baseline", "drain", "kill", "mixed", "slow_unhedged",
               "slow_hedged"):
         if k not in by:
-            return bad + [f"fault_sweep: missing scenario {k!r}"]
+            return bad + [f"fault_sweep: missing scenario {k!r}"
+                          f"{_regen(_REGEN_SERVING)}"]
     base_p99 = by["baseline"]["p99_latency_s"]
     for k in ("drain", "kill", "mixed"):
         row = by[k]
@@ -393,16 +467,19 @@ def _check_gateway(doc: dict) -> list:
         return bad
     for k in ("link", "capacity_rps", "deadline_s", "rows"):
         if k not in sweep:
-            return bad + [f"overload_sweep: missing top-level key {k!r}"]
+            return bad + [f"overload_sweep: missing top-level key {k!r}"
+                          f"{_regen(_REGEN_SERVING)}"]
     rows = sweep["rows"]
     for i, row in enumerate(rows):
         missing = [k for k in _OVERLOAD_ROW_KEYS if k not in row]
         if missing:
-            return bad + [f"overload_sweep[{i}]: missing {missing}"]
+            return bad + [f"overload_sweep[{i}]: missing {missing}"
+                          f"{_regen(_REGEN_SERVING)}"]
     scenarios = {row["scenario"] for row in rows}
     for k in ("ungated", "gated", "fault_ungated", "fault_gated"):
         if k not in scenarios:
-            return bad + [f"overload_sweep: missing scenario {k!r}"]
+            return bad + [f"overload_sweep: missing scenario {k!r}"
+                          f"{_regen(_REGEN_SERVING)}"]
     ungated = sorted((r for r in rows if r["scenario"] == "ungated"),
                      key=lambda r: r["over"])
     gated = {r["over"]: r for r in rows if r["scenario"] == "gated"}
@@ -462,17 +539,78 @@ def _check_gateway(doc: dict) -> list:
     return bad
 
 
+_SPEC_SERVE_KEYS = ("scenario", "speculative", "corruption", "served",
+                    "offered", "runtime_errors", "total_tokens",
+                    "spec_rounds", "spec_tokens", "acceptance_rate",
+                    "spec_fallbacks", "tokens_per_s", "cost_usd",
+                    "usd_per_token", "clone_seconds_by_type")
+
+
+def _check_spec_serving(doc: dict) -> list:
+    """``spec`` sweep violations in BENCH_serving.json (ISSUE 9)."""
+    bad = []
+    sweep = doc.get("spec")
+    if not sweep:               # optional: --spec-requests 0 disables
+        return bad
+    for k in ("spec_k", "draft_cost", "draft_tier", "verify_tier", "rows"):
+        if k not in sweep:
+            return [f"spec: missing {k!r}{_regen(_REGEN_SERVING)}"]
+    by = {}
+    for i, row in enumerate(sweep["rows"]):
+        missing = [k for k in _SPEC_SERVE_KEYS if k not in row]
+        if missing:
+            return bad + [f"spec.rows[{i}]: missing {missing}"
+                          f"{_regen(_REGEN_SERVING)}"]
+        by[row["scenario"]] = row
+        if row["runtime_errors"] != 0:
+            bad.append(f"spec.{row['scenario']}: raised — speculation "
+                       "must degrade, never crash")
+        if row["served"] != row["offered"]:
+            bad.append(f"spec.{row['scenario']}: lost requests "
+                       f"({row['served']}/{row['offered']})")
+        if row["speculative"] and not row.get(
+                "tokens_identical_to_pinned_large", False):
+            bad.append(f"spec.{row['scenario']}: output diverged from "
+                       "plain greedy decode — speculation must be "
+                       "lossless")
+    for k in ("pinned_large", "spec", "spec_corrupted"):
+        if k not in by:
+            return bad + [f"spec: missing scenario {k!r}"
+                          f"{_regen(_REGEN_SERVING)}"]
+    pinned, spec, corrupted = (by[k] for k in ("pinned_large", "spec",
+                                               "spec_corrupted"))
+    if spec["acceptance_rate"] < 1.0 - 1e-9:
+        bad.append(f"spec.spec: oracle acceptance "
+                   f"{spec['acceptance_rate']} < 1.0")
+    if not 0.0 < corrupted["acceptance_rate"] < 1.0:
+        bad.append(f"spec.spec_corrupted: acceptance "
+                   f"{corrupted['acceptance_rate']} not in (0, 1) — the "
+                   "sweep is not exercising partial acceptance")
+    if spec["spec_rounds"] < 1 or spec["spec_tokens"] <= spec["spec_rounds"]:
+        bad.append("spec.spec: no verify round amortized > 1 token")
+    if spec["usd_per_token"] >= pinned["usd_per_token"]:
+        bad.append(f"spec.spec: ${spec['usd_per_token']}/token not below "
+                   f"pinned-large ${pinned['usd_per_token']}/token — "
+                   "cross-tier drafting must cut serving cost")
+    if spec["tokens_per_s"] < pinned["tokens_per_s"] - 1e-9:
+        bad.append(f"spec.spec: {spec['tokens_per_s']} tokens/s below "
+                   f"pinned-large {pinned['tokens_per_s']} — the cheaper "
+                   "run must not lose throughput")
+    return bad
+
+
 def check_serving(path: Path) -> list:
     """BENCH_serving.json violations (empty == pass)."""
     bad = []
     try:
         doc = json.loads(path.read_text())
     except (OSError, ValueError) as e:
-        return [f"{path}: unreadable ({e})"]
+        return [f"{path}: unreadable ({e}){_regen(_REGEN_SERVING)}"]
     for k in ("benchmark", "arch", "seed", "rows", "prefix_sweep",
               "tight_pool"):
         if k not in doc:
-            bad.append(f"missing top-level key {k!r}")
+            bad.append(f"missing top-level key {k!r}"
+                       f"{_regen(_REGEN_SERVING)}")
     if bad:
         return bad
     if doc["benchmark"] != "serving_load":
@@ -528,6 +666,7 @@ def check_serving(path: Path) -> list:
     bad += _check_mixed(doc)
     bad += _check_faults(doc)
     bad += _check_gateway(doc)
+    bad += _check_spec_serving(doc)
     return bad
 
 
