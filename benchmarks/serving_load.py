@@ -813,6 +813,192 @@ def run_overload_sweep(backend, *, n_requests: int = 60,
             "rows": rows}
 
 
+def disagg_trace(vocab: int, *, n_requests: int = 16, prompt_len: int = 48,
+                 new_tokens: int = 6, spacing_s: float = 0.4,
+                 seed: int = 0):
+    """Prefill-heavy trace: long cold prompts, short decodes, arrivals
+    staggered so the shared prefill partner is never the bottleneck."""
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(i, rng.integers(0, vocab, size=prompt_len,
+                                         dtype=np.int32),
+                         new_tokens, arrival_t=spacing_s * i)
+            for i in range(n_requests)]
+
+
+def run_disagg_sweep(backend, *, n_requests: int = 16, prompt_len: int = 48,
+                     new_tokens: int = 6, chunk: int = 8,
+                     max_batch: int = 2, max_secondaries: int = 4,
+                     num_blocks: int = 16, block_size: int = 8,
+                     spacing_s: float = 0.4, seed: int = 0):
+    """Disaggregated prefill/decode sweep (ADR-009).
+
+    One prefill-heavy trace served four ways on the per-tier fixed-cost
+    executor: **colocated_large** — every engine on the ``large`` tier
+    doing its own prefills (the latency baseline disagg must match);
+    **colocated_basic** — the all-cheap reference whose chunked prefills
+    wreck TTFT; **disagg** — decode engines on ``basic``, cold prompts
+    prefilled on ONE shared ``large`` partner clone and handed off by
+    migrating the paged KV blocks over ``disagg_link``; and
+    **disagg_compressed** — the same with per-block int8 KV quantization
+    on the wire (~4x fewer modeled bytes).  The executor bills chunked
+    partner prefills per chunk and charges the colocated one-shot
+    batched prefill the same ``ceil(tokens/chunk)`` steps, so neither
+    path rides free.  The compressed arm must beat colocated-large on
+    $-per-token at equal-or-better p99 TTFT, and the uncompressed arm
+    must serve token-identical streams — hard-asserted by
+    ``tools/check_bench.py`` in CI."""
+    def executor(clone, fn, args):
+        steps = getattr(fn, "seq_steps", 1) * getattr(fn, "step_scale", 1.0)
+        ptoks = getattr(fn, "prefill_tokens", 0)
+        if ptoks:                      # colocated batched join prefill:
+            steps += max(0, -(-ptoks // chunk) - 1)   # bill the chunks
+        return fn(*args), TIER_STEP_S[clone.ctype.name] * steps
+
+    def run(scenario, clone_type, disagg=False, compress=False):
+        handler = ClientHandler(
+            backend, clone_type=clone_type,
+            fleet=["basic", "large"] if disagg else None,
+            placement_policy=Policy.NONE,
+            max_batch=max_batch, prompt_pad=prompt_len,
+            block_size=block_size, num_blocks=num_blocks,
+            max_secondaries=max_secondaries, use_primary=False,
+            prefill_chunk=chunk, executor=executor,
+            disagg=disagg, disagg_compress=compress,
+            disagg_min_prompt=chunk if disagg else None,
+            disagg_prefill_type="large" if disagg else None)
+        reqs = disagg_trace(backend.cfg.vocab_size, n_requests=n_requests,
+                            prompt_len=prompt_len, new_tokens=new_tokens,
+                            spacing_s=spacing_s, seed=seed)
+        errors, rep = 0, None
+        try:
+            rep = handler.run(reqs, drain_idle_s=PAUSE_IDLE_TTL + 5.0)
+        except RuntimeError:
+            errors = 1                  # recorded; CI fails on it
+        toks = {c.rid: list(map(int, c.tokens))
+                for c in rep.completions} if rep else {}
+        total = sum(len(t) for t in toks.values())
+        ttfts = [c.ttft_s for c in rep.completions] \
+            if rep and rep.completions else [0.0]
+        return {
+            "scenario": scenario,
+            "clone_type": clone_type,
+            "disagg": disagg,
+            "compress": compress,
+            "served": len(toks),
+            "offered": n_requests,
+            "runtime_errors": errors,
+            "total_tokens": total,
+            "p50_ttft_s": float(np.percentile(ttfts, 50)),
+            "p99_ttft_s": float(np.percentile(ttfts, 99)),
+            "makespan_s": rep.makespan_s if rep else 0.0,
+            "cost_usd": rep.cost_usd if rep else 0.0,
+            "usd_per_token": (rep.cost_usd / total
+                              if rep and total else 0.0),
+            "disagg_handoffs": rep.disagg_handoffs if rep else 0,
+            "disagg_colocated": rep.disagg_colocated if rep else 0,
+            "disagg_fallbacks": rep.disagg_fallbacks if rep else 0,
+            "kv_transfer_bytes": rep.kv_transfer_bytes if rep else 0,
+            "kv_transfer_s": rep.kv_transfer_s if rep else 0.0,
+            "clone_seconds_by_type": rep.clone_seconds_by_type if rep
+            else {},
+        }, toks
+
+    base, ref = run("colocated_large", "large")
+    rows = [base]
+    rows.append(run("colocated_basic", "basic")[0])
+    for scenario, compress in (("disagg", False),
+                               ("disagg_compressed", True)):
+        row, got = run(scenario, "basic", disagg=True, compress=compress)
+        row["tokens_identical_to_colocated_large"] = bool(got) and got == ref
+        rows.append(row)
+    return {
+        "prompt_len": prompt_len,
+        "new_tokens": new_tokens,
+        "chunk": chunk,
+        "decode_tier": "basic",
+        "prefill_tier": "large",
+        "decode_usd_per_hour": USD_PER_HOUR["basic"],
+        "prefill_usd_per_hour": USD_PER_HOUR["large"],
+        "rows": rows,
+    }
+
+
+def run_affinity_sweep(backend, *, families: int = 3, per_family: int = 4,
+                       prefix_len: int = 16, tail_len: int = 8,
+                       new_tokens: int = 4, num_blocks: int = 16,
+                       block_size: int = 4, spacing_s: float = 2.5,
+                       seed: int = 0):
+    """Prefix-affinity routing sweep (ADR-009).
+
+    Request families sharing a per-family system prompt, served twice on
+    a homogeneous ``basic`` fleet of one single-slot engine per family:
+    a near-simultaneous seeding wave pins each family's prefix into a
+    distinct clone's index, then solo followers arrive with every clone
+    free — each one a pure routing decision.  **affinity** routes each
+    follower to the clone whose persistent prefix index holds the
+    deepest match; **random** is a seeded uniform pick over the same
+    candidate set.  Everything else is identical, so the global
+    ``prefix_hit_rate`` isolates the routing signal: affinity must beat
+    random strictly (asserted in CI).  Arrivals stay inside
+    ``PAUSE_IDLE_TTL`` so the idle clones remain routable candidates."""
+    def executor(clone, fn, args):
+        return fn(*args), (TIER_STEP_S[clone.ctype.name]
+                           * getattr(fn, "seq_steps", 1))
+
+    prompt_len = prefix_len + tail_len
+    vocab = backend.cfg.vocab_size
+
+    def trace():
+        rng = np.random.default_rng(seed)
+        prefixes = [rng.integers(0, vocab, size=prefix_len, dtype=np.int32)
+                    for _ in range(families)]
+        reqs, rid = [], 0
+
+        def req(fam, t):
+            nonlocal rid
+            tail = rng.integers(0, vocab, size=tail_len, dtype=np.int32)
+            reqs.append(ServeRequest(
+                rid, np.concatenate([prefixes[fam], tail]), new_tokens,
+                arrival_t=t))
+            rid += 1
+
+        for fam in range(families):      # seeding wave: one engine each
+            req(fam, 0.02 * fam)
+        for i in range(per_family - 1):  # solo followers, all clones free
+            for fam in range(families):
+                req(fam, spacing_s * (1 + i * families + fam))
+        return reqs
+
+    def run(routing):
+        handler = ClientHandler(
+            backend, clone_type="basic", max_batch=1,
+            prompt_pad=prompt_len, block_size=block_size,
+            num_blocks=num_blocks, max_secondaries=families,
+            use_primary=False, executor=executor, routing=routing)
+        errors, rep = 0, None
+        try:
+            rep = handler.run(trace(), drain_idle_s=PAUSE_IDLE_TTL + 5.0)
+        except RuntimeError:
+            errors = 1                  # recorded; CI fails on it
+        return {
+            "scenario": routing,
+            "served": len(rep.completions) if rep else 0,
+            "offered": families * per_family,
+            "runtime_errors": errors,
+            "prefix_hit_rate": rep.prefix_hit_rate if rep else 0.0,
+            "p50_ttft_s": rep.p50_ttft_s if rep else 0.0,
+            "per_clone": rep.per_clone if rep else {},
+        }
+
+    return {
+        "families": families,
+        "per_family": per_family,
+        "prefix_len": prefix_len,
+        "prompt_len": prompt_len,
+        "rows": [run("affinity"), run("random")],
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -868,6 +1054,10 @@ def main() -> None:
                          "full step for the speculative sweep (the smoke "
                          "model's own parameter ratio is "
                          "embedding-dominated)")
+    ap.add_argument("--disagg-requests", type=int, default=16,
+                    help="requests for the disaggregated prefill/decode "
+                         "sweep (0 disables the sweep + the routing "
+                         "sub-sweep)")
     ap.add_argument("--json", default="BENCH_serving.json",
                     help="machine-readable output path ('' to skip)")
     args = ap.parse_args()
@@ -1156,6 +1346,65 @@ def main() -> None:
             "tokens_per_s"], \
             "speculation lost throughput vs pinned-large"
 
+    # --- ADR-009 sweep: disaggregated prefill/decode + routing ----------
+    disagg_payload = None
+    if args.disagg_requests > 0:
+        disagg_payload = run_disagg_sweep(LMBackend(cfg, capacity=64),
+                                          n_requests=args.disagg_requests,
+                                          seed=args.seed)
+        disagg_payload["affinity"] = run_affinity_sweep(sweep_backend,
+                                                        seed=args.seed)
+        by = {r["scenario"]: r for r in disagg_payload["rows"]}
+        print(f"\ndisagg sweep (prompt {disagg_payload['prompt_len']} tok, "
+              f"decode {disagg_payload['new_tokens']} tok, decode on "
+              f"{disagg_payload['decode_tier']}, shared prefill partner "
+              f"on {disagg_payload['prefill_tier']}):")
+        for r in disagg_payload["rows"]:
+            ident = r.get("tokens_identical_to_colocated_large", "-")
+            print(f"  {r['scenario']:>17s} served {r['served']:>2d}/"
+                  f"{r['offered']} ttft p50={r['p50_ttft_s']:.3f}s "
+                  f"p99={r['p99_ttft_s']:.3f}s "
+                  f"${r['usd_per_token'] * 1e6:.2f}/Mtok "
+                  f"handoffs={r['disagg_handoffs']} "
+                  f"xfer={r['kv_transfer_bytes']}B "
+                  f"identical={ident}")
+        for r in disagg_payload["rows"]:
+            assert r["runtime_errors"] == 0, \
+                f"disagg sweep ({r['scenario']}) raised"
+            assert r["served"] == r["offered"], \
+                f"disagg sweep ({r['scenario']}) shed or lost requests"
+            if r["disagg"]:
+                assert r["disagg_handoffs"] >= 1, \
+                    f"disagg sweep ({r['scenario']}) never handed off"
+        assert by["disagg"]["tokens_identical_to_colocated_large"], \
+            "uncompressed disagg handoff diverged from colocated decode"
+        assert by["disagg_compressed"]["kv_transfer_bytes"] \
+            < 0.5 * by["disagg"]["kv_transfer_bytes"], \
+            "int8 KV compression saved < 2x on modeled transfer bytes"
+        assert by["disagg_compressed"]["usd_per_token"] \
+            < by["colocated_large"]["usd_per_token"], \
+            "disagg+compressed failed to cut $-per-token vs colocated-large"
+        assert by["disagg_compressed"]["p99_ttft_s"] \
+            <= by["colocated_large"]["p99_ttft_s"] + 1e-9, \
+            "disagg+compressed lost p99 TTFT vs colocated-large"
+        aff = {r["scenario"]: r
+               for r in disagg_payload["affinity"]["rows"]}
+        print(f"prefix-affinity routing "
+              f"({disagg_payload['affinity']['families']} families x "
+              f"{disagg_payload['affinity']['per_family']}, "
+              f"{disagg_payload['affinity']['prefix_len']} of "
+              f"{disagg_payload['affinity']['prompt_len']} tokens shared): "
+              f"hit_rate {aff['affinity']['prefix_hit_rate']:.0%} affinity "
+              f"vs {aff['random']['prefix_hit_rate']:.0%} random")
+        for r in aff.values():
+            assert r["runtime_errors"] == 0, \
+                f"affinity sweep ({r['scenario']}) raised"
+            assert r["served"] == r["offered"], \
+                f"affinity sweep ({r['scenario']}) shed or lost requests"
+        assert aff["affinity"]["prefix_hit_rate"] \
+            > aff["random"]["prefix_hit_rate"], \
+            "prefix-affinity routing did not beat random placement"
+
     if args.json:
         payload = {
             "benchmark": "serving_load",
@@ -1178,6 +1427,7 @@ def main() -> None:
             "link": args.link,
             "overload_sweep": overload_payload,
             "spec": spec_payload,
+            "disagg": disagg_payload,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

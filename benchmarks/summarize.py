@@ -201,6 +201,27 @@ def bench_summary() -> str:
                   f"{r['usd_per_token'] * 1e6:.2f}",
                   r.get("tokens_identical_to_pinned_large", "-")]
                  for r in spec["rows"]])
+        dis = srv.get("disagg")
+        if dis:
+            lines += ["", "### Disaggregated prefill/decode (ADR-009, "
+                      f"{dis['prompt_len']}-token prompts, decode on "
+                      f"{dis['decode_tier']}, shared prefill partner on "
+                      f"{dis['prefill_tier']})", ""]
+            lines += _md_table(
+                ["scenario", "served", "p99 ttft", "$/Mtok", "handoffs",
+                 "xfer KiB", "identical"],
+                [[r["scenario"], f"{r['served']}/{r['offered']}",
+                  f"{r['p99_ttft_s']:.3f}s",
+                  f"{r['usd_per_token'] * 1e6:.2f}",
+                  r["disagg_handoffs"],
+                  f"{r['kv_transfer_bytes'] / 1024:.1f}",
+                  r.get("tokens_identical_to_colocated_large", "-")]
+                 for r in dis["rows"]])
+            aff = {r["scenario"]: r for r in dis["affinity"]["rows"]}
+            lines += ["", "Prefix-affinity routing: hit rate "
+                      f"{aff['affinity']['prefix_hit_rate']:.0%} vs "
+                      f"{aff['random']['prefix_hit_rate']:.0%} for seeded "
+                      "random placement on the same trace."]
         lines.append("")
     return "\n".join(lines) + "\n"
 

@@ -281,7 +281,8 @@ class SlotLedger:
 
     def assign(self, queue: "AdmissionQueue",
                fits: Optional[Callable] = None,
-               on_assign: Optional[Callable] = None) -> List[tuple]:
+               on_assign: Optional[Callable] = None,
+               prefer: Optional[Callable] = None) -> List[tuple]:
         """Drain the queue into open slots; returns [(key, request)].
 
         Tightest-fit first: the engine with the fewest open slots is
@@ -296,11 +297,22 @@ class SlotLedger:
         each pop, before the next ``fits`` check — admission must happen
         here so resource checks see the commitments of earlier
         assignments in the same round, not stale pre-round state.
+        ``prefer(key, request) -> float`` (optional) biases the engine
+        choice for the head request: the highest-scoring engine wins and
+        ties fall back to tightest-fit — prefix-affinity routing passes
+        the clone's ``match_prefix`` depth here so same-prefix requests
+        land where their blocks already live (ADR-009).
         """
         out = []
         while queue.depth > 0 and self._free:
-            key = min(self._free, key=self._free.get)  # type: ignore[arg-type]
-            if fits is not None and not fits(key, queue.peek()):
+            head = queue.peek()
+            if prefer is None:
+                key = min(self._free,
+                          key=self._free.get)  # type: ignore[arg-type]
+            else:
+                key = min(self._free,
+                          key=lambda k: (-prefer(k, head), self._free[k]))
+            if fits is not None and not fits(key, head):
                 del self._free[key]        # can't take the head request
                 continue
             req = queue.take(1)[0]
@@ -389,7 +401,9 @@ class PlacementEngine:
 
     def choose_type(self, required_type: str, *,
                     urgent: bool = False,
-                    hint: Optional[str] = None) -> Optional[str]:
+                    hint: Optional[str] = None,
+                    affinity: Optional[Dict[str, int]] = None
+                    ) -> Optional[str]:
         """The tier this bucket's capacity should be provisioned on.
 
         ``hint="spec_draft"`` picks the *cheapest adequate* tier by $-rate
@@ -397,6 +411,19 @@ class PlacementEngine:
         (ADR-008) exists precisely to burn the cheap tier's cycles, so
         latency/energy scoring — which would happily pin the draft next to
         the verifier on premium — is overridden.
+
+        ``hint="prefix_affinity"`` ranks by cached-prefix depth first
+        (``affinity``: type -> deepest ``match_prefix`` token depth among
+        that tier's live clones, supplied by the serving layer):
+        re-prefilling tokens the fleet already holds is pure waste, so
+        the deepest match wins, with the normal PLACEMENT_HORIZON policy
+        key (provisioning latency / energy / $) breaking ties — which is
+        also the full ranking for the zero-depth tiers.  A tier's depth
+        only counts while it still has a *serveable* RUNNING clone: the
+        cached blocks live on a specific clone, and if its breaker
+        tripped (ADR-006) a fresh boot would come up with a cold pool, so
+        the hint degrades to the plain policy ranking instead of chasing
+        dead blocks.
         """
         cands = self.eligible(required_type)
         if not cands:
@@ -405,6 +432,17 @@ class PlacementEngine:
             return min(cands, key=lambda t: (usd_per_second(t),
                                              CLONE_TYPES[t].rank()))
         policy = Policy.EXEC_TIME if urgent else self.policy
+        if hint == "prefix_affinity" and affinity:
+            def live_depth(t: str) -> int:
+                alive = any(c.ctype.name == t and c.serveable
+                            and c.state is CloneState.RUNNING
+                            for c in self.pool.clones)
+                return affinity.get(t, 0) if alive else 0
+            return min(cands,
+                       key=lambda t: (-live_depth(t),
+                                      placement_key(policy,
+                                                    self.provision_pred(t)),
+                                      CLONE_TYPES[t].rank()))
         return min(cands,
                    key=lambda t: (placement_key(policy,
                                                 self.provision_pred(t)),

@@ -158,12 +158,41 @@ def transfer_time(nbytes: int, link: LinkProfile) -> float:
 
 
 def pytree_bytes(tree) -> int:
-    """Serialized payload size of a pytree (leaf bytes + small per-leaf tax)."""
+    """Serialized payload size of a pytree (leaf bytes + small per-leaf tax).
+
+    Dtype-honest: abstract leaves carrying only (shape, dtype) — e.g.
+    ``jax.ShapeDtypeStruct`` from ``abstract_cache`` — are billed at
+    ``prod(shape) * dtype.itemsize``, so an int8 KV block costs one byte
+    per element rather than whatever width ``np.asarray`` coerces to.
+    """
     leaves = jax.tree.leaves(tree)
     total = 0
     for leaf in leaves:
         if hasattr(leaf, "nbytes"):
             total += int(leaf.nbytes)
+        elif hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += (int(np.prod(leaf.shape, dtype=np.int64))
+                      * np.dtype(leaf.dtype).itemsize)
         else:
             total += len(np.asarray(leaf).tobytes())
     return total + 64 * max(len(leaves), 1)   # framing/metadata overhead
+
+
+def kv_block_bytes(config, block_size: int, *, quantized: bool = False) -> int:
+    """Modeled wire size of one paged KV block for ``config``.
+
+    A block holds ``block_size`` tokens of K and V for every attention
+    layer: ``block_size * n_attn_layers * 2 * n_kv_heads * head_dim``
+    elements at the model dtype.  ``quantized=True`` bills the int8
+    transfer stream instead: 1 byte/element plus one float32 scale per
+    (layer, K/V, head, block) — the per-head scales the compressed
+    migration path ships alongside the int8 payload.
+    """
+    n_attn = sum(1 for k in config.layer_kinds() if k == "attn")
+    per_tok = n_attn * 2 * config.n_kv_heads * config.head_dim
+    if quantized:
+        scales = n_attn * 2 * config.n_kv_heads * 4
+        return block_size * per_tok + scales
+    import jax.numpy as jnp
+    itemsize = jnp.dtype(config.dtype).itemsize
+    return block_size * per_tok * itemsize

@@ -26,6 +26,43 @@ def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale
 
 
+def kv_quant_axes(ndim: int) -> Tuple[int, ...]:
+    """Reduction axes for per-(block, head) KV scales.
+
+    Gathered KV blocks are laid out ``(n_blocks, block_size, n_kv_heads,
+    head_dim)`` (pool layout with the block axis moved to 0); the scale
+    must survive per block AND per head, so reduce every axis except 0
+    and the head axis at -2.  Leaves too small to carry a head axis
+    (ndim < 3) fall back to per-block scales.
+    """
+    if ndim >= 3:
+        return tuple(i for i in range(1, ndim) if i != ndim - 2)
+    return tuple(range(1, ndim))
+
+
+def quantize_kv_blocks(blocks: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-(block, head) int8 quantization of gathered KV blocks.
+
+    ``blocks``: (n, ...) gathered along the block axis (head axis at -2
+    when present).  Returns ``(q int8, scales float32)`` with ``scales``
+    keepdims-shaped so it broadcasts against ``blocks`` — the compressed
+    KV transfer ships 1 byte/element plus one float32 scale per
+    (block, head) instead of the full-width payload (ADR-009).
+    """
+    v = blocks.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(v), axis=kv_quant_axes(blocks.ndim),
+                   keepdims=True)
+    scale = amax / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv_blocks(q: jax.Array, scale: jax.Array,
+                         dtype=jnp.bfloat16) -> jax.Array:
+    """Inverse of :func:`quantize_kv_blocks` back to the pool dtype."""
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
 def init_error_feedback(params):
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 

@@ -13,6 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import compression as _comp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rglru_scan as _rg
 from repro.kernels import rwkv6_scan as _rw
@@ -158,6 +159,32 @@ def copy_blocks(leaf, src, dst, *, axis: int = 0):
     moved = jnp.moveaxis(leaf, axis, 0)
     moved = moved.at[dst].set(moved[src])
     return jnp.moveaxis(moved, 0, axis)
+
+
+@jax.jit
+def quantize_kv_blocks(blocks):
+    """Device-side per-(block, head) int8 quantization of KV blocks.
+
+    ``blocks``: (n, bs, Hkv, D) — KV blocks gathered along the pool's
+    block axis (leaves without a head axis fall back to per-block
+    scales).  Returns ``(q int8, scales float32 keepdims)``.  The wire
+    half of compressed KV transfer (docs/architecture.md ADR-009): a
+    disaggregated prefill→decode handoff ships the int8 payload plus the
+    scales over the inter-clone link instead of the full-width blocks,
+    ~4x fewer modeled bytes at bf16 pools.
+    """
+    return _comp.quantize_kv_blocks(blocks)
+
+
+@functools.partial(jax.jit, static_argnames=("dtype",))
+def dequantize_kv_blocks(q, scales, *, dtype=jnp.bfloat16):
+    """Device-side inverse of :func:`quantize_kv_blocks`.
+
+    Runs on the receiving clone before the blocks are scattered into its
+    pool; tokens decoded from dequantized KV may drift from the
+    uncompressed path within the declared int8 tolerance.
+    """
+    return _comp.dequantize_kv_blocks(q, scales, dtype=dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bs", "br", "interpret"))

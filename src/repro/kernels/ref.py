@@ -110,6 +110,34 @@ def paged_prefill_ref(q, k_pool, v_pool, block_tables, pos0, n_live, *,
     return out.astype(q.dtype)
 
 
+def quantize_kv_blocks_ref(blocks):
+    """Loop-form oracle for per-(block, head) int8 KV quantization.
+
+    Quantizes each (block, head) slice independently with its own scale
+    ``max|x| / 127``; blocks without a head axis (ndim < 3) get one scale
+    per block.  Returns (q int8, scales float32 keepdims), matching
+    ``ops.quantize_kv_blocks``.
+    """
+    import numpy as np
+    v = np.asarray(blocks, dtype=np.float32)
+    if v.ndim >= 3:
+        axes = tuple(i for i in range(1, v.ndim) if i != v.ndim - 2)
+    else:
+        axes = tuple(range(1, v.ndim))
+    amax = np.max(np.abs(v), axis=axes, keepdims=True)
+    scale = amax / 127.0 + 1e-12
+    q = np.clip(np.round(v / scale), -127, 127).astype(np.int8)
+    return jnp.asarray(q), jnp.asarray(scale.astype(np.float32))
+
+
+def dequantize_kv_blocks_ref(q, scale, dtype=jnp.bfloat16):
+    """Oracle inverse of :func:`quantize_kv_blocks_ref`."""
+    import numpy as np
+    out = np.asarray(q, dtype=np.float32) * np.asarray(scale,
+                                                       dtype=np.float32)
+    return jnp.asarray(out).astype(dtype)
+
+
 def rglru_scan_ref(a, b, h0):
     """Sequential linear recurrence. a, b: (B,S,R); h0: (B,R) fp32."""
     def step(h, ab):

@@ -84,7 +84,8 @@ from repro.core.gateway import StreamingGateway
 from repro.core.scheduler import (AdmissionQueue, FleetAutoscaler,
                                   PlacementEngine, ServeCompletion,
                                   ServeRequest, SlotLedger, poisson_arrivals)
-from repro.core.venues import Venue, pytree_bytes, transfer_time
+from repro.core.venues import (LINKS, Venue, kv_block_bytes, pytree_bytes,
+                               transfer_time)
 from repro.launch import steps as S
 from repro.models import model
 
@@ -479,7 +480,7 @@ class LMBackend:
                 copy_into, donate_argnums=(0,) if donate else ())
         return self._copy_fns[donate]
 
-    def migrate_fn(self):
+    def migrate_fn(self, compress: bool = False):
         """Jitted cross-pool KV migration (ADR-006): ``fn(dst_pool,
         src_pool, src_ids (C,), dst_ids (C,), src_slots (J,), dst_slots
         (J,))`` copies the listed KV blocks *between two pools* across
@@ -488,8 +489,19 @@ class LMBackend:
         half of moving a dying clone's in-flight requests to a survivor.
         Padding follows the serving conventions: block id 0 is the trash
         block on both sides (a 0→0 pad copy is a no-op) and an
-        out-of-range destination slot drops its state-row write."""
-        if getattr(self, "_migrate_fn", None) is None:
+        out-of-range destination slot drops its state-row write.
+
+        ``compress=True`` is the compressed KV transfer of ADR-009: the
+        gathered blocks round-trip through per-(block, head) int8
+        quantization (``ops.quantize_kv_blocks``) before landing in the
+        destination pool — the device realization of shipping the int8
+        payload + scales over the inter-clone link, so decode on the
+        receiving clone genuinely runs on dequantized KV."""
+        fns = getattr(self, "_migrate_fns", None)
+        if fns is None:
+            fns = self._migrate_fns = {}
+        if fns.get(compress) is None:
+            from repro.kernels import ops as kops
             b_ax, c_ax = self._batch_axis, self._cap_axis
 
             def migrate(dst_pool, src_pool, src_ids, dst_ids,
@@ -503,13 +515,18 @@ class LMBackend:
                             0, bax)
                     d = jnp.moveaxis(dleaf, bax, 0)
                     s = jnp.moveaxis(sleaf, bax, 0)
-                    return jnp.moveaxis(d.at[dst_ids].set(s[src_ids]),
+                    payload = s[src_ids]
+                    if compress:
+                        q, sc = kops.quantize_kv_blocks(payload)
+                        payload = kops.dequantize_kv_blocks(
+                            q, sc, dtype=dleaf.dtype)
+                    return jnp.moveaxis(d.at[dst_ids].set(payload),
                                         0, bax)
 
                 return jax.tree.map(mv, dst_pool, src_pool, b_ax, c_ax)
 
-            self._migrate_fn = jax.jit(migrate)
-        return self._migrate_fn
+            fns[compress] = jax.jit(migrate)
+        return fns[compress]
 
 
 class ServingEngine:
@@ -1089,6 +1106,24 @@ class _SlotEngine:
         self._spec_round: Optional[np.ndarray] = None   # k per row, in flight
         self.spec_pending: Optional[tuple] = None
         self.spec_rounds_done = 0
+        # disaggregated prefill (ADR-009): the paired large-tier prefill
+        # clone and its scratch pool, rows awaiting the partner dispatch
+        # (``disagg_joins``) or riding one (``submitted_disagg``), and the
+        # decode-pool blocks still waiting for their streamed KV —
+        # re-marked pending after every fold so no sharer attends over
+        # them before the handoff copy lands.  ``disagg_on`` goes False
+        # when the partner dies (degrade to co-located, never a stall).
+        self.disagg_on = False
+        self.prefill_clone = None
+        self.prefill_pool: Optional[KVBlockPool] = None
+        self.disagg_joins: List[tuple] = []       # (slot, req, eff, new_ids)
+        self.submitted_disagg: List[tuple] = []
+        self.disagg_blocks: Dict[int, List[int]] = {}
+        # one main (step) task and at most one partner prefill task may
+        # be in flight concurrently; the run loop pumps whichever side
+        # has work and is idle
+        self.main_inflight = False
+        self.disagg_inflight = False
 
     def device_tables(self):
         """Device copy of ``kv.tables``, re-uploaded only when the host
@@ -1145,7 +1180,16 @@ class _SlotEngine:
     def alive(self) -> bool:
         return (any(s is not None for s in self.slots)
                 or bool(self.joins) or bool(self.sfx_joins)
-                or bool(self.migrations))
+                or bool(self.migrations) or bool(self.disagg_joins)
+                or bool(self.submitted_disagg))
+
+    def step_work(self) -> bool:
+        """Does the engine have anything for its *own* clone to run right
+        now?  Rows parked on the disagg partner are excluded — an alive
+        engine with only those in flight waits for the handoff instead of
+        dispatching an empty step."""
+        return (bool(self.kv.active.any()) or bool(self.joins)
+                or bool(self.sfx_joins) or bool(self.migrations))
 
 
 @dataclasses.dataclass
@@ -1247,6 +1291,22 @@ class ServeReport:
     spec_tokens: int = 0
     acceptance_rate: float = 0.0
     spec_fallbacks: int = 0
+    # disaggregated prefill/decode (ADR-009): ``disagg_handoffs`` counts
+    # prompts prefilled on the partner tier whose KV blocks migrated to
+    # the decode clone, ``disagg_colocated`` the long-prompt candidates
+    # the transfer-cost planner kept local, ``disagg_fallbacks`` the
+    # engines that degraded to co-located prefill (no partner available
+    # or partner death), ``kv_transfer_bytes``/``kv_transfer_s`` the
+    # modeled cross-clone KV handoff traffic (compressed transfers bill
+    # the int8 payload + scales), and ``per_clone`` the per-clone routing
+    # telemetry: prefix hit rate and KV transfer volume per clone id.
+    disagg_handoffs: int = 0
+    disagg_colocated: int = 0
+    disagg_fallbacks: int = 0
+    kv_transfer_bytes: float = 0.0
+    kv_transfer_s: float = 0.0
+    per_clone: Dict[str, Dict[str, object]] = dataclasses.field(
+        default_factory=dict)
 
     def summary(self) -> str:
         """One-line digest (documented in docs/benchmarks.md)."""
@@ -1298,7 +1358,12 @@ class ClientHandler:
                  breaker_max_probes: Optional[int] = None,
                  speculative: bool = False, spec_k: int = 4,
                  spec_corruption: float = 0.0,
-                 draft_cost: Optional[float] = None):
+                 draft_cost: Optional[float] = None,
+                 routing: str = "ledger",
+                 disagg: bool = False, disagg_link: str = "ici",
+                 disagg_compress: bool = False,
+                 disagg_min_prompt: Optional[int] = None,
+                 disagg_prefill_type: Optional[str] = None):
         if kv not in ("paged", "contiguous"):
             raise ValueError(f"kv must be 'paged' or 'contiguous': {kv!r}")
         if faults and kv != "paged":
@@ -1340,6 +1405,43 @@ class ClientHandler:
                                  "verify support")
             if spec_k < 1:
                 raise ValueError(f"spec_k must be >= 1: {spec_k}")
+        # prefix-affinity / random routing (ADR-009): "ledger" keeps the
+        # pure free-slot policy; "affinity" scores candidate engines by
+        # prefix-index match depth on the incoming prompt; "random" is the
+        # affinity sweep's control arm
+        if routing not in ("ledger", "affinity", "random"):
+            raise ValueError("routing must be 'ledger', 'affinity' or "
+                             f"'random': {routing!r}")
+        if routing != "ledger" and kv != "paged":
+            raise ValueError("prefix-affinity/random routing scores the "
+                             "paged prefix index; it requires kv='paged'")
+        self.routing = routing
+        # disaggregated prefill/decode (ADR-009)
+        if disagg:
+            if kv != "paged":
+                raise ValueError("disaggregated prefill migrates paged KV "
+                                 "blocks between clones; it requires "
+                                 "kv='paged'")
+            if not getattr(backend, "supports_chunked", False):
+                raise ValueError("disaggregated prefill replays prompts "
+                                 "through the chunked paged-prefill scan; "
+                                 "the backend must support chunked prefill "
+                                 "(all-attention, windowless layers)")
+            if speculative:
+                raise ValueError("disaggregated prefill and speculative "
+                                 "decoding both pair the engine with a "
+                                 "partner clone; run one at a time")
+            if donate_kv:
+                raise ValueError("disaggregated prefill keeps the partner "
+                                 "pool alive across the handoff; a donated "
+                                 "pool is consumed (ADR-002)")
+            if disagg_link not in LINKS:
+                raise ValueError(f"unknown disagg_link {disagg_link!r}; "
+                                 f"known: {sorted(LINKS)}")
+        self.disagg = disagg
+        self.disagg_link = disagg_link
+        self.disagg_compress = disagg_compress
+        self.disagg_min_prompt = disagg_min_prompt
         self.speculative = speculative
         self.spec_k = spec_k
         self.spec_corruption = spec_corruption
@@ -1492,10 +1594,38 @@ class ClientHandler:
         self.spec_fallbacks = 0
         self.spec_draft_cids: List[int] = []
         self._spec_rng = np.random.default_rng(0xC0FFEE)
+        # disaggregated prefill + routing state (ADR-009): the partner
+        # tier defaults to the top of the fleet ladder (prefill is
+        # compute-bound — the fastest tier amortizes best).  ONE partner
+        # clone is shared, refcounted, by every disagg engine — that
+        # sharing is the $-economics of the whole design: k cheap decode
+        # engines amortize a single premium prefill clone.  Each engine
+        # still owns a private partner-side scratch pool (keyed by its
+        # *decode* clone, reused across engine generations), so
+        # overlapping partner dispatches never clobber device state.
+        # The seeded routing rng keeps the "random" arm deterministic.
+        if disagg_prefill_type is not None \
+                and disagg_prefill_type not in CLONE_TYPES:
+            raise ValueError(f"unknown disagg_prefill_type "
+                             f"{disagg_prefill_type!r}")
+        self.disagg_prefill_type = disagg_prefill_type or self.fleet[-1]
+        self._prefill_pools: Dict[int, KVBlockPool] = {}
+        self._partner_clone = None
+        self._partner_refs = 0
+        self._route_rng = np.random.default_rng(0xD15A66)
+        self.disagg_handoffs = 0
+        self.disagg_colocated = 0
+        self.disagg_fallbacks = 0
+        self.kv_transfer_bytes = 0.0
+        self.kv_transfer_s = 0.0
+        self.per_clone_stats: Dict[int, Dict[str, object]] = {}
+        self._disagg_blk_bytes: Optional[int] = None
+        self._n_params: Optional[int] = None
 
     # ---------------------------------------------------------------- clones
     def _free_clone(self, lo_rank: Optional[int] = None,
-                    hi_rank: Optional[int] = None):
+                    hi_rank: Optional[int] = None,
+                    prefer_cid: Optional[int] = None):
         """Best usable clone inside the ``[lo_rank, hi_rank]`` band:
         soonest-ready first (a free clone must never lose to one still
         booting), then the smallest tier, then cid.  Cost discipline
@@ -1503,7 +1633,13 @@ class ClientHandler:
         placement policy chose for it, so a dearer tier is simply not a
         candidate.  The primary is exempt from the band's *upper* bound:
         it is standing capacity billed whether or not it serves, so using
-        it can never squat paid-for premium."""
+        it can never squat paid-for premium.
+
+        ``prefer_cid`` (ADR-009 affinity routing) wins among candidates
+        tied on readiness — a prefix-warm clone beats tier order, but a
+        free clone still never loses to one that is booting.  Under
+        ``routing="random"`` the pick is uniform over the candidate set
+        (the affinity sweep's control arm)."""
         def in_band(rank, primary=False):
             return ((lo_rank is None or rank >= lo_rank)
                     and (primary or hi_rank is None or rank <= hi_rank))
@@ -1524,7 +1660,16 @@ class ClientHandler:
                 continue
             cands.append((self.autoscaler.clone_ready_delay(c, now),
                           c.ctype.rank(), c.cid, c))
-        return min(cands)[3] if cands else None
+        if not cands:
+            return None
+        if self.routing == "random":
+            return cands[int(self._route_rng.integers(len(cands)))][3]
+        best = min(cands)
+        if prefer_cid is not None:
+            for c in cands:
+                if c[3].cid == prefer_cid and c[0] <= best[0] + 1e-12:
+                    return c[3]
+        return best[3]
 
     def _net_s(self, nbytes: int) -> float:
         return transfer_time(nbytes, self.pool.link)
@@ -1541,6 +1686,97 @@ class ClientHandler:
             else:
                 self._kv_tok_bytes = 64.0
         return self._kv_tok_bytes
+
+    # ------------------------------------------- disagg / affinity (ADR-009)
+    def _clone_stat(self, clone) -> Dict[str, object]:
+        """Per-clone routing telemetry bucket (ServeReport.per_clone)."""
+        st = self.per_clone_stats.get(clone.cid)
+        if st is None:
+            st = self.per_clone_stats[clone.cid] = {
+                "type": clone.ctype.name, "prefix_hit_tokens": 0,
+                "prompt_tokens": 0, "kv_transfer_bytes": 0.0,
+                "kv_transfer_s": 0.0}
+        return st
+
+    def _disagg_block_bytes(self) -> int:
+        """Modeled wire bytes of one KV block on the handoff link —
+        ``venues.kv_block_bytes`` when the backend carries a real model
+        config (int8 payload + per-head scales when compressing), else a
+        backend-derived fallback (test stubs)."""
+        if self._disagg_blk_bytes is None:
+            cfg = getattr(self.backend, "cfg", None)
+            if cfg is not None and hasattr(cfg, "layer_kinds"):
+                self._disagg_blk_bytes = kv_block_bytes(
+                    cfg, self.block_size, quantized=self.disagg_compress)
+            else:
+                raw = self._kv_token_bytes() * self.block_size
+                self._disagg_blk_bytes = int(
+                    raw / 4 if self.disagg_compress else raw)
+        return self._disagg_blk_bytes
+
+    def _param_count(self) -> Optional[int]:
+        """Backend parameter count (prefill FLOPs model); None for stub
+        backends whose params aren't an array pytree."""
+        if self._n_params is None:
+            try:
+                self._n_params = sum(
+                    int(np.prod(x.shape))
+                    for x in jax.tree.leaves(self.backend.params))
+            except Exception:
+                self._n_params = -1
+        return None if self._n_params < 0 else self._n_params
+
+    def _disagg_worth(self, engine: "_SlotEngine", plen: int) -> bool:
+        """Per-request disagg-vs-co-located planner: ship the prefill to
+        the partner tier only when the modeled prefill-time gain (prompt
+        FLOPs at the decode tier vs the partner tier) exceeds the KV
+        handoff's wire cost on ``disagg_link``.  An explicit
+        ``disagg_min_prompt`` replaces the model with a plain length
+        threshold (and is the stub-backend fallback)."""
+        if self.disagg_min_prompt is not None:
+            return plen >= self.disagg_min_prompt
+        pc = self._param_count()
+        if pc is None:
+            return True
+        flops = 2.0 * pc * plen
+        gain = (flops / engine.clone.spec.eff_flops
+                - flops / engine.prefill_clone.spec.eff_flops)
+        nb = -(-plen // self.block_size)
+        wire = transfer_time(nb * self._disagg_block_bytes(),
+                             LINKS[self.disagg_link])
+        return gain > wire
+
+    def _affinity_depth(self, kvp: KVBlockPool, req: ServeRequest) -> int:
+        """Cached-prefix depth (tokens) this pool holds for ``req`` — the
+        affinity routing score; pure (``match_prefix`` mutates nothing)."""
+        eff = _SlotEngine.effective_prompt(req, self.prompt_pad,
+                                           self.backend.capacity)
+        return int(kvp.match_prefix(eff)[2])
+
+    def _affinity_by_type(self, req: ServeRequest) -> Dict[str, int]:
+        """Per-tier best prefix-match depth over live clone pools — the
+        ``prefix_affinity`` hint's input to PlacementEngine.choose_type."""
+        out: Dict[str, int] = {}
+        by_cid = {c.cid: c for c in self.pool.clones}
+        for cid, kvp in self._kv_pools.items():
+            clone = by_cid.get(cid)
+            if clone is None or not clone.serveable:
+                continue
+            d = self._affinity_depth(kvp, req)
+            t = clone.ctype.name
+            out[t] = max(out.get(t, 0), d)
+        return out
+
+    def _best_affinity_cid(self, req: ServeRequest) -> Optional[int]:
+        """Clone id with the deepest cached prefix for ``req`` (spawn-
+        time affinity: engine pools persist across generations on the
+        same clone, so routing the spawn there revives its index)."""
+        best, best_d = None, 0
+        for cid, kvp in sorted(self._kv_pools.items()):
+            d = self._affinity_depth(kvp, req)
+            if d > best_d:
+                best, best_d = cid, d
+        return best
 
     # ------------------------------------------------------------- placement
     def _charge(self, clone, venue_seconds: float) -> None:
@@ -1617,8 +1853,14 @@ class ClientHandler:
         else:
             rt = self._required_type(req)
             lo = CLONE_TYPES[rt].rank()
-            ct = self.placement.choose_type(rt,
-                                            urgent=req.priority > 0) or rt
+            hints = {}
+            if self.routing == "affinity":
+                # prefix-affinity placement (ADR-009): a tier holding the
+                # request's cached prefix outranks the $-policy order
+                hints = {"hint": "prefix_affinity",
+                         "affinity": self._affinity_by_type(req)}
+            ct = self.placement.choose_type(rt, urgent=req.priority > 0,
+                                            **hints) or rt
             band = (lo, max(lo, CLONE_TYPES[ct].rank()))
         self._band_cache[req.rid] = band
         return band
@@ -1775,7 +2017,66 @@ class ClientHandler:
                     self.spec_draft_cids.append(dc.cid)
             else:
                 self.spec_fallbacks += 1
+        if self.disagg:
+            pc = self._acquire_prefill_clone(clone)
+            if pc is not None:
+                engine.disagg_on = True
+                engine.prefill_clone = pc
+                ppool = self._prefill_pools.get(clone.cid)
+                if ppool is None:
+                    # scratch pool: worst-case blocks (it holds at most
+                    # max_batch in-flight prompts), no prefix index — the
+                    # partner's content is transient by design
+                    ppool = KVBlockPool(self.backend, self.max_batch,
+                                        self.block_size, None,
+                                        prefix_cache=False)
+                    self._prefill_pools[clone.cid] = ppool
+                else:
+                    ppool.reset()
+                engine.prefill_pool = ppool
+            else:
+                self.disagg_fallbacks += 1
         return engine
+
+    def _acquire_prefill_clone(self, decode_clone):
+        """Attach the engine to the SHARED disagg partner clone
+        (ADR-009), refcounted: the first engine claims a clone of the
+        prefill tier — a free RUNNING clone preferred, else one resumed/
+        booted through the pool lifecycle — and later engines just bump
+        the refcount.  The decode clone itself is never a candidate.
+        None degrades the engine to co-located prefill — never a
+        stall."""
+        if (self._partner_clone is not None
+                and self._partner_clone.serveable):
+            self._partner_refs += 1
+            return self._partner_clone
+        t = self.disagg_prefill_type
+        for c in self.pool.running_secondaries():
+            if (c is not decode_clone and not c.busy and c.serveable
+                    and c.ctype.name == t):
+                c.busy = True
+                self._partner_clone, self._partner_refs = c, 1
+                return c
+        try:
+            clones, _ = self.pool.acquire(t, n=1, exclude_primary=True)
+        except Exception:
+            return None
+        for c in clones:
+            if c is not decode_clone and c.serveable:
+                c.busy = True
+                self._partner_clone, self._partner_refs = c, 1
+                return c
+        self.pool.release(clones)
+        return None
+
+    def _release_partner(self) -> None:
+        """Drop one engine's reference on the shared partner clone; the
+        clone returns to the pool (idle-TTL pause/power-off applies) when
+        the last disagg engine lets go."""
+        self._partner_refs = max(0, self._partner_refs - 1)
+        if self._partner_refs == 0 and self._partner_clone is not None:
+            self.pool.release([self._partner_clone])
+            self._partner_clone = None
 
     def _acquire_draft_clone(self, verify_clone):
         """Claim a cheap-tier clone as the engine's draft partner.  The
@@ -1809,16 +2110,56 @@ class ClientHandler:
             clones.append(engine.draft_clone)
             engine.draft_clone = None
             engine.spec_on = False
+        if engine.prefill_clone is not None:
+            engine.prefill_clone = None
+            engine.disagg_on = False
+            self._release_partner()
         self.pool.release(clones)
 
     def _admit(self, engine: _SlotEngine, req: ServeRequest) -> None:
         """Admit through the engine, folding the admission's prefix-cache
-        economics into the handler's report counters."""
+        economics into the handler's report counters.  Disagg-eligible
+        cold prompts are intercepted first (ADR-009): they allocate a
+        decode-side slot but defer the prefill to the engine's partner
+        clone."""
+        st = self._clone_stat(engine.clone)
+        if self._try_disagg_admit(engine, req):
+            plen = self.prompt_pad      # fresh eff is exactly pad-long
+            self.prompt_tokens += plen
+            st["prompt_tokens"] += plen
+            return
         info = engine.admit(req, self.prompt_pad)
         self.prefix_hit_tokens += info["cached"]
         self.prompt_tokens += info["prompt"]
+        st["prefix_hit_tokens"] += info["cached"]
+        st["prompt_tokens"] += info["prompt"]
         if info["restore"]:
             self.restored_tokens += info["suffix"]
+
+    def _try_disagg_admit(self, engine: _SlotEngine,
+                          req: ServeRequest) -> bool:
+        """Route a cold prompt to the disaggregated prefill path when the
+        transfer-cost planner says the partner's compute win beats the
+        KV wire cost (ADR-009).  Local prefix hits always stay
+        co-located — reusing resident blocks is strictly cheaper than
+        recomputing the prefix remotely and shipping it back."""
+        if not (engine.disagg_on and engine.prefill_clone is not None):
+            return False
+        if req.generated:          # restore path: suffix scan is local
+            return False
+        eff = _SlotEngine.effective_prompt(req, self.prompt_pad,
+                                           engine.kv.capacity)
+        if engine.kv.match_prefix(eff)[2] > 0:
+            return False
+        if not self._disagg_worth(engine, len(eff)):
+            self.disagg_colocated += 1
+            return False
+        slot, new_ids, _, _ = engine.kv.alloc_slot(
+            eff, req.max_new_tokens, force_suffix=True)
+        ids = [int(b) for b in new_ids]
+        engine.disagg_joins.append((slot, req, eff, ids))
+        engine.disagg_blocks[slot] = ids
+        return True
 
     def _preempt_slot(self, engine: _SlotEngine, victim: int,
                       counts: np.ndarray) -> None:
@@ -1852,15 +2193,33 @@ class ClientHandler:
             slot, req, _, _, _ = engine.sfx_joins.pop()
         elif engine.joins:
             slot, req, _, _ = engine.joins.pop()
+        elif engine.disagg_joins:
+            # partner prefill not yet submitted: free rollback too
+            slot, req, _, _ = engine.disagg_joins.pop()
+            engine.disagg_blocks.pop(slot, None)
+            engine.kv.cancel_slot(slot)
+            self.queue.requeue(req)
+            self.preemptions += 1
+            return
         else:
-            slot, req, out, ft, *_rest = engine.migrations.pop()
+            m = engine.migrations.pop()
+            slot, req, out, ft = m[0], m[1], m[2], m[3]
+            kind = m[9] if len(m) > 9 else "recover"
             req.generated = list(out)
             req.first_token_t = ft
             req.preemptions += 1
-            engine.kv.free_slot(slot)    # int-admitted: nothing indexed
+            if kind == "disagg":
+                # prompt blocks were suffix-indexed at admit; the partner
+                # slot holding the computed KV is dropped with the copy
+                engine.disagg_blocks.pop(slot, None)
+                engine.kv.cancel_slot(slot)
+                if engine.prefill_pool is not None:
+                    engine.prefill_pool.free_slot(m[7])
+            else:
+                engine.kv.free_slot(slot)   # int-admitted: nothing indexed
+                self.recoveries_restored += 1
             self.queue.requeue(req)
             self.preemptions += 1
-            self.recoveries_restored += 1
             return
         engine.cow_pairs = [p for p in engine.cow_pairs if p[0] != slot]
         engine.kv.cancel_slot(slot)
@@ -1882,7 +2241,8 @@ class ClientHandler:
                 kv.grow_for_window(counts)
                 return
             except PoolExhausted:
-                if engine.joins or engine.sfx_joins or engine.migrations:
+                if (engine.joins or engine.sfx_joins or engine.migrations
+                        or engine.disagg_joins):
                     self._cancel_join(engine)
                     continue
                 cands = [(slot, s.req.priority, len(s.out))
@@ -2007,33 +2367,58 @@ class ClientHandler:
             cow_batch = (self.backend.copy_fn(self.donate_kv), src, dst)
             nbytes += int(src.nbytes) * 2
         mig_batches = []
+        xfer_s = 0.0
         if migs:
-            # inbound KV migrations (ADR-006): one fused cross-pool copy
-            # per source pool — block ids padded to a power-of-two bucket
-            # with (0, 0) trash-to-trash no-ops, destination state-row
-            # pads dropped via an out-of-range slot id.  The *real* KV
-            # bytes cross the inter-clone link: billed into nbytes.
-            by_src: Dict[int, list] = {}
+            # inbound KV migrations: one fused cross-pool copy per
+            # (source pool, kind) — block ids padded to a power-of-two
+            # bucket with (0, 0) trash-to-trash no-ops, destination
+            # state-row pads dropped via an out-of-range slot id.  The
+            # *real* KV bytes cross the inter-clone link: recovery moves
+            # (ADR-006) bill into nbytes on the generic net model, while
+            # disagg handoffs (ADR-009) bill per *block* on the
+            # configured LinkProfile — optionally int8-compressed in
+            # flight, which both shrinks the modeled bytes ~4x and
+            # round-trips the payload through the real quantize /
+            # dequantize device ops.
+            by_src: Dict[tuple, list] = {}
             for m in migs:
-                by_src.setdefault(id(m[4]), []).append(m)
-            for group in by_src.values():
+                kind = m[9] if len(m) > 9 else "recover"
+                by_src.setdefault((id(m[4]), kind), []).append(m)
+            for (_, kind), group in by_src.items():
                 src_pool = group[0][4]
                 sids = [b for m in group for b in m[5]]
                 dids = [b for m in group for b in m[6]]
-                bpad = pow2_bucket(len(sids))
-                sids += [0] * (bpad - len(sids))
-                dids += [0] * (bpad - len(dids))
+                n_blk = len(sids)
+                bpad = pow2_bucket(n_blk)
+                sids += [0] * (bpad - n_blk)
+                dids += [0] * (bpad - n_blk)
                 spad = pow2_bucket(len(group))
                 sslots = [m[7] for m in group] + [0] * (spad - len(group))
                 dslots = [m[0] for m in group] \
                     + [kv.max_slots] * (spad - len(group))
+                compress = kind == "disagg" and self.disagg_compress
+                # positional arg only when compressing: stub backends
+                # (tests) expose the legacy zero-arg migrate_fn
+                mfn = (self.backend.migrate_fn(True) if compress
+                       else self.backend.migrate_fn())
                 mig_batches.append(
-                    (self.backend.migrate_fn(), src_pool,
+                    (mfn, src_pool,
                      jnp.asarray(sids, jnp.int32),
                      jnp.asarray(dids, jnp.int32),
                      jnp.asarray(sslots, jnp.int32),
                      jnp.asarray(dslots, jnp.int32)))
-            nbytes += int(sum(m[8] for m in migs) * self._kv_token_bytes())
+                if kind == "disagg":
+                    dbytes = n_blk * self._disagg_block_bytes()
+                    dt = transfer_time(dbytes, LINKS[self.disagg_link])
+                    xfer_s += dt
+                    self.kv_transfer_bytes += dbytes
+                    self.kv_transfer_s += dt
+                    st = self._clone_stat(engine.clone)
+                    st["kv_transfer_bytes"] += dbytes
+                    st["kv_transfer_s"] += dt
+                else:
+                    nbytes += int(sum(m[8] for m in group)
+                                  * self._kv_token_bytes())
         sfx_batch = None
         mixed_batch = None
         sfx_steps = 0
@@ -2122,16 +2507,116 @@ class ClientHandler:
             + len(mig_batches)
             + (mix_steps if mixed_batch is not None
                else sfx_steps + (engine.window if do_decode else 0)))
+        # prompt tokens the batched co-located prefill folded this step —
+        # lets a step-aware executor bill the full prefill compute (the
+        # disagg sweep's fairness hinge: chunked partner prefills bill
+        # per chunk, so the one-shot batched path must not ride free)
+        step_fn.prefill_tokens = (int(join_batch[0].shape[1])
+                                  if join_batch is not None else 0)
         delay = (self.autoscaler.clone_ready_delay(engine.clone,
                                                    self.clock.now())
-                 + self._net_s(nbytes))
+                 + self._net_s(nbytes) + xfer_s)
         task = self.dispatcher.submit(
             engine.clone, step_fn,
             (self.backend.params, kv.pool, tok, pos, steps_left, tables),
             executor=self.executor, extra_delay=delay,
             label="step" if do_decode else "prefill")
         self._charge(engine.clone, task.venue_seconds)
+        engine.main_inflight = True
         return task
+
+    # ----------------------------------------------------- disagg prefill
+    def _submit_disagg_prefill(self, engine: _SlotEngine):
+        """Dispatch every pending disagg admission as ONE chunked paged
+        prefill on the engine's partner clone (ADR-009).  The partner
+        writes into its own scratch pool; the handoff back to the decode
+        pool rides the engine's next step as a ``"disagg"``-kind
+        migration (billed on ``disagg_link``, optionally int8-compressed
+        in flight).  Returns the dispatched task or None."""
+        if not (engine.disagg_on and engine.prefill_clone is not None
+                and not engine.disagg_inflight and engine.disagg_joins):
+            return None
+        ppool = engine.prefill_pool
+        rows, engine.disagg_joins = engine.disagg_joins, []
+        sub = []
+        for slot, req, eff, new_ids in rows:
+            # bare-length alloc: the scratch pool never indexes prompts,
+            # so it yields exactly the decode side's block count
+            pslot, p_ids, _, _ = ppool.alloc_slot(len(eff))
+            sub.append((slot, req, eff, new_ids, pslot,
+                        [int(b) for b in p_ids]))
+        engine.submitted_disagg = sub
+        j = len(sub)
+        jpad = pow2_bucket(j)
+        tpad = pow2_bucket(max(len(e) for _, _, e, _, _, _ in sub))
+        ptoks = np.zeros((jpad, tpad), np.int32)
+        ppos = np.zeros((jpad,), np.int32)
+        pn = np.zeros((jpad,), np.int32)
+        ptabs = np.zeros((jpad, ppool.max_blk), np.int32)
+        for k, (_s, _r, eff, _n, pslot, _p) in enumerate(sub):
+            ptoks[k, :len(eff)] = eff
+            pn[k] = len(eff)
+            ptabs[k] = ppool.tables[pslot]
+        chunk = engine.chunk
+        if chunk:
+            pw = self.backend.prefill_window_fn(ppool.bs, tpad, False,
+                                                chunk=chunk)
+        else:
+            pw = self.backend.prefill_window_fn(ppool.bs, tpad, False)
+
+        def disagg_fn(params, pool, toks, pos0, n_tok, tabs):
+            return pw(params, pool, toks, pos0, n_tok, tabs)
+
+        disagg_fn.seq_steps = -(-tpad // chunk) if chunk else tpad
+        disagg_fn.prefill_tokens = 0     # chunk-billed via seq_steps
+        toks_d = jnp.asarray(ptoks)
+        delay = (self.autoscaler.clone_ready_delay(engine.prefill_clone,
+                                                   self.clock.now())
+                 + self._net_s(int(toks_d.nbytes)))
+        task = self.dispatcher.submit(
+            engine.prefill_clone, disagg_fn,
+            (self.backend.params, ppool.pool, toks_d, jnp.asarray(ppos),
+             jnp.asarray(pn), jnp.asarray(ptabs)),
+            executor=self.executor, extra_delay=delay,
+            label="disagg_prefill")
+        self._charge(engine.prefill_clone, task.venue_seconds)
+        engine.disagg_inflight = True
+        return task
+
+    def _disagg_prefill_done(self, engine: _SlotEngine, task) -> None:
+        """Fold a completed partner prefill: stamp TTFT now (the first
+        token exists the moment the partner finishes — streaming it back
+        costs token bytes, not the KV handoff), then queue each row's
+        block copy into the engine's next step as a disagg migration."""
+        firsts, ppool_dev = task.value
+        if engine.prefill_pool is not None:
+            engine.prefill_pool.pool = ppool_dev
+        engine.disagg_inflight = False
+        sub, engine.submitted_disagg = engine.submitted_disagg, []
+        now = self.clock.now()
+        firsts = np.asarray(firsts)
+        for (slot, req, eff, new_ids, pslot, p_ids), ft in zip(sub,
+                                                               firsts):
+            req.first_token_t = now
+            req.token_ts = [now]
+            engine.migrations.append(
+                (slot, req, [int(ft)], now, ppool_dev, p_ids, new_ids,
+                 pslot, len(eff), "disagg"))
+
+    def _pump(self, engine: _SlotEngine, inflight: Dict) -> None:
+        """Submit whatever the engine can run *now*: its own next step
+        (unless one is already in flight) and, independently, a partner
+        prefill for pending disagg admissions.  The two overlap — the
+        decode clone keeps stepping while the partner prefills, which is
+        the entire point of the disaggregation (ADR-009)."""
+        if engine.step_work() and not engine.main_inflight:
+            task = self._submit_engine_step(engine)
+            engine.main_inflight = True
+            inflight[task] = engine
+            self._maybe_hedge(task, engine, inflight)
+        pt = self._submit_disagg_prefill(engine)
+        if pt is not None:
+            inflight[pt] = engine
 
     # ------------------------------------------------------- speculative
     def _slot_history(self, engine: _SlotEngine, slot: int) -> List[int]:
@@ -2308,8 +2793,10 @@ class ClientHandler:
             engine.dpos[slot] = 0       # draft replays full history
             kv.active[slot] = True
         engine.submitted_sfx = []
-        for (slot, req, out, ft, *_rest) in engine.submitted_migrations:
-            # the migrated slot resumes exactly where the dying clone
+        for m in engine.submitted_migrations:
+            slot, req, out, ft = m[0], m[1], m[2], m[3]
+            kind = m[9] if len(m) > 9 else "recover"
+            # the migrated slot resumes exactly where the source clone
             # stopped: tokens already emitted, the last one is the next
             # decode input (same contract as the restore fold above)
             engine.slots[slot] = _Slot(req, list(out), ft,
@@ -2317,9 +2804,23 @@ class ClientHandler:
             engine.tok_host[slot] = int(out[-1])
             engine.dpos[slot] = 0       # draft replays full history
             kv.active[slot] = True
-            self.recoveries_migrated += 1
+            if kind == "disagg":
+                # handoff landed: the partner's scratch slot retires and
+                # the slot's prompt blocks leave the pending set below —
+                # they are real and shareable from this fold on
+                self.disagg_handoffs += 1
+                engine.disagg_blocks.pop(slot, None)
+                if engine.prefill_pool is not None:
+                    engine.prefill_pool.free_slot(m[7])
+            else:
+                self.recoveries_migrated += 1
         engine.submitted_migrations = []
         kv.clear_pending()
+        # disagg slots still awaiting their handoff copy keep their
+        # prompt blocks un-shareable: clear_pending() is index-global, so
+        # re-pin them until the fold above retires each slot (ADR-009)
+        for ids in engine.disagg_blocks.values():
+            kv._pending.update(int(b) for b in ids)
         if engine.decode_rows is not None and nxt is not None:
             nxt = np.asarray(nxt)                       # (S, window)
             rows = engine.decode_rows
@@ -2431,7 +2932,8 @@ class ClientHandler:
             s.req.token_ts = list(s.token_ts)   # stamps survive the move
             dst.migrations.append(
                 (dslot, s.req, list(s.out), s.first_token_t,
-                 kv.pool, src_ids, [int(b) for b in new_ids], slot, pos))
+                 kv.pool, src_ids, [int(b) for b in new_ids], slot, pos,
+                 "recover"))
             return True
         return False
 
@@ -2456,9 +2958,18 @@ class ClientHandler:
             req.generated = list(out)
             req.first_token_t = ft
             self._requeue_lost(req)
+        # disagg rows parked on the partner never folded a token on THIS
+        # engine either: requeue them cold (the partner's scratch pool
+        # is transient — nothing to salvage from the decode side)
+        for (_, req, _e, _i) in engine.disagg_joins:
+            self._requeue_lost(req)
+        for (_, req, _e, _i, _ps, _pi) in engine.submitted_disagg:
+            self._requeue_lost(req)
         engine.joins, engine.sfx_joins, engine.cow_pairs = [], [], []
         engine.submitted_joins, engine.submitted_sfx = [], []
         engine.migrations, engine.submitted_migrations = [], []
+        engine.disagg_joins, engine.submitted_disagg = [], []
+        engine.disagg_blocks = {}
         for slot, s in enumerate(engine.slots):
             if s is None:
                 continue
@@ -2473,6 +2984,7 @@ class ClientHandler:
         # from a fresh pool (its prefix index died with the memory); the
         # device arrays stay referenced by any pending migration tuples
         self._kv_pools.pop(engine.clone.cid, None)
+        self._prefill_pools.pop(engine.clone.cid, None)
 
     def _recover_failed(self, inflight: Dict,
                         engines: Dict[int, "_SlotEngine"]) -> None:
@@ -2481,6 +2993,7 @@ class ClientHandler:
         arrive), resolve hedge races, and recover its engine's requests."""
         for clone, fault in self.injector.drain_failed():
             draft_orphans = []        # engines whose draft died mid-round
+            disagg_orphans = []       # engines whose partner died mid-prefill
             for task in [t for t in inflight if t.clone is clone]:
                 unit = inflight.pop(task)
                 self.dispatcher.cancel(task)
@@ -2489,6 +3002,11 @@ class ClientHandler:
                     # migration folds) is stashed on the engine — it can
                     # still run, with zero drafts, on the healthy clone
                     draft_orphans.append(unit)
+                    continue
+                if task.label == "disagg_prefill":
+                    # the decode engine is healthy — its parked rows
+                    # requeue / degrade to co-located prefill below
+                    disagg_orphans.append(unit)
                     continue
                 partner = self._hedges.pop(task, None)
                 if partner is not None:
@@ -2516,6 +3034,10 @@ class ClientHandler:
                 if engine.draft_clone is not None:
                     self.pool.release([engine.draft_clone])
                     engine.draft_clone = None
+                if engine.prefill_clone is not None:
+                    engine.prefill_clone = None
+                    engine.disagg_on = False
+                    self._release_partner()
                 self._recover_engine(engine, fault, engines)
             self.pool.release([clone])
             # draft-clone death degrades its engines to plain decode —
@@ -2535,6 +3057,41 @@ class ClientHandler:
                                  np.int32),
                         np.zeros((eng.kv.max_slots,), np.int32))
                     inflight[vt] = eng
+            # partner-clone death degrades its engines to co-located
+            # prefill (ADR-009): rows mid-flight on the dead partner
+            # requeue (no token was ever emitted for them); rows still
+            # pending convert to plain joins on the decode clone — the
+            # engine never stalls
+            for eng in disagg_orphans:
+                if id(eng) not in engines:
+                    continue            # decode engine died too: handled
+                eng.disagg_inflight = False
+                sub, eng.submitted_disagg = eng.submitted_disagg, []
+                for (slot, req, _e, _i, _ps, _pi) in sub:
+                    eng.disagg_blocks.pop(slot, None)
+                    eng.kv.cancel_slot(slot)
+                    self._requeue_lost(req)
+            for eng in engines.values():
+                if eng.prefill_clone is not clone:
+                    continue
+                eng.prefill_clone = None
+                eng.prefill_pool = None
+                eng.disagg_on = False
+                self.disagg_fallbacks += 1
+                # the scratch pool's device arrays died with the partner
+                self._prefill_pools.pop(eng.clone.cid, None)
+                rows, eng.disagg_joins = eng.disagg_joins, []
+                for (slot, req, eff, ids) in rows:
+                    eng.disagg_blocks.pop(slot, None)
+                    eng.joins.append(
+                        (slot, req, jnp.asarray(eff[None]),
+                         jnp.asarray(np.asarray(ids, np.int32))))
+                self._pump(eng, inflight)
+            if self._partner_clone is clone:
+                # injector-killed partner: every engine's reference died
+                # with it (pool.release of the dead clone ran above)
+                self._partner_clone = None
+                self._partner_refs = 0
 
     # ---------------------------------------------------------------- hedge
     def _maybe_hedge(self, task, engine: _SlotEngine,
@@ -2655,10 +3212,24 @@ class ClientHandler:
                 # index, so a shared-prefix request needs only its
                 # private blocks free — and vetoes engines outside the
                 # request's placement band (ADR-004)
+                # affinity routing scores candidate engines by cached-
+                # prefix depth (ADR-009); random is the ablation arm
+                prefer = None
+                if self.routing == "affinity":
+                    prefer = (lambda key, r:
+                              float(self._affinity_depth(engines[key].kv,
+                                                         r)))
+                elif self.routing == "random":
+                    prefer = lambda key, r: float(self._route_rng.random())
                 self.ledger.assign(
                     self.queue,
                     fits=lambda key, r: self._fits_slot(engines[key], r),
-                    on_assign=lambda key, r: self._admit(engines[key], r))
+                    on_assign=lambda key, r: self._admit(engines[key], r),
+                    prefer=prefer)
+                # parked engines (only partner work was in flight) may
+                # have gained runnable work from the assignments
+                for eng in engines.values():
+                    self._pump(eng, inflight)
             # demand bucketed per tenant/priority class and KV tier; the
             # placement engine turns buckets into per-type targets
             self.autoscaler.step(now, self._demand_buckets(),
@@ -2671,7 +3242,9 @@ class ClientHandler:
                 picked = clone = None
                 for r in self.queue.snapshot():
                     lo, hi = self._placement_band(r)
-                    clone = self._free_clone(lo, hi)
+                    pc = (self._best_affinity_cid(r)
+                          if self.routing == "affinity" else None)
+                    clone = self._free_clone(lo, hi, prefer_cid=pc)
                     if clone is not None:
                         picked = r
                         break
@@ -2709,9 +3282,7 @@ class ClientHandler:
                             f"block_size={self.block_size})")
                     engines[id(engine)] = engine
                     self.ledger.update(id(engine), engine.kv.free_slots)
-                    task = self._submit_engine_step(engine)
-                    inflight[task] = engine
-                    self._maybe_hedge(task, engine, inflight)
+                    self._pump(engine, inflight)
                 else:
                     # the cohort seeds with the *picked* request (the
                     # clone was banded for it — never the possibly
@@ -2758,10 +3329,16 @@ class ClientHandler:
                             inflight[vt] = unit
                             self._maybe_hedge(vt, unit, inflight)
                             continue
+                        if task.label == "disagg_prefill":
+                            # partner done: the handoff copy rides the
+                            # engine's next step (pumped now — the engine
+                            # may have been parked waiting on this)
+                            self._disagg_prefill_done(unit, task)
+                            self._pump(unit, inflight)
+                            continue
+                        unit.main_inflight = False
                         if self._engine_step_done(unit, task, completions):
-                            t2 = self._submit_engine_step(unit)
-                            inflight[t2] = unit
-                            self._maybe_hedge(t2, unit, inflight)
+                            self._pump(unit, inflight)
                         else:
                             engines.pop(id(unit), None)
                             self.ledger.drop(id(unit))
@@ -2847,6 +3424,14 @@ class ClientHandler:
                     [c.tpot_s for c in cs], 50))}
             for t, cs in sorted(by_tenant.items())}
         gw = self.gateway
+        per_clone = {
+            str(cid): {
+                "type": st["type"],
+                "prefix_hit_rate": (st["prefix_hit_tokens"]
+                                    / max(st["prompt_tokens"], 1)),
+                "kv_transfer_bytes": float(st["kv_transfer_bytes"]),
+                "kv_transfer_s": float(st["kv_transfer_s"])}
+            for cid, st in sorted(self.per_clone_stats.items())}
         return ServeReport(
             completions=completions,
             accepted=self.queue.accepted,
@@ -2895,7 +3480,13 @@ class ClientHandler:
             spec_tokens=self.spec_tokens,
             acceptance_rate=(self.spec_accepted
                              / max(self.spec_proposed, 1)),
-            spec_fallbacks=self.spec_fallbacks)
+            spec_fallbacks=self.spec_fallbacks,
+            disagg_handoffs=self.disagg_handoffs,
+            disagg_colocated=self.disagg_colocated,
+            disagg_fallbacks=self.disagg_fallbacks,
+            kv_transfer_bytes=self.kv_transfer_bytes,
+            kv_transfer_s=self.kv_transfer_s,
+            per_clone=per_clone)
 
 
 def main() -> None:

@@ -665,6 +665,48 @@ def test_placement_required_type_escalates_and_degrades_at_top():
     assert pe.required_type("basic", 99, real.__getitem__) == "main"
 
 
+def test_choose_type_hints_spec_draft_affinity_and_breaker_degrade():
+    """ISSUE 10 satellite: ``spec_draft`` picks the cheapest adequate
+    tier regardless of policy; ``prefix_affinity`` ranks by cached-prefix
+    depth through the full tier ladder while the depth's tier still has a
+    serveable RUNNING clone, and degrades to the plain policy ranking
+    when that clone's breaker trips — chasing an open-breaker clone's
+    blocks would re-prefill on a cold pool anyway."""
+    from repro.core import ClonePool, Policy
+    from repro.core.clones import CloneState
+    from repro.core.scheduler import PlacementEngine
+    pool = ClonePool(clock=lambda: 0.0)
+    pool.provision("basic", 1, state=CloneState.RUNNING)
+    lg = pool.provision("large", 1, state=CloneState.RUNNING)[0]
+    pe = PlacementEngine(pool, fleet=["basic", "main", "large", "x2large"],
+                         policy=Policy.NONE)
+    # spec_draft: cheapest adequate by $-rate; the required floor holds
+    assert pe.choose_type("basic", hint="spec_draft") == "basic"
+    assert pe.choose_type("main", hint="spec_draft") == "main"
+    # prefix_affinity: the deepest live match beats the $-policy pick
+    aff = {"large": 32, "basic": 8}
+    assert pe.choose_type("basic", hint="prefix_affinity",
+                          affinity=aff) == "large"
+    # ...through the ladder: a floor above the deepest tier drops it from
+    # the candidate set, and the deepest *eligible* live match wins
+    assert pe.choose_type("main", hint="prefix_affinity",
+                          affinity={"basic": 32, "large": 8}) == "large"
+    # a depth only counts while its tier has a RUNNING serveable clone:
+    # "x2large" has none, so its depth is dead weight and $-ranking rules
+    assert pe.choose_type("basic", hint="prefix_affinity",
+                          affinity={"x2large": 64}) == "basic"
+    # zero affinity degrades to the plain policy ranking
+    assert pe.choose_type("basic", hint="prefix_affinity",
+                          affinity={}) == "basic"
+    # breaker-open degrade: large's only clone trips, its cached depth
+    # must stop counting, and the hint falls back to the $-ranking
+    while lg.breaker.state == "closed":
+        lg.breaker.record_failure(now=0.0)
+    assert not lg.serveable
+    assert pe.choose_type("basic", hint="prefix_affinity",
+                          affinity=aff) == "basic"
+
+
 def test_fleet_autoscaler_provisions_per_type_under_budget():
     """Demand buckets land on their placed tiers (resume cheap, boot the
     escalated tier) and the global secondary budget caps the total."""
@@ -1197,3 +1239,257 @@ def test_speculative_lm_serving_token_identical():
         assert toks == base and len(toks) == 4
         assert rep.spec_rounds > 0
         assert rep.acceptance_rate > 0.0
+
+
+# --------------------------------------------------------------------------- #
+# disaggregated prefill/decode (ADR-009)
+# --------------------------------------------------------------------------- #
+class DisaggFakeBackend(FakeBackend):
+    """FakeBackend + the chunked/disagg protocol.
+
+    Prefill (local, chunked, or on the partner) always emits first token
+    0 and decode counts up, so streams are deterministic regardless of
+    which clone ran the prefill — KV content is not modeled, the
+    host-side block bookkeeping and token carry are what's under test.
+    """
+
+    supports_chunked = True
+
+    def prefill_window_fn(self, block_size, num_steps, donate=False,
+                          chunk=0):
+        def prefill_window(params, pool, toks, pos0, n_tok, tables):
+            return np.zeros(int(np.asarray(toks).shape[0]), np.int32), pool
+
+        return prefill_window
+
+    def mixed_fn(self, block_size, chunk, steps, donate=False):
+        def mixed(params, pool, tok, pos, steps_left, tables,
+                  stoks, spos, sn, stabs):
+            cur = np.asarray(tok)[:, 0].astype(np.int32)
+            sl = np.asarray(steps_left)
+            window = max(int(np.max(sl)) if sl.size else 1, 1)
+            out = np.zeros((cur.size, window), np.int32)
+            for t in range(window):
+                cur = np.where(t < sl, cur + 1, cur)
+                out[:, t] = cur
+            firsts = np.zeros(int(np.asarray(stoks).shape[0]), np.int32)
+            return out, firsts, pool
+
+        return mixed
+
+    def migrate_fn(self, compress=False):
+        return lambda dst, src, sids, dids, sslots, dslots: dst
+
+
+def test_disagg_validation_errors():
+    from repro.launch.serve import ClientHandler
+    ex = lambda c, f, a: (f(*a), 0.05)
+    with pytest.raises(ValueError, match="kv='paged'"):
+        ClientHandler(DisaggFakeBackend(), executor=ex, prompt_pad=4,
+                      kv="contiguous", disagg=True)
+    with pytest.raises(ValueError, match="chunked"):
+        ClientHandler(FakeBackend(), executor=ex, prompt_pad=4,
+                      disagg=True)     # no supports_chunked on the stub
+    with pytest.raises(ValueError, match="disagg_link"):
+        ClientHandler(DisaggFakeBackend(), executor=ex, prompt_pad=4,
+                      disagg=True, disagg_link="carrier-pigeon")
+    with pytest.raises(ValueError, match="routing"):
+        ClientHandler(DisaggFakeBackend(), executor=ex, prompt_pad=4,
+                      routing="bogus")
+    with pytest.raises(ValueError, match="kv='paged'"):
+        ClientHandler(DisaggFakeBackend(), executor=ex, prompt_pad=4,
+                      kv="contiguous", routing="affinity")
+
+
+def _disagg_trace():
+    return [ServeRequest(i, np.full(8, i + 1, np.int32), 4,
+                         arrival_t=0.05 * i) for i in range(6)]
+
+
+def _run_disagg_fake(**kw):
+    from repro.launch.serve import ClientHandler
+    h = ClientHandler(DisaggFakeBackend(),
+                      executor=kw.pop("executor",
+                                      lambda c, f, a: (f(*a), 0.05)),
+                      prompt_pad=8, max_batch=2, max_secondaries=4,
+                      block_size=4, prefill_chunk=4, use_primary=False,
+                      fleet=["basic", "large"], clone_type="basic", **kw)
+    rep = h.run(_disagg_trace())
+    return h, rep, {c.rid: list(map(int, c.tokens))
+                    for c in rep.completions}
+
+
+def test_disagg_handoffs_colocated_split_and_transfer_accounting():
+    """Cold prompts over the disagg_min_prompt threshold hand off (one
+    count + wire bytes/seconds each), a threshold above the effective
+    prompt keeps every candidate co-located (planner says no, zero wire
+    cost), and the int8 handoff ships <= half the uncompressed bytes —
+    with every stream identical to the non-disagg baseline (the stub
+    decodes the same count-up sequence wherever the prefill ran)."""
+    _, rep0, t0 = _run_disagg_fake()
+    assert len(t0) == 6 and rep0.disagg_handoffs == 0
+    assert rep0.kv_transfer_bytes == 0 and rep0.kv_transfer_s == 0.0
+    _, rep1, t1 = _run_disagg_fake(disagg=True, disagg_min_prompt=6,
+                                   disagg_prefill_type="large")
+    assert t1 == t0
+    assert rep1.disagg_handoffs == 6       # every eff-8 prompt ships
+    assert rep1.disagg_colocated == 0
+    assert rep1.disagg_fallbacks == 0
+    assert rep1.kv_transfer_bytes > 0 and rep1.kv_transfer_s > 0.0
+    _, rep2, t2 = _run_disagg_fake(disagg=True, disagg_min_prompt=6,
+                                   disagg_prefill_type="large",
+                                   disagg_compress=True)
+    assert t2 == t0
+    assert rep2.disagg_handoffs == 6
+    assert 0 < rep2.kv_transfer_bytes < 0.5 * rep1.kv_transfer_bytes
+    # threshold above the padded prompt: the planner keeps every
+    # candidate local — co-located counts, nothing on the wire
+    _, rep3, t3 = _run_disagg_fake(disagg=True, disagg_min_prompt=100,
+                                   disagg_prefill_type="large")
+    assert t3 == t0
+    assert rep3.disagg_handoffs == 0 and rep3.disagg_colocated == 6
+    assert rep3.kv_transfer_bytes == 0
+
+
+def test_disagg_partner_death_degrades_to_colocated_prefill():
+    """Killing the shared prefill partner mid-trace must degrade every
+    attached engine to co-located prefill (counted as fallbacks) with
+    zero token loss — a partner death is never a stall and never
+    corrupts a stream."""
+    from repro.core.faults import CloneFault
+    from repro.launch.serve import ClientHandler
+    ex = lambda c, f, a: (f(*a), 0.05)
+
+    def run(faults):
+        # decode on the primary: the shared large partner is then the
+        # only running secondary, so cid=None targets it at fire time
+        h = ClientHandler(DisaggFakeBackend(), executor=ex, prompt_pad=4,
+                          max_batch=8, max_secondaries=2, block_size=4,
+                          prefill_chunk=4, fleet=["main", "large"],
+                          disagg=True, disagg_min_prompt=1,
+                          disagg_prefill_type="large", faults=faults)
+        rep = h.run([ServeRequest(i, np.full(8, i + 1, np.int32), 4,
+                                  arrival_t=0.3 * i) for i in range(4)])
+        return rep, {c.rid: list(map(int, c.tokens))
+                     for c in rep.completions}
+
+    rep0, t0 = run(None)
+    assert rep0.disagg_handoffs == 4 and rep0.disagg_fallbacks == 0
+    rep1, t1 = run([CloneFault(at=0.35, kind="kill")])
+    assert t1 == t0                        # count-up streams, no loss
+    assert rep1.disagg_fallbacks >= 1
+    assert rep1.disagg_handoffs < 4        # post-death prompts stay local
+    assert rep1.faults_injected == 1
+
+
+def test_disagg_lm_serving_token_identical():
+    """Real reduced model: disaggregated prefill (partner clone + paged
+    block migration) must be bitwise the co-located handler on the same
+    trace when uncompressed, and the int8 handoff must complete every
+    stream at <= half the wire bytes (ADR-009 end to end)."""
+    from repro.launch.serve import ClientHandler
+    backend = _chunk_lm_backend()
+    vocab = backend.cfg.vocab_size
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(0, vocab, 8, dtype=np.int32)
+    reqs = []
+    for i in range(4):
+        tail = rng.integers(0, vocab, 4, dtype=np.int32)
+        tail[0] = i
+        reqs.append(ServeRequest(i, np.concatenate([prefix, tail]), 6,
+                                 arrival_t=0.05 * i))
+
+    def run(**kw):
+        h = ClientHandler(backend, max_batch=4, prompt_pad=12,
+                          block_size=4, max_secondaries=4,
+                          decode_window=4,
+                          executor=lambda c, f, a: (f(*a), 0.05), **kw)
+        rep = h.run([dataclasses.replace(r) for r in reqs])
+        return rep, {c.rid: list(map(int, c.tokens))
+                     for c in rep.completions}
+
+    import dataclasses
+    _, t0 = run()
+    rep1, t1 = run(fleet=["basic", "large"], clone_type="basic",
+                   disagg=True, disagg_min_prompt=1,
+                   disagg_prefill_type="large")
+    assert rep1.disagg_handoffs >= 1
+    assert t1 == t0 and len(t1) == 4
+    rep2, t2 = run(fleet=["basic", "large"], clone_type="basic",
+                   disagg=True, disagg_min_prompt=1,
+                   disagg_prefill_type="large", disagg_compress=True)
+    assert len(t2) == 4
+    assert all(len(v) == 6 for v in t2.values())
+    assert 0 < rep2.kv_transfer_bytes < 0.5 * rep1.kv_transfer_bytes
+
+
+def _assert_blocks_conserved(kv):
+    """Post-drain allocator conservation for one KVBlockPool: no live
+    refs, no leaked block, no double-free (free / cached-free partition
+    the physical blocks; the trash block stays clean)."""
+    assert not np.asarray(kv.ref).any(), "live refcount after drain"
+    free = set(kv._free_blocks)
+    cached = set(kv._cached_free)
+    assert len(kv._free_blocks) == len(free), "double-free: dup free list"
+    assert not free & cached
+    assert free | cached == set(range(1, kv.num_blocks)), "leaked block"
+    assert 0 not in free and 0 not in cached
+
+
+def run_disagg_affinity_trace(seed, *, routing="ledger", disagg=False,
+                              compress=False):
+    """Serve a seeded shared-prefix trace (2 families x 3 requests) on
+    the reduced model and return its observables; asserts KV-block
+    conservation over every per-clone pool and partner scratch pool on
+    the way out.  The ADR-009 property harness: ``test_property.py``
+    sweeps (seed, routing, disagg, compress) through this."""
+    from repro.launch.serve import ClientHandler
+    backend = _chunk_lm_backend()
+    vocab = backend.cfg.vocab_size
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, vocab, 8, dtype=np.int32)
+                for _ in range(2)]
+    reqs = []
+    for i in range(6):
+        tail = rng.integers(0, vocab, 4, dtype=np.int32)
+        tail[0] = i                        # diverge at block boundary
+        reqs.append(ServeRequest(
+            i, np.concatenate([prefixes[i % 2], tail]), 6,
+            arrival_t=float(rng.uniform(0.0, 0.6))))
+    kw = {}
+    if disagg:
+        kw = dict(fleet=["basic", "large"], disagg=True,
+                  disagg_min_prompt=1, disagg_prefill_type="large",
+                  disagg_compress=compress)
+    h = ClientHandler(backend, max_batch=2, prompt_pad=12, block_size=4,
+                      max_secondaries=4, decode_window=4,
+                      clone_type="basic", use_primary=False,
+                      routing=routing,
+                      executor=lambda c, f, a: (f(*a), 0.05), **kw)
+    rep = h.run(reqs)
+    for kv in list(h._kv_pools.values()) + list(h._prefill_pools.values()):
+        _assert_blocks_conserved(kv)
+    return {"tokens": {c.rid: tuple(map(int, c.tokens))
+                       for c in rep.completions},
+            "served": len(rep.completions),
+            "offered": 6,
+            "handoffs": rep.disagg_handoffs,
+            "fallbacks": rep.disagg_fallbacks,
+            "xfer_bytes": rep.kv_transfer_bytes}
+
+
+def test_disagg_affinity_routing_conserves_blocks_and_tokens():
+    """Deterministic twin of the ADR-009 property (test_property.py):
+    any routing mode x disagg handoff serves the whole shared-prefix
+    trace with zero block leak and — compression off — streams bitwise
+    identical to the co-located ledger-routed baseline."""
+    base = run_disagg_affinity_trace(3)
+    assert base["served"] == 6 and base["handoffs"] == 0
+    for routing in ("affinity", "random"):
+        out = run_disagg_affinity_trace(3, routing=routing, disagg=True)
+        assert out["tokens"] == base["tokens"]
+        assert out["handoffs"] >= 1 and out["fallbacks"] == 0
+    comp = run_disagg_affinity_trace(3, routing="affinity", disagg=True,
+                                     compress=True)
+    assert comp["served"] == 6
+    assert 0 < comp["xfer_bytes"] < out["xfer_bytes"]

@@ -360,3 +360,55 @@ def test_copy_blocks_copies_listed_rows_only(axis):
     mv[1] = np.moveaxis(x, axis, 0)[2]
     mv[3] = np.moveaxis(x, axis, 0)[4]
     np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------------------------------------- #
+# int8 KV block quantization (ADR-009 compressed disagg handoff)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 8, 2, 16), (3, 6, 4), (5, 12)])
+def test_quantize_kv_blocks_matches_ref(shape, dtype):
+    """Device quantize must match the loop-form oracle bit-for-bit on the
+    int8 payload (scales/dequant to 1 ulp), and the round trip must stay
+    within half a quantization step of the original per (block, head)."""
+    blocks = _rand(KEY, shape, dtype) * 3.0
+    q, scales = ops.quantize_kv_blocks(blocks)
+    qr, sr = ref.quantize_kv_blocks_ref(blocks)
+    assert q.dtype == jnp.int8 and scales.dtype == jnp.float32
+    # keepdims: scales broadcast against blocks, one per (block, head).
+    assert scales.ndim == blocks.ndim and scales.shape[0] == shape[0]
+    want_scale_shape = tuple(
+        n if i == 0 or (len(shape) >= 3 and i == len(shape) - 2) else 1
+        for i, n in enumerate(shape))
+    assert scales.shape == want_scale_shape
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(scales), np.asarray(sr),
+                               rtol=1e-6, atol=0)
+    deq = ops.dequantize_kv_blocks(q, scales, dtype=dtype)
+    deqr = ref.dequantize_kv_blocks_ref(qr, sr, dtype=dtype)
+    assert deq.dtype == dtype
+    # scales may differ by 1 ulp between the jnp and numpy paths, so the
+    # dequantized payload is allclose-tight rather than bit-exact.
+    np.testing.assert_allclose(np.asarray(deq.astype(jnp.float32)),
+                               np.asarray(deqr.astype(jnp.float32)),
+                               rtol=1e-6, atol=1e-6)
+    # |x - deq(q(x))| <= scale/2 elementwise (round-to-nearest bound).
+    err = np.abs(np.asarray(blocks, np.float32)
+                 - np.asarray(deq, np.float32))
+    bound = np.broadcast_to(np.asarray(scales), shape) * 0.5 + 1e-6
+    if dtype == jnp.bfloat16:      # input itself only has ~8 mantissa bits
+        bound = bound + 0.02 * np.abs(np.asarray(blocks, np.float32))
+    assert np.all(err <= bound)
+
+
+def test_quantize_kv_blocks_range_and_zeros():
+    """Payload must use the full symmetric int8 range and map all-zero
+    blocks to exact zeros (the 1e-12 scale floor must not inject noise)."""
+    blocks = jnp.stack([jnp.full((4, 2, 8), 0.0, jnp.float32),
+                        jnp.full((4, 2, 8), 5.0, jnp.float32)])
+    q, scales = ops.quantize_kv_blocks(blocks)
+    assert int(jnp.max(jnp.abs(q))) == 127
+    np.testing.assert_array_equal(np.asarray(q[0]), 0)
+    deq = ops.dequantize_kv_blocks(q, scales, dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(deq[0]), 0.0)
+    np.testing.assert_allclose(np.asarray(deq[1]), 5.0, rtol=1e-5)

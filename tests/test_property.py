@@ -409,3 +409,34 @@ def test_chunked_serving_preemption_invariant(seed, chunk):
     import test_handler as th
     assert th._run_tight_chunk_trace(seed, 0, False) == \
         th._run_tight_chunk_trace(seed, chunk, True)
+
+
+# ---------------------------------------------------------------------------
+# disaggregated prefill/decode + affinity routing (ADR-009)
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=6)
+@given(seed=st.integers(0, 2 ** 31 - 1),
+       routing=st.sampled_from(["ledger", "affinity", "random"]),
+       compress=st.booleans())
+def test_disagg_affinity_conserves_blocks_and_tokens(seed, routing,
+                                                     compress):
+    """ADR-009 property: for any seeded shared-prefix trace, routing
+    mode, and compression setting, disaggregated serving (partner
+    prefill + cross-clone paged-KV migration) loses no request, leaks
+    and double-frees no block in any per-clone or partner scratch pool
+    (asserted inside the helper), always hands off at least one cold
+    prompt, and — compression off — emits streams bitwise identical to
+    the co-located ledger-routed greedy baseline.  (The deterministic
+    twin lives in test_handler.py so the invariant is still exercised
+    where hypothesis is not installed.)"""
+    import test_handler as th
+    base = th.run_disagg_affinity_trace(seed)
+    out = th.run_disagg_affinity_trace(seed, routing=routing,
+                                       disagg=True, compress=compress)
+    assert out["served"] == out["offered"] == base["served"]
+    assert out["handoffs"] >= 1
+    assert out["xfer_bytes"] > 0
+    if not compress:
+        assert out["tokens"] == base["tokens"]

@@ -75,6 +75,18 @@ ISSUE 9 acceptance (cross-tier speculative decoding, ADR-008):
   strictly between 0 and 1, and the oracle row at a strictly lower
   $-per-token than pinned-large without losing tokens/s.
 
+ISSUE 10 acceptance (disaggregated prefill/decode, ADR-009):
+
+- every ``disagg`` row in ``BENCH_serving.json`` serves every request;
+  the disagg rows hand off >= 1 prefill to the shared partner, the
+  uncompressed row is token-identical to the colocated-large baseline,
+  the compressed row moves < 0.5x the uncompressed row's modeled KV
+  transfer bytes, and ``disagg_compressed`` beats ``colocated_large``
+  on $-per-token at an equal-or-better p99 TTFT;
+- the ``disagg.affinity`` sub-sweep serves every request in both arms
+  and prefix-affinity routing's hit rate strictly beats the seeded
+  random placement control.
+
 Every missing-section violation names the command that regenerates the
 artifact, so a stale BENCH file is a one-line fix.
 """
@@ -599,6 +611,90 @@ def _check_spec_serving(doc: dict) -> list:
     return bad
 
 
+_DISAGG_ROW_KEYS = ("scenario", "clone_type", "disagg", "compress",
+                    "served", "offered", "runtime_errors", "total_tokens",
+                    "p50_ttft_s", "p99_ttft_s", "cost_usd", "usd_per_token",
+                    "disagg_handoffs", "kv_transfer_bytes", "kv_transfer_s",
+                    "clone_seconds_by_type")
+_AFFINITY_ROW_KEYS = ("scenario", "served", "offered", "runtime_errors",
+                      "prefix_hit_rate", "per_clone")
+
+
+def _check_disagg(doc: dict) -> list:
+    """``disagg`` sweep violations in BENCH_serving.json (ISSUE 10)."""
+    bad = []
+    sweep = doc.get("disagg")
+    if not sweep:               # optional: --disagg-requests 0 disables
+        return bad
+    for k in ("prompt_len", "new_tokens", "chunk", "decode_tier",
+              "prefill_tier", "rows", "affinity"):
+        if k not in sweep:
+            return [f"disagg: missing {k!r}{_regen(_REGEN_SERVING)}"]
+    by = {}
+    for i, row in enumerate(sweep["rows"]):
+        missing = [k for k in _DISAGG_ROW_KEYS if k not in row]
+        if missing:
+            return bad + [f"disagg.rows[{i}]: missing {missing}"
+                          f"{_regen(_REGEN_SERVING)}"]
+        by[row["scenario"]] = row
+        if row["runtime_errors"] != 0:
+            bad.append(f"disagg.{row['scenario']}: raised — the partner "
+                       "path must degrade to co-located, never crash")
+        if row["served"] != row["offered"]:
+            bad.append(f"disagg.{row['scenario']}: lost requests "
+                       f"({row['served']}/{row['offered']})")
+        if row["disagg"] and row["disagg_handoffs"] < 1:
+            bad.append(f"disagg.{row['scenario']}: zero handoffs — the "
+                       "sweep is not exercising the partner prefill")
+    for k in ("colocated_large", "disagg", "disagg_compressed"):
+        if k not in by:
+            return bad + [f"disagg: missing scenario {k!r}"
+                          f"{_regen(_REGEN_SERVING)}"]
+    coloc, plain, comp = (by[k] for k in ("colocated_large", "disagg",
+                                          "disagg_compressed"))
+    if not plain.get("tokens_identical_to_colocated_large", False):
+        bad.append("disagg.disagg: output diverged from colocated decode "
+                   "— an uncompressed KV handoff must be lossless")
+    if comp["kv_transfer_bytes"] >= 0.5 * plain["kv_transfer_bytes"]:
+        bad.append(f"disagg.disagg_compressed: {comp['kv_transfer_bytes']} "
+                   f"wire bytes not < 0.5x the uncompressed "
+                   f"{plain['kv_transfer_bytes']} — int8 KV quantization "
+                   "is not actually shrinking the handoff")
+    if comp["usd_per_token"] >= coloc["usd_per_token"]:
+        bad.append(f"disagg.disagg_compressed: ${comp['usd_per_token']}"
+                   f"/token not below colocated-large "
+                   f"${coloc['usd_per_token']}/token — disaggregation "
+                   "must cut serving cost")
+    if comp["p99_ttft_s"] > coloc["p99_ttft_s"] + 1e-9:
+        bad.append(f"disagg.disagg_compressed: p99 TTFT "
+                   f"{comp['p99_ttft_s']} above colocated-large "
+                   f"{coloc['p99_ttft_s']} — the cheaper run must not "
+                   "lose first-token latency")
+    aff = {}
+    for i, row in enumerate(sweep["affinity"].get("rows", [])):
+        missing = [k for k in _AFFINITY_ROW_KEYS if k not in row]
+        if missing:
+            return bad + [f"disagg.affinity.rows[{i}]: missing {missing}"
+                          f"{_regen(_REGEN_SERVING)}"]
+        aff[row["scenario"]] = row
+        if row["runtime_errors"] != 0:
+            bad.append(f"disagg.affinity.{row['scenario']}: raised")
+        if row["served"] != row["offered"]:
+            bad.append(f"disagg.affinity.{row['scenario']}: lost requests "
+                       f"({row['served']}/{row['offered']})")
+    for k in ("affinity", "random"):
+        if k not in aff:
+            return bad + [f"disagg.affinity: missing scenario {k!r}"
+                          f"{_regen(_REGEN_SERVING)}"]
+    if aff["affinity"]["prefix_hit_rate"] <= aff["random"][
+            "prefix_hit_rate"]:
+        bad.append(f"disagg.affinity: affinity hit rate "
+                   f"{aff['affinity']['prefix_hit_rate']} not strictly "
+                   f"above random {aff['random']['prefix_hit_rate']} — "
+                   "prefix-affinity routing is not earning its keep")
+    return bad
+
+
 def check_serving(path: Path) -> list:
     """BENCH_serving.json violations (empty == pass)."""
     bad = []
@@ -667,6 +763,7 @@ def check_serving(path: Path) -> list:
     bad += _check_faults(doc)
     bad += _check_gateway(doc)
     bad += _check_spec_serving(doc)
+    bad += _check_disagg(doc)
     return bad
 
 
